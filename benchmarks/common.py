@@ -1,0 +1,51 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_jobs import PAPER_JOB_TYPES
+from repro.core import (CoExecutionGroup, InterGroupScheduler, Node,
+                        NodeAllocator, Placement, RLJob, SoloDisaggregation,
+                        SwitchCosts, from_profile, H20, H800)
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value:.6g},{derived}")
+
+
+def paper_job(type_name: str, jid: str, slo: float = 2.0) -> RLJob:
+    return from_profile(PAPER_JOB_TYPES[type_name], jid, slo=slo,
+                        duration=10 * 3600.0)
+
+
+def solo_cost_eff(job: RLJob) -> float:
+    """Iterations per $ for dedicated disaggregated pools."""
+    cost_h = (job.n_roll_gpus * H20.price_per_gpu_hour
+              + job.n_train_gpus * H800.price_per_gpu_hour)
+    iters_per_h = 3600.0 / job.t_solo
+    return iters_per_h / cost_h
+
+
+def group_cost_eff(G: CoExecutionGroup, migration=True) -> float:
+    res = G.simulate(migration=migration, switch=SwitchCosts(),
+                     work_conserving=True)
+    iters_per_h = sum(3600.0 / t for t in res.iter_time.values())
+    return iters_per_h / G.cost_per_hour()
+
+
+def verl_cost_eff(job: RLJob) -> float:
+    """Colocated: all phases on H800; rollout pays the bandwidth mismatch."""
+    slow = H20.hbm_tbps / H800.hbm_tbps
+    iter_t = job.t_roll * slow + job.t_train
+    cost_h = job.n_train_gpus * H800.price_per_gpu_hour
+    return (3600.0 / iter_t) / cost_h
+
+
+def gavel_cost_eff(G: CoExecutionGroup) -> float:
+    res = G.simulate(job_atomic=True, switch=SwitchCosts(),
+                     work_conserving=True)
+    iters_per_h = sum(3600.0 / t for t in res.iter_time.values())
+    return iters_per_h / G.cost_per_hour()

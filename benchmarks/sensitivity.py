@@ -1,0 +1,52 @@
+"""Paper Fig 14: sensitivity of the inter-group scheduler to workload type,
+SLO tightness, and max group residency; RollMux vs Random/Greedy."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (ClusterSimulator, GreedyMostIdle, InterGroupScheduler,
+                        NodeAllocator, RandomScheduler)
+from repro.core.trace import philly_like_trace
+
+
+def _run(jobs, mk):
+    return ClusterSimulator(mk(), seed=1).run(list(jobs))
+
+
+def run(n_jobs: int = 120):
+    # (a) workload characteristics
+    for wl in ("BL", "RH", "TH", "Mixed"):
+        jobs = philly_like_trace(n_jobs=n_jobs, workload=wl, seed=0)
+        r = _run(jobs, lambda: InterGroupScheduler(NodeAllocator()))
+        rd = _run(jobs, lambda: RandomScheduler(NodeAllocator()))
+        gd = _run(jobs, lambda: GreedyMostIdle(NodeAllocator()))
+        emit(f"fig14a_{wl}_rollmux_slo", r.slo_rate, "paper: 100%")
+        emit(f"fig14a_{wl}_random_slo", rd.slo_rate, "paper: 37-58%")
+        emit(f"fig14a_{wl}_greedy_slo", gd.slo_rate, "paper: 42-61%")
+        emit(f"fig14a_{wl}_random_cost_x", rd.total_cost / r.total_cost,
+             "cost vs RollMux")
+        emit(f"fig14a_{wl}_greedy_cost_x", gd.total_cost / r.total_cost,
+             "cost vs RollMux")
+
+    # (b) SLO tightness
+    for slo in (1.2, 1.5, 2.0, None):
+        label = f"slo{slo}" if slo else "sloU12"
+        jobs = philly_like_trace(n_jobs=n_jobs, slo=slo, seed=1)
+        r = _run(jobs, lambda: InterGroupScheduler(NodeAllocator()))
+        rd = _run(jobs, lambda: RandomScheduler(NodeAllocator()))
+        emit(f"fig14b_{label}_rollmux_slo", r.slo_rate, "paper: 100%")
+        emit(f"fig14b_{label}_random_slo", rd.slo_rate, "paper: 38-71%")
+
+    # (c) max group residency (host-memory bound)
+    for gs in (2, 3, 4, 5):
+        jobs = philly_like_trace(n_jobs=n_jobs, seed=2)
+        r = _run(jobs, lambda: InterGroupScheduler(NodeAllocator(),
+                                                   max_group_size=gs))
+        emit(f"fig14c_gs{gs}_rollmux_slo", r.slo_rate, "paper: 100% at all")
+        emit(f"fig14c_gs{gs}_rollmux_cost", r.total_cost,
+             "small groups already suffice (paper)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,130 @@
+"""Co-execution demo (paper Fig 1-bottom): two RL jobs time-multiplex the
+rollout and training pools under the RollMux phase-centric runtime, with
+warm-start context switching. Prints the per-pool execution timeline and the
+bubble reclamation vs running the jobs back-to-back.
+
+    PYTHONPATH=src python examples/co_execution.py [--iters 4]
+"""
+import argparse
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.phase_control import RollMuxRuntime
+from repro.data import ArithmeticTask
+from repro.launch.train import build_train_batch
+from repro.models import build_model
+from repro.rl import (SamplerConfig, arithmetic_reward, generate,
+                      group_advantages, init_train_state, make_train_step)
+from repro.sync import sync_params_between_jobs
+
+
+def make_job(rt, jid, seed, iters):
+    model = build_model("internlm2-1.8b", reduced=True)
+    key = jax.random.PRNGKey(seed)
+    task = ArithmeticTask(seed=seed)
+    sampler = SamplerConfig(max_new_tokens=4)
+    train_step = jax.jit(make_train_step(model, remat=False))
+
+    @rt.phase("rollout", name="roll",
+              init_fn=lambda: {"params": init_train_state(model, key)["params"]})
+    def roll(state, prompts, k):
+        out = generate(model, state["params"], prompts, k, sampler)
+        jax.block_until_ready(out["completions"])
+        return state, out
+
+    @rt.phase("train", name="train",
+              init_fn=lambda: init_train_state(model, key))
+    def train(state, batch):
+        state, metrics = train_step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        return state, state["params"]
+
+    def loop():
+        k = key
+        for _ in range(iters):
+            b = task.sample_batch(4)
+            prompts = jnp.asarray(np.repeat(b.prompts, 2, axis=0))
+            k, k1 = jax.random.split(k)
+            out = roll(jid, prompts, k1)
+            r = arithmetic_reward(out["completions"], out["mask"],
+                                  [a for a in b.answers for _ in range(2)])
+            tb = build_train_batch(out, group_advantages(r, 2),
+                                   b.prompts.shape[1])
+            new_params = train(jid, tb)
+            # sync phase: updated weights -> rollout actor (host cache)
+            rstate, _ = rt.cache.restore(f"{jid}/rollout")
+            rstate["params"] = sync_params_between_jobs(new_params,
+                                                        rstate["params"])
+            rt.cache.offload(f"{jid}/rollout", rstate)
+    return loop
+
+
+def render_timeline(pool, width=78):
+    """ASCII gantt of a pool's busy segments."""
+    if not pool.timeline:
+        return ""
+    t_end = max(t1 for _, _, t1 in pool.timeline)
+    line = ["."] * width
+    for who, t0, t1 in pool.timeline:
+        c = who[3]  # job index digit
+        for i in range(int(t0 / t_end * (width - 1)),
+                       max(int(t1 / t_end * (width - 1)), 1)):
+            line[i] = c
+    return "".join(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=4)
+    args = ap.parse_args()
+
+    # --- co-executed ---
+    rt = RollMuxRuntime(host_cache_gb=4.0)
+    rt.pool("rollout", 1)
+    rt.pool("train", 1)
+    loops = [make_job(rt, f"job{i}", i, args.iters) for i in range(2)]
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=l) for l in loops]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    co_wall = time.perf_counter() - t0
+
+    # --- sequential (solo) ---
+    rt2 = RollMuxRuntime(host_cache_gb=4.0)
+    rt2.pool("rollout", 1)
+    rt2.pool("train", 1)
+    t0 = time.perf_counter()
+    for i, l in enumerate([make_job(rt2, f"job{i}", i, args.iters)
+                           for i in range(2)]):
+        l()
+    seq_wall = time.perf_counter() - t0
+
+    print("\nco-execution timeline (0/1 = job id, . = dependency bubble):")
+    print(f"  rollout pool: {render_timeline(rt.pools['rollout'])}")
+    print(f"  train pool:   {render_timeline(rt.pools['train'])}")
+    for name, p in rt.pools.items():
+        busy = p.busy_time
+        total = max(t1 for _, _, t1 in p.timeline)
+        print(f"  {name:8s} utilization: {busy/total:6.1%}")
+    stats = rt.stats
+    warm = sum(s.warm_starts for s in stats.values())
+    cold = sum(s.cold_starts for s in stats.values())
+    print(f"  context switches: {cold} cold (init), {warm} warm "
+          f"(host-DRAM cache)")
+    print(f"\nwall time: co-executed {co_wall:.2f}s vs sequential "
+          f"{seq_wall:.2f}s "
+          f"(note: single-core container — real gains need two pools)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Architecture + shape registry (``--arch <id>``)."""
+from repro.configs.base import ModelConfig, get_config, list_archs, register
+from repro.configs.shapes import (
+    SHAPES, InputShape, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    shape_applicable,
+)
+
+__all__ = [
+    "ModelConfig", "get_config", "list_archs", "register",
+    "SHAPES", "InputShape", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "shape_applicable",
+]

@@ -1,0 +1,32 @@
+"""The four assigned input shapes + per-arch applicability rules."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES: dict[str, InputShape] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Spec rules: long_500k only for sub-quadratic archs; decode needs a decoder."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch — 500k dense KV decode "
+                       "has no sub-quadratic variant here (see DESIGN.md)")
+    return True, ""

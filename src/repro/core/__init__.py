@@ -1,0 +1,23 @@
+"""RollMux core: the paper's scheduling contribution."""
+from repro.core.cluster import (H20, H800, V5E, GPUS_PER_NODE, HOST_MEM_GB,
+                                AcceleratorType, Node, NodeAllocator)
+from repro.core.job import RLJob, from_profile
+from repro.core.group import (CoExecutionGroup, Placement, SimResult,
+                              SwitchCosts)
+from repro.core.inter_group import Decision, InterGroupScheduler
+from repro.core.baselines import (GavelPlus, GreedyMostIdle, RandomScheduler,
+                                  SoloDisaggregation, VeRLColocated,
+                                  offline_optimal_cost)
+from repro.core.simulator import ClusterSimulator, Report, replay_verl
+from repro.core.phase_control import PermitPool, RollMuxRuntime
+from repro.core import distributions, theory, trace
+
+__all__ = [
+    "H20", "H800", "V5E", "GPUS_PER_NODE", "HOST_MEM_GB", "AcceleratorType",
+    "Node", "NodeAllocator", "RLJob", "from_profile", "CoExecutionGroup",
+    "Placement", "SimResult", "SwitchCosts", "Decision", "InterGroupScheduler",
+    "GavelPlus", "GreedyMostIdle", "RandomScheduler", "SoloDisaggregation",
+    "VeRLColocated", "offline_optimal_cost", "ClusterSimulator", "Report",
+    "replay_verl", "PermitPool", "RollMuxRuntime", "distributions", "theory",
+    "trace",
+]

@@ -1,0 +1,144 @@
+"""Phase-centric control model (paper §5.1): ``@rollmux.phase`` decorator,
+run permits, warm-start state management, and runtime hooks.
+
+The execution plane is in-process: resource pools are permit queues, job
+states live in a HostStateCache between phases (device_put back = warm
+start), and the intra-group FIFO queues drive the round-robin schedule.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.train.checkpoints import HostStateCache
+
+
+class PermitPool:
+    """A resource pool (e.g. 'rollout', 'train') with FIFO run permits —
+    the per-worker queue of §5.1."""
+
+    def __init__(self, name: str, capacity: int = 1):
+        self.name = name
+        self.capacity = capacity
+        self._cv = threading.Condition()
+        self._queue: deque[int] = deque()
+        self._active = 0
+        self._ticket = 0
+        self.busy_time = 0.0
+        self.timeline: list[tuple[str, float, float]] = []  # (who, t0, t1)
+
+    def acquire(self) -> int:
+        with self._cv:
+            self._ticket += 1
+            my = self._ticket
+            self._queue.append(my)
+            while self._queue[0] != my or self._active >= self.capacity:
+                self._cv.wait()
+            self._queue.popleft()
+            self._active += 1
+            return my
+
+    def release(self) -> None:
+        with self._cv:
+            self._active -= 1
+            self._cv.notify_all()
+
+
+@dataclass
+class PhaseStats:
+    runs: int = 0
+    warm_starts: int = 0
+    cold_starts: int = 0
+    switch_time: float = 0.0
+    run_time: float = 0.0
+    wait_time: float = 0.0
+
+
+class RollMuxRuntime:
+    """In-process execution plane shared by the co-executing jobs."""
+
+    def __init__(self, host_cache_gb: float = 64.0):
+        self.pools: dict[str, PermitPool] = {}
+        self.cache = HostStateCache(int(host_cache_gb * 2**30))
+        self.stats: dict[str, PhaseStats] = {}
+        self.hooks: list[Callable[[str, str, str], None]] = []
+        self._t0 = time.perf_counter()
+
+    def pool(self, name: str, capacity: int = 1) -> PermitPool:
+        if name not in self.pools:
+            self.pools[name] = PermitPool(name, capacity)
+        return self.pools[name]
+
+    def runtime_hook(self, fn: Callable) -> Callable:
+        """@rollmux.runtime_hook — called as fn(job_id, phase, event)."""
+        self.hooks.append(fn)
+        return fn
+
+    def _emit(self, job_id: str, phase_name: str, event: str) -> None:
+        for h in self.hooks:
+            h(job_id, phase_name, event)
+
+    def phase(self, pool: str, name: Optional[str] = None, *,
+              init_fn: Optional[Callable] = None):
+        """Decorator: wraps a phase function into a schedulable entity.
+
+        The wrapped function signature becomes fn(job_id, *args) and receives
+        the job's restored state as first arg: fn(state, *args) -> (state, out).
+        State is offloaded to host DRAM after the phase (lightweight
+        suspension: the compiled executables — the control plane — stay
+        alive, only data-plane arrays move).
+        """
+        def deco(fn):
+            pname = name or fn.__name__
+
+            @functools.wraps(fn)
+            def wrapped(job_id: str, *args, **kwargs):
+                key = f"{job_id}/{pool}"
+                st = self.stats.setdefault(f"{job_id}:{pname}", PhaseStats())
+                t_req = time.perf_counter()
+                p = self.pool(pool)
+                p.acquire()                       # run permit (intra-group FIFO)
+                try:
+                    t_start = time.perf_counter()
+                    st.wait_time += t_start - t_req
+                    self._emit(job_id, pname, "start")
+                    state, sw = self.cache.restore(key)
+                    if state is None:             # cold start
+                        t0 = time.perf_counter()
+                        if init_fn is None:
+                            raise RuntimeError(
+                                f"no cached state and no init_fn for {key}")
+                        state = init_fn()
+                        sw = time.perf_counter() - t0
+                        st.cold_starts += 1
+                    else:
+                        st.warm_starts += 1
+                    st.switch_time += sw
+                    state, out = fn(state, *args, **kwargs)
+                    jax.block_until_ready(jax.tree.leaves(state)[:1])
+                    self.cache.offload(key, state)  # suspend: data plane out
+                    t_end = time.perf_counter()
+                    st.run_time += t_end - t_start
+                    st.runs += 1
+                    p.timeline.append((f"{job_id}:{pname}", t_start - self._t0,
+                                       t_end - self._t0))
+                    p.busy_time += t_end - t_start
+                    self._emit(job_id, pname, "end")
+                    return out
+                finally:
+                    p.release()
+
+            wrapped.pool_name = pool
+            wrapped.phase_name = pname
+            return wrapped
+        return deco
+
+    def seed_state(self, job_id: str, pool: str, state) -> None:
+        """Pre-populate the actor cache (Init phase of the dependency graph)."""
+        self.cache.offload(f"{job_id}/{pool}", state)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import ArithmeticTask, Batch, TaskConfig
+from repro.data import tokenizer
+
+__all__ = ["ArithmeticTask", "Batch", "TaskConfig", "tokenizer"]

@@ -1,0 +1,101 @@
+"""One-token GQA decode attention Pallas kernel — the memory-bandwidth-bound
+rollout hotspot (the phase RollMux offloads to the cheap pool).
+
+The KV cache streams through VMEM in (bk, D) blocks along the sequential nk
+grid axis; all G query heads of a KV group are processed together so each KV
+block is read from HBM exactly once (arithmetic intensity ~ 2G flops/byte —
+bandwidth-bound, which is precisely the paper's motivation for H20-class
+hardware). The live cache length arrives via scalar prefetch (SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                scale: float, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, length, *, block_k: int = 512,
+                     interpret: bool = True):
+    """q: (B,H,D); k/v: (B,S,Hkv,D); length: scalar int32 (live prefix).
+
+    Returns (B,H,D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    bk = min(block_k, S)
+    nk = -(-S // bk)
+    pad_k = nk * bk - S
+    qt = q.reshape(B, Hkv, G, D)
+    kt = jnp.moveaxis(k, 2, 1)                        # (B,Hkv,S,D)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, len_ref: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, len_ref: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(length, qt, kt, vt)
+    return out.reshape(B, H, D)

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` (default in this CPU container) runs the kernel bodies in
+the Pallas interpreter for validation; on real TPUs pass interpret=False.
+Model code opts in via ``use_kernels``; the dry-run uses the pure-JAX paths
+so roofline numbers come from XLA HLO.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.mamba2_scan import mamba2_scan
+
+ON_TPU = jax.default_backend() == "tpu"
+DEFAULT_INTERPRET = not ON_TPU
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None,
+                       block_q=128, block_k=128):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=DEFAULT_INTERPRET)
+
+
+def decode_attention_op(q, k, v, length, *, block_k=512):
+    return decode_attention(q, k, v, length, block_k=block_k,
+                            interpret=DEFAULT_INTERPRET)
+
+
+def rwkv6_scan_op(r, k, v, log_w, u, *, chunk=64):
+    return rwkv6_scan(r, k, v, log_w, u, chunk=chunk,
+                      interpret=DEFAULT_INTERPRET)
+
+
+def mamba2_scan_op(r, k, v, log_w, *, chunk=64):
+    return mamba2_scan(r, k, v, log_w, chunk=chunk,
+                       interpret=DEFAULT_INTERPRET)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        scale=None):
+    """q: (B,S,H,D); k/v: (B,S,Hkv,D), H % Hkv == 0. Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        pos = jnp.arange(S)
+        m = pos[None, :] <= pos[:, None]
+        if window is not None:
+            m &= (pos[:, None] - pos[None, :]) < window
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, scale=None):
+    """One-token GQA decode. q: (B,H,D); k/v: (B,S,Hkv,D); length: int32.
+
+    Attends over cache positions [0, length). Returns (B,H,D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, log_w, u):
+    """RWKV6 WKV recurrence oracle. Shapes: (B,S,H,D); u: (H,D).
+    Returns (y (B,S,H,D), state (B,H,D,D))."""
+    from repro.models.linear_scan import naive_decay_attention
+    return naive_decay_attention(r, k, v, log_w, u)
+
+
+def mamba2_scan_ref(r, k, v, log_w):
+    """Mamba2 SSD oracle: scalar/head decay, decay applied in output.
+    r/k: (B,S,H,N); v: (B,S,H,hd); log_w: (B,S,H,1)."""
+    from repro.models.linear_scan import naive_decay_attention
+    lw = jnp.broadcast_to(log_w, r.shape)
+    return naive_decay_attention(r, k, v, lw, None, decay_in_output=True)

@@ -1,0 +1,6 @@
+"""Launch layer: production meshes, multi-pod dry-run, roofline analysis,
+train/serve drivers. NOTE: import repro.launch.dryrun only as __main__ —
+it forces a 512-device view of the host platform."""
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

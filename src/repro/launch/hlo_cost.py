@@ -1,0 +1,308 @@
+"""Trip-count-aware cost walk over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+which undercounts scan-over-layers models by ~L x microbatches. This walker
+parses the post-optimization HLO, builds the computation call graph, and
+multiplies while bodies by their trip count (largest integer constant in the
+loop condition). Costs:
+
+  * flops        — dot ops: 2 * prod(result) * prod(contracting dims)
+  * bytes        — per top-level/fused instruction: result + operands
+                   (fusions are NOT expanded: their internals never touch HBM)
+  * collectives  — per-kind bytes with loop multipliers (an all-gather inside
+                   the layer scan runs L times)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|\S+))\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w.\-]+),?\s*body=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "iota"}
+COLLECTIVES = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(shape_str)]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_ops: float = 0.0
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in self.coll:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_ops += other.coll_ops * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _parse(text: str):
+    comps: dict[str, list[dict]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        m = _INSTR.match(line)
+        if m and cur is not None:
+            name, shape_str, opcode, rest = m.groups()
+            comps[cur].append({
+                "name": name, "shape": shape_str, "op": opcode, "rest": rest,
+            })
+    return comps, entry
+
+
+def _dot_flops(instr, symtab) -> float:
+    res_elems = 0
+    for _, dims in _shape_dims(instr["shape"]):
+        n = 1
+        for d in dims:
+            n *= d
+        res_elems += n
+    m = _CONTRACT.search(instr["rest"])
+    # first operand = lhs
+    ops = _OPERAND.findall(instr["rest"].split(")", 1)[0])
+    lhs_shape = symtab.get(ops[0]) if ops else None
+    k = 1
+    if m and lhs_shape:
+        dims = _shape_dims(lhs_shape)
+        if dims:
+            _, ld = dims[0]
+            for ci in (int(x) for x in m.group(1).split(",") if x):
+                if ci < len(ld):
+                    k *= ld[ci]
+    return 2.0 * res_elems * k
+
+
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _instr_bytes(ins, symtab, comps) -> float:
+    """HBM bytes touched by one top-level instruction.
+
+    Slicing-aware: a (fused) dynamic-slice reads only the slice, and a
+    dynamic-update-slice writes only the update region — counting full
+    operand shapes would overstate KV-cache decode byte traffic ~100x.
+    """
+    op = ins["op"]
+    if op in _SLICING_OPS:
+        b = _shape_bytes(ins["shape"]) * 2          # read slice + write out
+        return b
+    if op == "dynamic-update-slice":
+        ops_ = _OPERAND.findall(ins["rest"])
+        upd = _shape_bytes(symtab.get(ops_[1], "")) if len(ops_) > 1 else 0
+        return 2 * upd                               # read update + write region
+    if op == "fusion":
+        m = _CALLS.search(ins["rest"])
+        inner = comps.get(m.group(1), []) if m else []
+        if inner:
+            inner_syms = {i["name"]: i["shape"] for i in inner}
+            # consumer map over the fused computation
+            consumers: dict[str, list] = {i["name"]: [] for i in inner}
+            for ii in inner:
+                if ii["op"] == "parameter":
+                    continue
+                for opnd in _OPERAND.findall(ii["rest"]):
+                    if opnd in consumers:
+                        consumers[opnd].append(ii)
+
+            def accessed(name, depth=0):
+                """Bytes of `name` actually read: slices read their result;
+                elementwise converts/bitcasts are lazy — look through them."""
+                cons = consumers.get(name, [])
+                if not cons or depth > 4:
+                    return _shape_bytes(inner_syms.get(name, ""))
+                total = 0
+                for c in cons:
+                    if c["op"] in _SLICING_OPS:
+                        total += _shape_bytes(c["shape"])
+                    elif c["op"] in ("convert", "bitcast", "copy", "negate"):
+                        total += min(accessed(c["name"], depth + 1),
+                                     _shape_bytes(inner_syms.get(name, "")))
+                    else:
+                        return _shape_bytes(inner_syms.get(name, ""))
+                return min(total, _shape_bytes(inner_syms.get(name, "")) * 2)
+
+            params = [i for i in inner if i["op"] == "parameter"]
+            b = 0.0
+            for p in params:
+                b += accessed(p["name"])
+            root = inner[-1]
+            if root["op"] == "dynamic-update-slice":
+                ops_ = _OPERAND.findall(root["rest"])
+                b += _shape_bytes(inner_syms.get(ops_[1], "")) if len(ops_) > 1 \
+                    else _shape_bytes(root["shape"])
+            else:
+                b += _shape_bytes(ins["shape"])
+            return b
+    b = _shape_bytes(ins["shape"])
+    for opnd in _OPERAND.findall(ins["rest"]):
+        if opnd in symtab:
+            b += _shape_bytes(symtab[opnd])
+    return b
+
+
+def _trip_count(comp_instrs) -> int:
+    best = 1
+    for ins in comp_instrs:
+        if ins["op"] == "constant":
+            m = re.match(r"(\d+)\)", ins["rest"])
+            if m:
+                best = max(best, int(m.group(1)))
+        for c in _CONST_INT.findall(ins["rest"]):
+            best = max(best, int(c))
+    return best
+
+
+def analyze_hlo(text: str) -> Costs:
+    comps, entry = _parse(text)
+    memo: dict[str, Costs] = {}
+
+    def comp_cost(cname: str) -> Costs:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Costs()  # break cycles defensively
+        total = Costs()
+        instrs = comps.get(cname, [])
+        symtab = {i["name"]: i["shape"] for i in instrs}
+        for ins in instrs:
+            op = ins["op"]
+            if op in FREE_OPS:
+                continue
+            c = Costs()
+            if op == "while":
+                m = _WHILE_ATTRS.search(ins["rest"])
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    mt = _TRIP_CFG.search(ins["rest"])
+                    trips = (int(mt.group(1)) if mt
+                             else _trip_count(comps.get(cond, [])))
+                    c.add(comp_cost(body), trips)
+                    c.add(comp_cost(cond), trips)
+            elif op == "conditional":
+                branches = _OPERAND.findall(ins["rest"])
+                sub = [comp_cost(b) for b in branches if b in comps]
+                if sub:
+                    best = max(sub, key=lambda s: s.flops + s.bytes)
+                    c.add(best)
+            elif op == "call":
+                m = _CALLS.search(ins["rest"]) or _WHILE_ATTRS.search(ins["rest"])
+                tgt = None
+                m2 = re.search(r"to_apply=%?([\w.\-]+)", ins["rest"])
+                if m2:
+                    tgt = m2.group(1)
+                if tgt and tgt in comps:
+                    c.add(comp_cost(tgt))
+            else:
+                if op == "dot":
+                    c.flops += _dot_flops(ins, symtab)
+                if op == "fusion":
+                    # a fusion may wrap a dot: account inner dots' flops once
+                    m = _CALLS.search(ins["rest"])
+                    if m and m.group(1) in comps:
+                        inner = comps[m.group(1)]
+                        st = {i["name"]: i["shape"] for i in inner}
+                        for ii in inner:
+                            if ii["op"] == "dot":
+                                c.flops += _dot_flops(ii, st)
+                if op in COLLECTIVES or (op.endswith("-start")
+                                         and op[:-6] in COLLECTIVES):
+                    kind = op[:-6] if op.endswith("-start") else op
+                    c.coll[kind] += _shape_bytes(ins["shape"]) \
+                        * COLLECTIVES[kind]
+                    c.coll_ops += 1
+                # bytes: slicing-aware per-instruction HBM traffic
+                c.bytes += _instr_bytes(ins, symtab, comps)
+            total.add(c)
+        memo[cname] = total
+        return total
+
+    return comp_cost(entry) if entry else Costs()
+
+
+def top_contributors(text: str, k: int = 25):
+    """Per-instruction (bytes x loop-multiplier) attribution — the 'profile'
+    the §Perf hypothesis loop reads (no real-TPU timings exist here)."""
+    comps, entry = _parse(text)
+    if not entry:
+        return []
+    # propagate loop multipliers down the call graph
+    mult: dict[str, float] = {entry: 1.0}
+    orderq = [entry]
+    while orderq:
+        cname = orderq.pop()
+        m = mult[cname]
+        for ins in comps.get(cname, []):
+            if ins["op"] == "while":
+                mm = _WHILE_ATTRS.search(ins["rest"])
+                if mm:
+                    mt = _TRIP_CFG.search(ins["rest"])
+                    trips = (int(mt.group(1)) if mt
+                             else _trip_count(comps.get(mm.group(1), [])))
+                    for sub in mm.groups():
+                        if sub in comps:
+                            mult[sub] = mult.get(sub, 0.0) + m * trips
+                            orderq.append(sub)
+    rows = []
+    for cname, m in mult.items():
+        instrs = comps.get(cname, [])
+        symtab = {i["name"]: i["shape"] for i in instrs}
+        for ins in instrs:
+            if ins["op"] in FREE_OPS or ins["op"] in ("while",):
+                continue
+            b = _instr_bytes(ins, symtab, comps)
+            fl = _dot_flops(ins, symtab) if ins["op"] == "dot" else 0.0
+            coll = _shape_bytes(ins["shape"]) if ins["op"] in COLLECTIVES else 0.0
+            rows.append({"bytes": b * m, "flops": fl * m, "coll": coll * m,
+                         "mult": m, "op": ins["op"], "comp": cname,
+                         "name": ins["name"], "shape": ins["shape"][:90]})
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]

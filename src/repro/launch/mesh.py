@@ -1,0 +1,18 @@
+"""Production mesh builders. Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) over ("data","model") = 256 chips.
+    Multi-pod: (2,16,16) over ("pod","data","model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh for CPU smoke tests (axes exist, sizes 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

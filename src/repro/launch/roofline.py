@@ -1,0 +1,139 @@
+"""Roofline-term extraction from compiled XLA artifacts (deliverable g).
+
+Hardware constants (TPU v5e-class target, per task spec):
+  197 TFLOP/s bf16 / chip, 819 GB/s HBM / chip, ~50 GB/s/link ICI.
+
+``cost_analysis`` reports the post-SPMD per-device program, so FLOPs and
+bytes are per-chip; the collective term uses per-chip collective bytes over
+per-chip link bandwidth (equivalent to global_bytes / (chips x link_bw)).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+PEAK_FLOPS = 197.0e12
+HBM_BW = 819.0e9
+ICI_BW = 50.0e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_FACTOR = {
+    "all-gather": 1.0,          # every chip receives ~result bytes
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-chip bytes moved by each collective kind in the compiled module."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVE_FACTOR}
+    out["_ops"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str) * _COLLECTIVE_FACTOR[kind]
+        out["_ops"] += 1
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float             # per chip
+    hlo_bytes: float             # per chip
+    collective_bytes_per_chip: float
+    collective_ops: int
+    model_flops: float           # global useful FLOPs (6ND / 2ND)
+    model_flops_per_chip: float
+    useful_flop_ratio: float     # model / hlo (per chip)
+    bottleneck: str
+    step_time_s: float           # max of the three terms
+    mfu: float                   # model_flops_per_chip / (step_time * peak)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, *, n_chips: int, model_flops: float) -> RooflineTerms:
+    """Roofline terms from the compiled per-device SPMD program.
+
+    FLOPs/bytes/collectives come from the trip-count-aware HLO walk
+    (launch.hlo_cost) because XLA's cost_analysis counts lax.scan bodies
+    once — a ~L x microbatches undercount for scan-over-layers models.
+    """
+    from repro.launch.hlo_cost import analyze_hlo
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    flops, byts = cost.flops, cost.bytes
+    coll_bytes = cost.collective_bytes
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    mf_chip = model_flops / n_chips
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes_per_chip=coll_bytes,
+        collective_ops=int(cost.coll_ops),
+        model_flops=model_flops, model_flops_per_chip=mf_chip,
+        useful_flop_ratio=mf_chip / flops if flops else 0.0,
+        bottleneck=bottleneck, step_time_s=step,
+        mfu=mf_chip / (step * PEAK_FLOPS) if step else 0.0)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful-FLOP estimate: 6·N_active·D for training, 2·N_active·D for
+    inference forward (D = tokens processed this step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def memory_report(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = getattr(ma, k, None)
+    args = out.get("argument_size_in_bytes") or 0
+    alias = out.get("alias_size_in_bytes") or 0
+    temp = out.get("temp_size_in_bytes") or 0
+    outb = out.get("output_size_in_bytes") or 0
+    out["resident_bytes"] = args + temp + max(outb - alias, 0)
+    return out

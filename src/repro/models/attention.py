@@ -1,0 +1,322 @@
+"""Attention variants: GQA (w/ sliding window, M-RoPE, bias), MLA (DeepSeek-V2).
+
+Two compute paths:
+  * direct   — materialized scores, used for short sequences / smoke tests;
+  * blockwise — pure-JAX flash attention (online softmax over KV blocks inside
+    a scan over Q blocks) bounding activation memory for 32k+ prefill. The
+    Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-tiled
+    version of the same algorithm.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_mrope, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1.0e30
+DIRECT_MAX_KV = 4096  # direct path threshold
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (shared by GQA / MLA / cross-attention)
+# ---------------------------------------------------------------------------
+def _direct_attention(q, k, v, q_pos, k_pos, *, causal, window, scale):
+    """q: (B,Sq,Hkv,G,D) k/v: (B,Sk,Hkv,Dk/Dv) -> (B,Sq,Hkv,G,Dv)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            m &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+
+
+def _blockwise_attention(q, k, v, q_pos, k_pos, *, causal, window, scale,
+                         block_q=1024, block_k=1024):
+    """Flash-style online-softmax attention; same signature as direct path."""
+    B, Sq, Hkv, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    # pad to block multiples
+    q = jnp.pad(q, ((0, 0), (0, nq * bq - Sq), (0, 0), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, (0, nq * bq - Sq), constant_values=-1)
+    k_ = jnp.pad(k, ((0, 0), (0, nk * bk - Sk), (0, 0), (0, 0)))
+    v_ = jnp.pad(v, ((0, 0), (0, nk * bk - Sk), (0, 0), (0, 0)))
+    kp = jnp.pad(k_pos, (0, nk * bk - Sk), constant_values=2**30)
+    qb = q.reshape(B, nq, bq, Hkv, G, D)
+    qpb = qp.reshape(nq, bq)
+    kb = k_.reshape(B, nk, bk, Hkv, -1)
+    vb = v_.reshape(B, nk, bk, Hkv, Dv)
+    kpb = kp.reshape(nk, bk)
+
+    def q_step(_, qi):
+        qblk, qpos = qb[:, qi], qpb[qi]
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kb[:, ki]
+                           ).astype(jnp.float32) * scale
+            msk = kpb[ki][None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= (qpos[:, None] - kpb[ki][None, :]) < window
+            if not causal:
+                msk = (kpb[ki] < Sk)[None, :] & jnp.ones_like(msk)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb[:, ki].astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(v.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, jnp.arange(nq))      # (nq,B,Hkv,G,bq,Dv)
+    out = jnp.moveaxis(ob, 0, 3).reshape(B, Hkv, G, nq * bq, Dv)
+    return jnp.moveaxis(out, 3, 1)[:, :Sq]                  # (B,Sq,Hkv,G,Dv)
+
+
+def multi_head_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                         scale=None, force_blockwise: Optional[bool] = None):
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,·) with H % Hkv == 0. Returns (B,Sq,H,Dv)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    use_blockwise = (k.shape[1] > DIRECT_MAX_KV if force_blockwise is None
+                     else force_blockwise)
+    fn = _blockwise_attention if use_blockwise else _direct_attention
+    out = fn(qg, k, v, q_pos, k_pos, causal=causal, window=window, scale=scale)
+    return out.reshape(B, Sq, H, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (H, hd), dt),
+        "wk": dense_init(ks[1], d, (Hkv, hd), dt),
+        "wv": dense_init(ks[2], d, (Hkv, hd), dt),
+        "wo": dense_init(ks[3], H * hd, (d,), dt).reshape(H, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    return p
+
+
+def gqa_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        s |= {"bq": ("heads", "head_dim"), "bk": ("kv_heads", "head_dim"),
+              "bv": ("kv_heads", "head_dim")}
+    return s
+
+
+def gqa_project_qkv(p, cfg: ModelConfig, x, positions, *,
+                    rope_theta: Optional[float] = None,
+                    mrope_positions: Optional[jax.Array] = None):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    rope_off = not isinstance(theta, jax.Array) and theta <= 0
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, theta)
+        k = apply_mrope(k, mrope_positions, theta)
+    elif positions is not None and not rope_off:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def gqa_apply_full(p, cfg: ModelConfig, x, positions, *, window=None,
+                   rope_theta=None, mrope_positions=None, causal=True):
+    """Full-sequence self-attention. x: (B,S,d) -> (B,S,d)."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions, rope_theta=rope_theta,
+                              mrope_positions=mrope_positions)
+    pos = positions if positions is not None else jnp.arange(x.shape[1])
+    qpos = pos[0] if pos.ndim == 2 else pos
+    out = multi_head_attention(q, k, v, qpos, qpos, causal=causal, window=window)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def gqa_apply_cross(p, cfg: ModelConfig, x, enc_k, enc_v):
+    """Cross-attention against precomputed encoder K/V: (B,Ssrc,Hkv,hd)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    Ssrc = enc_k.shape[1]
+    qpos = jnp.arange(x.shape[1])
+    kpos = jnp.arange(Ssrc)
+    out = multi_head_attention(q, enc_k, enc_v, qpos, kpos, causal=False)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def gqa_decode_step(p, cfg: ModelConfig, x, k_cache, v_cache, index, *,
+                    window=None, rope_theta=None, mrope_positions=None,
+                    ring: bool = False):
+    """One-token decode. x: (B,1,d); k/v_cache: (B,S,Hkv,hd); index: scalar.
+
+    Returns (out (B,1,d), k_cache', v_cache'). ``ring=True`` treats the cache
+    as a ring buffer of size window (long_500k sliding-window decode).
+    """
+    B, _, _ = x.shape
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(p, cfg, x, pos, rope_theta=rope_theta,
+                                      mrope_positions=mrope_positions)
+    S = k_cache.shape[1]
+    slot = (index % S) if ring else index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    H = q.shape[2]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, -1)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    kpos = jnp.arange(S)
+    if ring:
+        # entry at slot p holds absolute position: reconstruct validity
+        abs_pos = jnp.where(kpos <= slot, index - slot + kpos,
+                            index - slot - S + kpos)
+        valid = (abs_pos >= 0) & (abs_pos <= index)
+        if window is not None:
+            valid &= (index - abs_pos) < window
+    else:
+        valid = kpos <= index
+        if window is not None:
+            valid &= (index - kpos) < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H, -1)
+    return (jnp.einsum("bshe,hed->bsd", out, p["wo"]).astype(x.dtype),
+            k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2): low-rank KV compression, absorbed decode
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, H = cfg.d_model, cfg.num_heads
+    hd, vd = cfg.resolved_head_dim, cfg.resolved_v_head_dim
+    r, qr, rp = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, (qr,), dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "wq_b": dense_init(ks[1], qr, (H, hd + rp), dt),
+        "wkv_a": dense_init(ks[2], d, (r + rp,), dt),
+        "kv_norm": jnp.zeros((r,), dt),
+        "wkv_b_k": dense_init(ks[3], r, (H, hd), dt),
+        "wkv_b_v": dense_init(ks[4], r, (H, vd), dt),
+        "wo": dense_init(ks[5], H * vd, (d,), dt).reshape(H, vd, d),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    return {
+        "wq_a": ("embed", "kv_lora"),
+        "q_norm": ("kv_lora",),
+        "wq_b": ("kv_lora", "heads", "head_dim"),
+        "wkv_a": ("embed", "kv_lora"),
+        "kv_norm": ("kv_lora",),
+        "wkv_b_k": ("kv_lora", "heads", "head_dim"),
+        "wkv_b_v": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _mla_q(p, cfg: ModelConfig, x, positions):
+    hd, rp = cfg.resolved_head_dim, cfg.qk_rope_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", q, p["wq_b"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_compress(p, cfg: ModelConfig, x, positions):
+    r = cfg.kv_lora_rank
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = kv[..., :r], kv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope   # (B,S,r), (B,S,rp)
+
+
+def mla_apply_full(p, cfg: ModelConfig, x, positions):
+    """Training/prefill path: expand compressed KV to per-head K/V."""
+    hd = cfg.resolved_head_dim
+    rp = cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_compress(p, cfg, x, positions)
+    c_n = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_n, p["wkv_b_k"])
+    v = jnp.einsum("bsr,rhe->bshe", c_n, p["wkv_b_v"])
+    H = k_nope.shape[2]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_nope.shape[:3], rp))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    pos = positions[0] if positions.ndim == 2 else positions
+    out = multi_head_attention(q, k, v, pos, pos, causal=True,
+                               scale=(hd + rp) ** -0.5)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def mla_decode_step(p, cfg: ModelConfig, x, ckv_cache, krope_cache, index):
+    """Absorbed one-token decode: attention runs in the kv_lora space.
+
+    ckv_cache: (B,S,r) raw compressed KV; krope_cache: (B,S,rp).
+    """
+    B = x.shape[0]
+    hd, rp = cfg.resolved_head_dim, cfg.qk_rope_head_dim
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)                  # (B,1,H,·)
+    c_new, kr_new = _mla_kv_compress(p, cfg, x, pos)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_new.astype(ckv_cache.dtype), index, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, kr_new.astype(krope_cache.dtype), index, axis=1)
+    c_n = rms_norm(ckv_cache, p["kv_norm"], cfg.norm_eps)    # (B,S,r)
+    # absorb wkv_b_k into q: q_c (B,H,r)
+    q_c = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], p["wkv_b_k"])
+    s = jnp.einsum("bhr,bsr->bhs", q_c, c_n).astype(jnp.float32)
+    s += jnp.einsum("bhe,bse->bhs", q_rope[:, 0], krope_cache).astype(jnp.float32)
+    s *= (hd + rp) ** -0.5
+    valid = jnp.arange(ckv_cache.shape[1]) <= index
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", w.astype(c_n.dtype), c_n)
+    o = jnp.einsum("bhr,rhe->bhe", o_c, p["wkv_b_v"])        # (B,H,vd)
+    return (jnp.einsum("bhe,hed->bd", o, p["wo"]).astype(x.dtype)[:, None],
+            ckv_cache, krope_cache)

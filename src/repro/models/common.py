@@ -1,0 +1,180 @@
+"""Shared model building blocks: norms, MLPs, embeddings, RoPE/M-RoPE, masks.
+
+Every ``*_init`` has a parallel ``*_specs`` returning the same tree with
+logical-axis tuples as leaves (consumed by models.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Axes = tuple  # tree leaves in specs trees are tuples of logical axis names
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    # fan-in scaled truncated normal, MaxText-style
+    stddev = scale / math.sqrt(max(shape[0], 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: tuple[int, ...], dtype) -> jax.Array:
+    return truncated_normal_init(key, (in_dim, *out_shape), 1.0, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """Per-head group norm over the last dim; x: (..., H, D), w: (H, D)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, cfg.d_model, (d_ff,), dt),
+        "wi_up": dense_init(k2, cfg.d_model, (d_ff,), dt),
+        "wo": dense_init(k3, d_ff, (cfg.d_model,), dt),
+    }
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    return {
+        "wi_gate": ("embed", "ffn"),
+        "wi_up": ("embed", "ffn"),
+        "wo": ("ffn", "embed"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["wi_gate"])
+    u = x @ p["wi_up"]
+    return (g * u) @ p["wo"]
+
+
+def gelu_mlp_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, cfg.d_model, (cfg.d_ff,), dt),
+        "bi": jnp.zeros((cfg.d_ff,), dt),
+        "wo": dense_init(k2, cfg.d_ff, (cfg.d_model,), dt),
+        "bo": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def gelu_mlp_specs(cfg: ModelConfig) -> dict:
+    return {"wi": ("embed", "ffn"), "bi": ("ffn",),
+            "wo": ("ffn", "embed"), "bo": ("embed",)}
+
+
+def gelu_mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.gelu(x @ p["wi"] + p["bi"], approximate=True)) @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32. theta may be traced."""
+    if not isinstance(theta, jax.Array) and theta <= 0:
+        return x  # learned-positions model (whisper): no rotary
+    freqs = rope_freqs(x.shape[-1], theta)                 # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, D/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# M-RoPE: rotary channels split into (temporal, height, width) sections —
+# proportions follow qwen2-vl's (16, 24, 24) of head_dim/2 = 64.
+def mrope_sections(half: int) -> tuple[int, int, int]:
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, ...] | None = None) -> jax.Array:
+    """x: (B, S, H, D); positions3: (3, B, S) — (t, h, w) position ids."""
+    half = x.shape[-1] // 2
+    sections = sections or mrope_sections(half)
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    # pick which of t/h/w drives each rotary channel
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)           # (half,)
+    pos = positions3.astype(jnp.float32)                    # (3, B, S)
+    pos_per_chan = jnp.take(pos, sec_id, axis=0)            # (half, B, S)
+    ang = jnp.moveaxis(pos_per_chan, 0, -1) * freqs         # (B, S, half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_mrope_positions(batch: int, seq: int, num_frontend: int) -> jax.Array:
+    """Stub M-RoPE ids: image patches get a sqrt grid, text gets linear t."""
+    side = max(int(math.sqrt(max(num_frontend, 1))), 1)
+    t = jnp.arange(seq)
+    is_img = t < num_frontend
+    h = jnp.where(is_img, (t // side), t)
+    w = jnp.where(is_img, (t % side), t)
+    tt = jnp.where(is_img, 0, t - num_frontend + 1)
+    pos = jnp.stack([tt, h, w])                             # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Masks (built lazily from iota; never materialized at (S, S) for big S —
+# blockwise attention receives span bounds instead)
+# ---------------------------------------------------------------------------
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                window: Optional[int] = None) -> jax.Array:
+    """Boolean mask (…, Q, K): k <= q and (q - k) < window when sliding."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m

@@ -1,0 +1,105 @@
+"""Decode caches per architecture family (plain dict pytrees + logical specs).
+
+Cache sequence dims carry the ``cache_seq`` logical axis → sharded over the
+``model`` mesh axis (context parallelism for decode); batch over ``data``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _attn_cache(cfg: ModelConfig, L: int, batch: int, S: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (L, batch, S, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _attn_cache_spec():
+    ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               ring: bool = False) -> dict:
+    """Build a zeroed decode cache. ``ring=True`` allocates sliding-window
+    ring buffers (long_500k) instead of full-length context.
+
+    DRYRUN_CACHE_F32=1 stores the cache in fp32 — a §Perf experiment: the
+    CPU backend emulates bf16 dots by converting operands, and XLA hoists
+    those converts into the decode loop carry, maintaining dual f32+bf16
+    cache copies (full rewrite per layer). fp32 storage removes the dual
+    copy on this backend; on TPU (native bf16 MXU) it is unnecessary.
+    """
+    import os
+    dt = (jnp.float32 if os.environ.get("DRYRUN_CACHE_F32")
+          else jnp.dtype(cfg.dtype))
+    idx = {"index": jnp.zeros((), jnp.int32)}
+    S = min(max_len, cfg.sliding_window) if (ring and cfg.sliding_window) else max_len
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            c = {
+                "ckv": jnp.zeros((cfg.num_layers, batch, S, cfg.kv_lora_rank), dt),
+                "krope": jnp.zeros((cfg.num_layers, batch, S, cfg.qk_rope_head_dim), dt),
+            }
+        else:
+            c = _attn_cache(cfg, cfg.num_layers, batch, S, dt)
+        return c | idx
+
+    if cfg.family == "ssm":     # rwkv6
+        H, hd = cfg.num_heads, cfg.resolved_head_dim
+        return {
+            "att_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "ffn_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "wkv": jnp.zeros((cfg.num_layers, batch, H, hd, hd), jnp.float32),
+        } | idx
+
+    if cfg.family == "hybrid":  # zamba2
+        inner = cfg.ssm_expand * cfg.d_model
+        nh = inner // cfg.ssm_head_dim
+        conv_dim = inner + 2 * cfg.ssm_state_dim
+        n_attn = (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+        Sa = min(S, 4096) if ring else S   # shared-attn window at 500k
+        attn = _attn_cache(cfg, n_attn, batch, Sa, dt)
+        return {
+            "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_dim), dt),
+            "ssm": jnp.zeros((cfg.num_layers, batch, nh, cfg.ssm_state_dim,
+                              cfg.ssm_head_dim), jnp.float32),
+            "attn_k": attn["k"], "attn_v": attn["v"],
+        } | idx
+
+    if cfg.family == "audio":   # whisper enc-dec
+        c = _attn_cache(cfg, cfg.num_layers, batch, S, dt)
+        hd = cfg.resolved_head_dim
+        cross = (cfg.num_layers, batch, cfg.max_source_len, cfg.num_kv_heads, hd)
+        return c | {
+            "cross_k": jnp.zeros(cross, dt),
+            "cross_v": jnp.zeros(cross, dt),
+        } | idx
+
+    raise ValueError(f"no cache for family {cfg.family!r}")
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    idx = {"index": ()}
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            return {"ckv": ("layers", "batch", "cache_seq", "kv_lora"),
+                    "krope": ("layers", "batch", "cache_seq", None)} | idx
+        return _attn_cache_spec() | idx
+    if cfg.family == "ssm":
+        return {"att_x": ("layers", "batch", "embed_act"),
+                "ffn_x": ("layers", "batch", "embed_act"),
+                "wkv": ("layers", "batch", "heads_act", None, None)} | idx
+    if cfg.family == "hybrid":
+        return {"conv": ("layers", "batch", None, "ssm_inner"),
+                "ssm": ("layers", "batch", "heads_act", None, None),
+                "attn_k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                "attn_v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim")} | idx
+    if cfg.family == "audio":
+        return _attn_cache_spec() | {
+            "cross_k": ("layers", "batch", "source", "kv_heads", "head_dim"),
+            "cross_v": ("layers", "batch", "source", "kv_heads", "head_dim")} | idx
+    raise ValueError(cfg.family)

@@ -1,0 +1,136 @@
+"""Chunked linear attention with per-channel decay — shared by Mamba2 (SSD)
+and RWKV6 (Finch).
+
+Recurrence (per batch b, head h; state S in R^{Dk x Dv}):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T ( d_t ∘ S_{t-1} + diag(u_t) k_t v_t^T )
+
+with log w_t <= 0 and
+  * Mamba2:  d_t = w_t (decay applies to output too), u_t = 1, w scalar/head;
+  * RWKV6:   d_t = 1 (output reads the *un-decayed* previous state),
+             u_t = learned bonus, w per-channel data-dependent.
+
+The chunked algorithm only ever exponentiates non-positive numbers
+(exp(cl_t - cl_s) with s <= t), so it is numerically safe in fp32 without
+the secondary-chunking tricks GPU kernels need. The Pallas kernel in
+``repro.kernels.rwkv6_scan`` implements the same math with VMEM-tiled chunks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_decay_attention(r, k, v, log_w, u=None, decay_in_output=False):
+    """O(S·Dk·Dv) reference via lax.scan over time — the oracle.
+
+    r, k, log_w: (B, S, H, Dk); v: (B, S, H, Dv); u: (H, Dk) or None.
+    Returns y: (B, S, H, Dv), final_state: (B, H, Dk, Dv).
+    """
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, log_w = (x.astype(f32) for x in (r, k, v, log_w))
+
+    def step(state, xs):
+        rt, kt, vt, lwt = xs                      # (B,H,Dk) ... (B,H,Dv)
+        wt = jnp.exp(lwt)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,Dk,Dv)
+        if decay_in_output:
+            read = wt[..., None] * state + kv
+        elif u is not None:
+            read = state + u[None, :, :, None].astype(f32) * kv
+        else:
+            read = state + kv
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, read)
+        state = wt[..., None] * state + kv
+        return state, yt
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, log_w))
+    s0 = jnp.zeros((B, H, Dk, Dv), f32)
+    state, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), state
+
+
+@partial(jax.jit, static_argnames=("chunk", "decay_in_output"))
+def chunked_decay_attention(r, k, v, log_w, u=None, *, chunk: int = 64,
+                            decay_in_output: bool = False,
+                            initial_state=None):
+    """Chunk-parallel form: O(S·c·Dk + S·Dk·Dv/c) work per step.
+
+    Shapes as in ``naive_decay_attention``; log_w broadcastable over Dk
+    (Mamba2 passes (B,S,H,1)). Returns (y, final_state).
+    """
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+    f32 = jnp.float32
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (S + pad) // c
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(B, n, c, H, -1), 1, 0).astype(f32)     # (n,B,c,H,·)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, log_w))
+    lwc = jnp.broadcast_to(lwc, rc.shape)
+    cl = jnp.cumsum(lwc, axis=2)                             # (n,B,c,H,Dk)
+    # e_t: decay exponent applied to S_0 when *reading* at position t
+    e = cl if decay_in_output else cl - lwc                  # cl_{t-1}
+
+    tri = jnp.tril(jnp.ones((c, c), bool), 0 if decay_in_output else -1)
+
+    def chunk_step(state, xs):
+        rcb, kcb, vcb, clb, eb, lwb = xs                     # (B,c,H,·)
+        # inter-chunk: read S_0 with decay exp(e_t)
+        r_sc = rcb * jnp.exp(eb)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", r_sc, state)
+        # intra-chunk: A[t,s] = sum_d r_t k_s exp(e_t - cl_s), s < t (or <= t)
+        # exponents are <= 0 for the kept (s <= t) entries; clamp so the
+        # masked upper triangle can't produce inf (0 * inf = NaN in grads)
+        expo = jnp.exp(jnp.minimum(eb[:, :, None] - clb[:, None], 0.0))
+        A = jnp.einsum("bthk,bshk,btshk->bhts", rcb, kcb, expo)
+        A = jnp.where(tri[None, None], A, 0.0)
+        if not decay_in_output:
+            rb = rcb * u[None, None].astype(f32) if u is not None else rcb
+            diag = jnp.einsum("bthk,bthk->bht", rb, kcb)   # (B,H,c)
+            A = A + diag[..., None] * jnp.eye(c, dtype=f32)
+        y_intra = jnp.einsum("bhts,bshv->bthv", A, vcb)
+        # state update: S_end = diag(exp(cl_c)) S_0 + sum_s exp(cl_c - cl_s) k_s v_s
+        clc = clb[:, -1]                                     # (B,H,Dk)
+        k_sc = kcb * jnp.exp(clc[:, None] - clb)
+        s_delta = jnp.einsum("bshk,bshv->bhkv", k_sc, vcb)
+        state = jnp.exp(clc)[..., None] * state + s_delta
+        return state, y_inter + y_intra
+
+    s0 = (jnp.zeros((B, H, Dk, Dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+    state, yc = jax.lax.scan(chunk_step, s0, (rc, kc, vc, cl, e, lwc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, n * c, H, Dv)[:, :S]
+    return y.astype(v.dtype), state
+
+
+def decay_attention_decode_step(state, r, k, v, log_w, u=None,
+                                decay_in_output=False):
+    """Single-token decode. state: (B,H,Dk,Dv); r/k/log_w: (B,H,Dk); v: (B,H,Dv)."""
+    f32 = jnp.float32
+    rt, kt, vt = r.astype(f32), k.astype(f32), v.astype(f32)
+    wt = jnp.exp(jnp.broadcast_to(log_w.astype(f32), rt.shape))
+    kv = kt[..., :, None] * vt[..., None, :]
+    if decay_in_output:
+        read = wt[..., None] * state + kv
+    elif u is not None:
+        read = state + u[None, :, :, None].astype(f32) * kv
+    else:
+        read = state + kv
+    y = jnp.einsum("bhk,bhkv->bhv", rt, read)
+    new_state = wt[..., None] * state + kv
+    return y.astype(v.dtype), new_state

@@ -1,0 +1,124 @@
+"""Mamba2 (SSD) block — used by zamba2 trunk; decode keeps O(1) state."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+from repro.models.linear_scan import (
+    chunked_decay_attention, decay_attention_decode_step)
+from repro.models.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_expand * cfg.d_model
+    nh = inner // cfg.ssm_head_dim
+    return inner, nh, cfg.ssm_state_dim
+
+
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    inner, nh, N = _dims(cfg)
+    conv_dim = inner + 2 * N
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, (2 * inner + 2 * N + nh,), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.zeros((inner,), dt),
+        "out_proj": dense_init(ks[2], inner, (cfg.d_model,), dt),
+    }
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_w": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(p, cfg, proj):
+    inner, nh, N = _dims(cfg)
+    z = proj[..., :inner]
+    xBC = proj[..., inner:2 * inner + 2 * N]
+    dt = proj[..., 2 * inner + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d, width W. xBC: (B,S,C); conv_state: (B,W-1,C)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def _ssm_inputs(p, cfg, x_conv, dt_raw):
+    inner, nh, N = _dims(cfg)
+    B_, S = x_conv.shape[0], x_conv.shape[1]
+    x_in = x_conv[..., :inner].reshape(B_, S, nh, cfg.ssm_head_dim)
+    Bmat = x_conv[..., inner:inner + N][:, :, None, :]           # (B,S,1,N)
+    Cmat = x_conv[..., inner + N:][:, :, None, :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    log_w = (-jnp.exp(p["A_log"]) * dt)[..., None]               # (B,S,nh,1)
+    r = jnp.broadcast_to(Cmat, (B_, S, nh, N))
+    k = jnp.broadcast_to(Bmat, (B_, S, nh, N))
+    v = x_in * dt[..., None]
+    return x_in, r, k, v, log_w
+
+
+def mamba2_apply_full(p, cfg: ModelConfig, x, *, initial_state=None):
+    """x: (B,S,d) -> (B,S,d). Returns (out, (conv_state, ssm_state))."""
+    inner, nh, N = _dims(cfg)
+    proj = x @ p["in_proj"]
+    proj = constrain(proj, ("batch", "seq", "ffn_act"))
+    z, xBC, dt_raw = _split_proj(p, cfg, proj)
+    conv_in_state = None if initial_state is None else initial_state[0]
+    x_conv, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in_state)
+    x_in, r, k, v, log_w = _ssm_inputs(p, cfg, x_conv, dt_raw)
+    ssm_in_state = None if initial_state is None else initial_state[1]
+    y, ssm_state = chunked_decay_attention(
+        r, k, v, log_w, decay_in_output=True, initial_state=ssm_in_state)
+    y = y + p["D"][None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, ssm_state)
+
+
+def mamba2_decode_step(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """x: (B,1,d); conv_state: (B,W-1,C); ssm_state: (B,nh,N,hd) fp32."""
+    inner, nh, N = _dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(p, cfg, proj)
+    x_conv, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x_in, r, k, v, log_w = _ssm_inputs(p, cfg, x_conv, dt_raw)
+    y, ssm_state = decay_attention_decode_step(
+        ssm_state, r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+        decay_in_output=True)
+    y = y[:, None] + p["D"][None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssm_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    inner, nh, N = _dims(cfg)
+    conv_dim = inner + 2 * N
+    return (jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+            jnp.zeros((batch, nh, N, cfg.ssm_head_dim), jnp.float32))

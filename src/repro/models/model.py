@@ -1,0 +1,90 @@
+"""Model facade: one object per architecture exposing init / forward /
+prefill / decode plus abstract ``input_specs`` for the multi-pod dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.configs.shapes import InputShape
+from repro.models import kvcache
+from repro.models.stacks import stack_forward, stack_init, stack_specs
+from repro.models.stacks_infer import stack_decode_step, stack_prefill
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        return stack_init(key, self.cfg)
+
+    def init_abstract(self) -> dict:
+        return jax.eval_shape(lambda: stack_init(jax.random.PRNGKey(0), self.cfg))
+
+    def logical_specs(self) -> dict:
+        return stack_specs(self.cfg)
+
+    # ---- compute -----------------------------------------------------------
+    def forward(self, params, tokens, *, frontend=None, remat: bool = False):
+        return stack_forward(params, self.cfg, tokens, frontend=frontend,
+                             remat=remat)
+
+    def init_cache(self, batch: int, max_len: int, *, ring: bool = False):
+        return kvcache.init_cache(self.cfg, batch, max_len, ring=ring)
+
+    def cache_logical_specs(self) -> dict:
+        return kvcache.cache_specs(self.cfg)
+
+    def prefill(self, params, tokens, cache, *, frontend=None):
+        return stack_prefill(params, self.cfg, tokens, cache, frontend=frontend)
+
+    def decode_step(self, params, token, cache, *, ring: bool = False):
+        return stack_decode_step(params, self.cfg, token, cache, ring=ring)
+
+    # ---- abstract inputs for lowering ---------------------------------------
+    def input_specs(self, shape: InputShape) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+        train  -> {tokens, labels, loss_mask, advantages [, frontend/source]}
+        prefill-> {tokens [, frontend/source]}
+        decode -> {token, cache}
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+        front = {}
+        if cfg.frontend == "vision":
+            front["frontend"] = sds((B, cfg.num_frontend_tokens, cfg.d_model), f32)
+        elif cfg.frontend == "audio":
+            front["frontend"] = sds((B, cfg.max_source_len, cfg.d_model), f32)
+
+        if shape.kind == "train":
+            return {
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+                "loss_mask": sds((B, S), f32),
+                "advantages": sds((B, S), f32),
+            } | front
+        if shape.kind == "prefill":
+            return {"tokens": sds((B, S), i32)} | front
+        if shape.kind == "decode":
+            ring = shape.name == "long_500k" and bool(cfg.sliding_window)
+            cache = jax.eval_shape(
+                lambda: self.init_cache(B, S, ring=ring))
+            return {"token": sds((B, 1), i32), "cache": cache}
+        raise ValueError(shape.kind)
+
+
+def build_model(arch: str | ModelConfig, *, reduced: bool = False) -> Model:
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    if reduced:
+        import dataclasses
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    return Model(cfg)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded, sort-based
+dispatch (no (T, E, C) one-hot — scales to 160-expert DeepSeek-V2).
+
+Expert weights are stacked (E, d, f) and sharded over the ``model`` mesh axis
+(expert parallelism); dispatch/combine become all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, mlp_apply, mlp_init, mlp_specs
+from repro.models.sharding import constrain
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, (E,), jnp.float32),
+        "wi_gate": jax.vmap(lambda k: dense_init(k, d, (f,), dt))(
+            jax.random.split(ks[1], E)),
+        "wi_up": jax.vmap(lambda k: dense_init(k, d, (f,), dt))(
+            jax.random.split(ks[2], E)),
+        "wo": jax.vmap(lambda k: dense_init(k, f, (d,), dt))(
+            jax.random.split(ks[3], E)),
+    }
+    if cfg.num_shared_experts:
+        import dataclasses
+        shared_cfg = dataclasses.replace(
+            cfg, d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+        p["shared"] = mlp_init(ks[4], shared_cfg)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    # expert weights: experts over model, embed FSDP over data. (§Perf A2
+    # tried replicating the embed dim to kill the per-layer partial-sum
+    # all-reduce of expert hiddens — collective only dropped 8% while
+    # per-chip MoE FLOPs grew 2.6x because the capacity dim was unsharded:
+    # net regression, reverted. The right next lever is sharding the
+    # capacity dim over data inside a shard_map dispatch.)
+    s = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "ffn"),
+        "wi_up": ("experts", "embed", "ffn"),
+        "wo": ("experts", "ffn", "embed"),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_specs(cfg)
+    return s
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              capacity: Optional[int] = None):
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar fp32)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(density * mean_prob) * cfg.router_aux_loss
+
+    if capacity is None:
+        capacity = max(int(T * k / E * cfg.capacity_factor), 4)
+    C = min(capacity, T)
+
+    # sort-based dispatch: position of each (token, slot) within its expert
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * k) - first
+    keep = pos < C
+    dest = jnp.where(keep, se * C + pos, E * C)              # E*C = drop slot
+    tok = order // k
+
+    # keep the (T*k, d) dispatch tensors data-sharded (token-parallel) so the
+    # reshard into the expert-sharded buffer lowers as a2a/AG, not a masked
+    # full-buffer all-reduce (the dominant collective in the MoE baseline)
+    gathered = constrain(xf[tok], ("moe_tokens", None))
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(gathered)
+    eb = buf[:E * C].reshape(E, C, d)
+    eb = constrain(eb, ("experts_act", None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["wi_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, p["wi_up"])
+    h = constrain(h, ("experts_act", None, "ffn_act"))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_pad = jnp.concatenate(
+        [out_e.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0)
+
+    # combine in the model dtype (bf16): halves dispatch-path bytes; the
+    # fp32 router probabilities only weight the combine, stay fp32 in aux
+    gb = gates.reshape(-1)[order].astype(x.dtype)
+    contrib = constrain(out_pad[dest] * gb[:, None], ("moe_tokens", None))
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xf)
+    return y.reshape(B, S, d), aux

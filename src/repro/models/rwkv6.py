@@ -1,0 +1,143 @@
+"""RWKV6 (Finch) block: data-dependent token-shift + per-channel decay WKV.
+
+Token-mix state for decode is one vector per layer (+ the wkv matrix state);
+channel-mix keeps its own shift vector. [arXiv:2404.05892]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, group_norm_heads
+from repro.models.linear_scan import (
+    chunked_decay_attention, decay_attention_decode_step)
+
+MIX_RANK = 32
+DECAY_RANK = 64
+N_MIX = 5  # r, k, v, w, g
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    assert H * hd == cfg.d_model
+    return H, hd
+
+
+def rwkv6_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # token mix
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((N_MIX, d), dt),
+        "tm_w1": dense_init(ks[0], d, (N_MIX * MIX_RANK,), dt),
+        "tm_w2": (jax.random.normal(ks[1], (N_MIX, MIX_RANK, d), jnp.float32)
+                  * 0.02).astype(dt),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w1": dense_init(ks[2], d, (DECAY_RANK,), dt),
+        "w2": (jax.random.normal(ks[3], (DECAY_RANK, d), jnp.float32)
+               * 0.02).astype(dt),
+        "wr": dense_init(ks[4], d, (d,), dt),
+        "wk": dense_init(ks[5], d, (d,), dt),
+        "wv": dense_init(ks[6], d, (d,), dt),
+        "wg": dense_init(ks[7], d, (d,), dt),
+        "wo": dense_init(ks[8], d, (d,), dt),
+        "u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x": jnp.ones((H, hd), dt),
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), dt),
+        "cm_mu_r": jnp.zeros((d,), dt),
+        "cm_wk": dense_init(ks[9], d, (cfg.d_ff,), dt),
+        "cm_wv": dense_init(jax.random.fold_in(key, 99), cfg.d_ff, (d,), dt),
+        "cm_wr": dense_init(jax.random.fold_in(key, 98), d, (d,), dt),
+    }
+
+
+def rwkv6_specs(cfg: ModelConfig) -> dict:
+    return {
+        "mu_x": ("embed",), "mu": (None, "embed"),
+        "tm_w1": ("embed", None), "tm_w2": (None, None, "embed"),
+        "w0": ("embed",), "w1": ("embed", None), "w2": (None, "embed"),
+        "wr": ("embed", "ssm_inner"), "wk": ("embed", "ssm_inner"),
+        "wv": ("embed", "ssm_inner"), "wg": ("embed", "ssm_inner"),
+        "wo": ("ssm_inner", "embed"),
+        "u": ("heads", "head_dim"), "ln_x": ("heads", "head_dim"),
+        "cm_mu_k": ("embed",), "cm_mu_r": ("embed",),
+        "cm_wk": ("embed", "ffn"), "cm_wv": ("ffn", "embed"),
+        "cm_wr": ("embed", "ssm_inner"),
+    }
+
+
+def _shift(x, last=None):
+    """xx[t] = x[t-1]; first position comes from ``last`` (decode state)."""
+    first = (jnp.zeros_like(x[:, :1]) if last is None else last[:, None])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _token_mix_inputs(p, cfg, x, xx):
+    dx = xx - x
+    base = x + dx * p["mu_x"]
+    z = jnp.tanh(base @ p["tm_w1"]).reshape(*x.shape[:2], N_MIX, MIX_RANK)
+    mixes = jnp.einsum("bsfr,frd->bsfd", z, p["tm_w2"]) + p["mu"]
+    xi = x[:, :, None, :] + dx[:, :, None, :] * mixes        # (B,S,5,d)
+    x_r, x_k, x_v, x_w, x_g = (xi[:, :, i] for i in range(N_MIX))
+    H, hd = _dims(cfg)
+    B_, S = x.shape[:2]
+    r = (x_r @ p["wr"]).reshape(B_, S, H, hd)
+    k = (x_k @ p["wk"]).reshape(B_, S, H, hd)
+    v = (x_v @ p["wv"]).reshape(B_, S, H, hd)
+    g = jax.nn.silu(x_g @ p["wg"])
+    lw = p["w0"] + (jnp.tanh(x_w @ p["w1"]) @ p["w2"]).astype(jnp.float32)
+    log_w = -jnp.exp(lw).reshape(B_, S, H, hd)               # <= 0
+    return r, k, v, g, log_w
+
+
+def _token_mix_out(p, cfg, y, g, x_shape, dtype):
+    H, hd = _dims(cfg)
+    y = group_norm_heads(y, p["ln_x"], 64e-5).reshape(*x_shape[:2], cfg.d_model)
+    return (y.astype(dtype) * g) @ p["wo"]
+
+
+def rwkv6_time_mix_full(p, cfg: ModelConfig, x, *, initial=None):
+    """initial: (last_x (B,d), wkv_state (B,H,hd,hd)) or None."""
+    last_x = None if initial is None else initial[0]
+    xx = _shift(x, last_x)
+    r, k, v, g, log_w = _token_mix_inputs(p, cfg, x, xx)
+    st0 = None if initial is None else initial[1]
+    y, state = chunked_decay_attention(r, k, v, log_w, p["u"],
+                                       initial_state=st0)
+    out = _token_mix_out(p, cfg, y, g, x.shape, x.dtype)
+    return out, (x[:, -1], state)
+
+
+def rwkv6_time_mix_step(p, cfg: ModelConfig, x, last_x, state):
+    """x: (B,1,d). Returns (out, new_last_x, new_state)."""
+    xx = last_x[:, None]
+    r, k, v, g, log_w = _token_mix_inputs(p, cfg, x, xx)
+    y, state = decay_attention_decode_step(
+        state, r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], p["u"])
+    out = _token_mix_out(p, cfg, y[:, None], g, x.shape, x.dtype)
+    return out, x[:, 0], state
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x, last_x=None):
+    """Works for full-seq (last_x None or (B,d)) and single step alike."""
+    xx = _shift(x, last_x)
+    xk = x + (xx - x) * p["cm_mu_k"]
+    xr = x + (xx - x) * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"]), x[:, -1]
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    H, hd = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "att_x": jnp.zeros((batch, cfg.d_model), dt),
+        "ffn_x": jnp.zeros((batch, cfg.d_model), dt),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Every parameter / activation dimension carries a *logical* axis name; a rule
+table maps logical axes to mesh axes. A mapping is dropped (dimension left
+replicated) when the dimension size is not divisible by the mesh-axis size —
+this is what lets one rule table serve 10 heterogeneous architectures
+(28-head GQA, 4 kv heads, 51865-token vocabs, ...) on a fixed (data, model)
+mesh. The fallbacks are themselves hillclimb levers (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical->mesh rules. Order matters: first divisible candidate wins.
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # activations
+    "batch":      (("pod", "data"), ("data",)),
+    "seq":        ((),),
+    "cache_seq":  (("model",), ()),      # decode KV/context sharded over model
+    "embed_act":  ((),),
+    "heads_act":  (("model",), ()),
+    "ffn_act":    (("model",), ()),
+    "vocab_act":  (("model",), ()),
+    "experts_act": (("model",), ()),
+    "moe_tokens": (("data",), ()),   # (T*k,) flat dispatch assignments
+    "frontend":   ((),),
+    # params (FSDP over data on the embed/row dim, tensor over model)
+    "embed":      (("data",), ()),
+    "heads":      (("model",), ()),
+    "kv_heads":   (("model",), ()),
+    "head_dim":   ((),),
+    "ffn":        (("model",), ()),
+    "vocab":      (("model",), ()),
+    "experts":    (("model",), ()),
+    "experts_embed": ((),),   # replicated: avoid partial-sum ARs per layer
+    "experts_ffn": ((),),
+    "kv_lora":    ((),),
+    "ssm_inner":  (("model",), ()),
+    "ssm_state":  ((),),
+    "conv":       ((),),
+    "layers":     ((),),                  # stacked scan dim — never sharded
+    "source":     ((),),                  # enc-dec source positions
+}
+
+
+# Named rule profiles — the §Perf hillclimb levers. Selected via
+# ``dryrun --rules <name>``; "baseline" is the paper-faithful default.
+RULE_PROFILES: dict[str, dict] = {
+    "baseline": {},
+    # §Perf C: decode KV cache sharded on head_dim instead of sequence —
+    # dynamic-update-slice becomes shard-local (in-place) instead of a
+    # full-cache select rewrite under GSPMD.
+    "cache_hd": {
+        "cache_seq": ((),),
+        "head_dim": (("model",), ()),
+        "kv_lora": (("model",), ()),
+    },
+    # §Perf A: pure expert-parallel MoE + fully-sharded gradients: batch
+    # stays on data, experts on model, and params FSDP over both axes so
+    # gradient reductions become reduce-scatters of shards.
+    "fsdp2d": {
+        "embed": (("data",), ()),
+        "ffn": (("model",), ()),
+        "vocab": (("model",), ()),
+    },
+    # §Perf B: sequence parallelism for long prefill — activations sharded
+    # over seq on the model axis. Rescues archs whose head counts don't
+    # divide the model axis (qwen2.5's 40 heads -> attention otherwise
+    # replicated 16x on the model axis).
+    "seqpar": {
+        "seq": (("model",), ()),
+    },
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict[str, tuple[tuple[str, ...], ...]] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **ov) -> "ShardingRules":
+        r = dict(self.rules)
+        for k, v in ov.items():
+            r[k] = v
+        return ShardingRules(r)
+
+    def resolve(self, logical: tuple[str | None, ...],
+                shape: tuple[int, ...], mesh: Mesh) -> P:
+        """Map logical axes for a concrete shape to a PartitionSpec.
+
+        Drops any candidate whose mesh-axis product does not divide the
+        dimension, and never assigns one mesh axis to two dims.
+        """
+        assert len(logical) == len(shape), (logical, shape)
+        used: set[str] = set()
+        out: list = []
+        for name, size in zip(logical, shape):
+            if name is None:
+                out.append(None)
+                continue
+            cands = self.rules.get(name)
+            if cands is None:
+                raise KeyError(f"no sharding rule for logical axis {name!r}")
+            chosen: tuple[str, ...] = ()
+            for cand in cands:
+                cand = tuple(a for a in cand if a in mesh.shape)
+                if not cand or any(a in used for a in cand):
+                    continue
+                prod = 1
+                for a in cand:
+                    prod *= mesh.shape[a]
+                if size % prod == 0:
+                    chosen = cand
+                    break
+            used.update(chosen)
+            out.append(chosen if len(chosen) > 1 else (chosen[0] if chosen else None))
+        return P(*out)
+
+
+def logical_to_sharding(tree_logical, tree_shapes, mesh: Mesh,
+                        rules: ShardingRules) -> object:
+    """Map a pytree of logical-axis tuples (+ parallel shapes) to NamedShardings."""
+    return jax.tree.map(
+        lambda log, shp: NamedSharding(mesh, rules.resolve(log, shp, mesh)),
+        tree_logical, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def spec_tree_to_pspecs(tree_logical, tree_shapes, mesh: Mesh,
+                        rules: ShardingRules) -> object:
+    return jax.tree.map(
+        lambda log, shp: rules.resolve(log, shp.shape if hasattr(shp, "shape") else shp, mesh),
+        tree_logical, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints — active only inside the distributed
+# drivers; model code calls ``constrain`` unconditionally and it is a no-op
+# in single-device smoke tests.
+# ---------------------------------------------------------------------------
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, rules: ShardingRules):
+    tok = _ACTIVE.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def constrain(x: jax.Array, logical: tuple[str | None, ...]) -> jax.Array:
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.resolve(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,354 @@
+"""Layer-stack assembly for every architecture family.
+
+All stacks scan over layers with stacked params (small HLO, fast compile);
+non-uniform structure is handled inside the scan body:
+  * gemma3   — per-layer (theta, window) arrays select local vs global attn;
+  * zamba2   — a single *shared* attention block applied every k-th layer
+               via lax.cond (weights reused, as in the paper);
+  * deepseek — leading dense layer(s) scanned separately from MoE layers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as mb
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rw
+from repro.models.common import (
+    dense_init, embed_init, gelu_mlp_apply, gelu_mlp_init, gelu_mlp_specs,
+    layer_norm, mlp_apply, mlp_init, mlp_specs, rms_norm,
+    default_mrope_positions)
+from repro.models.sharding import constrain
+
+NO_WINDOW = jnp.int32(2 ** 30)
+
+
+# ---------------------------------------------------------------------------
+# norms (whisper = LayerNorm w/ bias, everyone else = RMSNorm)
+# ---------------------------------------------------------------------------
+def _norm_init(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {"w": jnp.ones((cfg.d_model,), dt), "b": jnp.zeros((cfg.d_model,), dt)}
+    return jnp.zeros((cfg.d_model,), dt)
+
+
+def _norm_spec(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return {"w": ("embed",), "b": ("embed",)}
+    return ("embed",)
+
+
+def _norm(p, x, cfg: ModelConfig):
+    if cfg.family == "audio":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p, cfg.norm_eps)
+
+
+def _sinusoid(seq: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq) + offset
+    inv = jnp.exp(-jnp.arange(0, d, 2) / d * math.log(10000.0))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _lift_specs(spec, n_extra_logical="layers"):
+    """Prepend the 'layers' logical axis to every leaf of a specs tree."""
+    return jax.tree.map(
+        lambda t: (n_extra_logical, *t), spec,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / specs
+# ---------------------------------------------------------------------------
+def _dense_layer_init(key, cfg: ModelConfig, *, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg)}
+    p["attn"] = (attn.mla_init(k1, cfg) if cfg.attention == "mla"
+                 else attn.gqa_init(k1, cfg))
+    if use_moe:
+        p["moe"] = moe_lib.moe_init(k2, cfg)
+    elif cfg.family == "audio":
+        p["mlp"] = gelu_mlp_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def _dense_layer_specs(cfg: ModelConfig, *, use_moe: bool):
+    s = {"ln1": _norm_spec(cfg), "ln2": _norm_spec(cfg)}
+    s["attn"] = (attn.mla_specs(cfg) if cfg.attention == "mla"
+                 else attn.gqa_specs(cfg))
+    if use_moe:
+        s["moe"] = moe_lib.moe_specs(cfg)
+    elif cfg.family == "audio":
+        s["mlp"] = gelu_mlp_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def _layer_theta_window(cfg: ModelConfig, *, ring: bool = False):
+    """Per-layer (rope_theta, window) arrays — gemma3's 5:1 local:global."""
+    L = cfg.num_layers
+    if cfg.local_global_ratio and cfg.sliding_window:
+        r = cfg.local_global_ratio
+        is_global = (jnp.arange(L) % (r + 1)) == r
+        theta = jnp.where(is_global, cfg.rope_theta, 1.0e4)
+        if ring:  # long_500k carve: global layers also windowed
+            window = jnp.full((L,), cfg.sliding_window, jnp.int32)
+        else:
+            window = jnp.where(is_global, NO_WINDOW, cfg.sliding_window)
+    else:
+        theta = jnp.full((L,), cfg.rope_theta, jnp.float32)
+        w = cfg.sliding_window if cfg.sliding_window else 2 ** 30
+        window = jnp.full((L,), w, jnp.int32)
+    return theta.astype(jnp.float32), window
+
+
+# ---------------------------------------------------------------------------
+# top-level init / specs
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+               "final_norm": _norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, (cfg.vocab_size,), dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "audio"):
+        n_moe = cfg.num_layers - cfg.first_dense_layers if cfg.is_moe else 0
+        n_dense = cfg.num_layers - n_moe
+        if n_dense:
+            p["dense_layers"] = _stacked(
+                lambda k: _dense_layer_init(k, cfg, use_moe=False), keys[2], n_dense)
+        if n_moe:
+            p["layers"] = _stacked(
+                lambda k: _dense_layer_init(k, cfg, use_moe=True), keys[3], n_moe)
+        elif not cfg.is_moe:
+            p["layers"] = p.pop("dense_layers")
+        if fam == "audio":
+            p["encoder"] = {
+                "layers": _stacked(
+                    lambda k: _dense_layer_init(k, cfg, use_moe=False),
+                    keys[4], cfg.encoder_layers),
+                "final_norm": _norm_init(cfg),
+            }
+            p["cross"] = _stacked(
+                lambda k: {"ln": _norm_init(cfg),
+                           "attn": attn.gqa_init(k, cfg)},
+                keys[5], cfg.num_layers)
+    elif fam == "ssm":
+        p["layers"] = _stacked(
+            lambda k: {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg),
+                       "mix": rw.rwkv6_init(k, cfg)}, keys[2], cfg.num_layers)
+    elif fam == "hybrid":
+        p["layers"] = _stacked(
+            lambda k: {"norm": _norm_init(cfg), "mamba": mb.mamba2_init(k, cfg)},
+            keys[2], cfg.num_layers)
+        p["shared_attn"] = {
+            "ln1": _norm_init(cfg), "attn": attn.gqa_init(keys[3], cfg),
+            "ln2": _norm_init(cfg), "mlp": mlp_init(keys[4], cfg),
+        }
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def stack_specs(cfg: ModelConfig) -> dict:
+    s: dict = {"embed": ("vocab", "embed"), "final_norm": _norm_spec(cfg)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ("embed", "vocab")
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "audio"):
+        dense_spec = _lift_specs(_dense_layer_specs(cfg, use_moe=False))
+        if cfg.is_moe:
+            if cfg.first_dense_layers:
+                s["dense_layers"] = dense_spec
+            s["layers"] = _lift_specs(_dense_layer_specs(cfg, use_moe=True))
+        else:
+            s["layers"] = dense_spec
+        if fam == "audio":
+            s["encoder"] = {"layers": dense_spec, "final_norm": _norm_spec(cfg)}
+            s["cross"] = _lift_specs({"ln": _norm_spec(cfg),
+                                      "attn": attn.gqa_specs(cfg)})
+    elif fam == "ssm":
+        s["layers"] = _lift_specs({"ln1": _norm_spec(cfg), "ln2": _norm_spec(cfg),
+                                   "mix": rw.rwkv6_specs(cfg)})
+    elif fam == "hybrid":
+        s["layers"] = _lift_specs({"norm": _norm_spec(cfg),
+                                   "mamba": mb.mamba2_specs(cfg)})
+        s["shared_attn"] = {"ln1": _norm_spec(cfg), "attn": attn.gqa_specs(cfg),
+                            "ln2": _norm_spec(cfg), "mlp": mlp_specs(cfg)}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+def _embed_tokens(p, cfg: ModelConfig, tokens, frontend=None):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.family == "dense" and cfg.local_global_ratio:  # gemma3
+        x = x * math.sqrt(cfg.d_model)
+    if frontend is not None and cfg.family == "vlm":
+        F = frontend.shape[1]
+        pad = jnp.zeros((x.shape[0], x.shape[1] - F, x.shape[2]), x.dtype)
+        fe = jnp.concatenate([frontend.astype(x.dtype), pad], axis=1)
+        sel = (jnp.arange(x.shape[1]) < F)[None, :, None]
+        x = jnp.where(sel, fe, x)
+    return constrain(x, ("batch", "seq", "embed_act"))
+
+
+def _unembed(p, cfg: ModelConfig, x):
+    x = _norm(p["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    else:
+        logits = x @ p["lm_head"]
+    return constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab_act"))
+
+
+def _maybe_ckpt(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+# ---------------------------------------------------------------------------
+# forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+def stack_forward(p, cfg: ModelConfig, tokens, *, frontend=None,
+                  remat: bool = False):
+    """tokens: (B,S) int32 -> (logits (B,S,V) fp32, aux scalar)."""
+    B, S = tokens.shape
+    x = _embed_tokens(p, cfg, tokens, frontend)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    mrope_pos = (default_mrope_positions(B, S, cfg.num_frontend_tokens)
+                 if cfg.mrope else None)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        theta_l, window_l = _layer_theta_window(cfg)
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, theta, window = xs
+            h = _norm(lp["ln1"], x, cfg)
+            if cfg.attention == "mla":
+                a = attn.mla_apply_full(lp["attn"], cfg, h, positions)
+            else:
+                a = attn.gqa_apply_full(lp["attn"], cfg, h, positions,
+                                        window=window, rope_theta=theta,
+                                        mrope_positions=mrope_pos)
+            x = x + a
+            h = _norm(lp["ln2"], x, cfg)
+            if "moe" in lp:
+                f, al = moe_lib.moe_apply(lp["moe"], cfg, h)
+                aux = aux + al
+            else:
+                f = mlp_apply(lp["mlp"], h)
+            return (x + f, aux), None
+
+        body = _maybe_ckpt(body, remat)
+        aux = jnp.zeros((), jnp.float32)
+        n_moe = cfg.num_layers - cfg.first_dense_layers if cfg.is_moe else 0
+        n_dense = cfg.num_layers - n_moe
+        if cfg.is_moe and cfg.first_dense_layers:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, aux),
+                (p["dense_layers"], theta_l[:n_dense], window_l[:n_dense]))
+            (x, aux), _ = jax.lax.scan(
+                body, (x, aux),
+                (p["layers"], theta_l[n_dense:], window_l[n_dense:]))
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, aux),
+                                       (p["layers"], theta_l, window_l))
+        return _unembed(p, cfg, x), aux
+
+    if fam == "ssm":
+        def body(x, lp):
+            h = _norm(lp["ln1"], x, cfg)
+            o, _ = rw.rwkv6_time_mix_full(lp["mix"], cfg, h)
+            x = x + o
+            h = _norm(lp["ln2"], x, cfg)
+            o, _ = rw.rwkv6_channel_mix(lp["mix"], cfg, h)
+            return x + o, None
+        x, _ = jax.lax.scan(_maybe_ckpt(body, remat), x, p["layers"])
+        return _unembed(p, cfg, x), jnp.zeros((), jnp.float32)
+
+    if fam == "hybrid":
+        shared = p["shared_attn"]
+        every = cfg.hybrid_attn_every
+
+        def shared_block(x):
+            h = _norm(shared["ln1"], x, cfg)
+            a = attn.gqa_apply_full(shared["attn"], cfg, h, positions)
+            x = x + a
+            h = _norm(shared["ln2"], x, cfg)
+            return x + mlp_apply(shared["mlp"], h)
+
+        def body(x, xs):
+            lp, idx = xs
+            h = _norm(lp["norm"], x, cfg)
+            m, _ = mb.mamba2_apply_full(lp["mamba"], cfg, h)
+            x = x + m
+            return jax.lax.cond((idx + 1) % every == 0, shared_block,
+                                lambda y: y, x), None
+
+        x, _ = jax.lax.scan(_maybe_ckpt(body, remat), x,
+                            (p["layers"], jnp.arange(cfg.num_layers)))
+        return _unembed(p, cfg, x), jnp.zeros((), jnp.float32)
+
+    if fam == "audio":
+        enc = encode_source(p, cfg, frontend)
+        x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)
+
+        def body(x, xs):
+            lp, cp = xs
+            h = _norm(lp["ln1"], x, cfg)
+            x = x + attn.gqa_apply_full(lp["attn"], cfg, h, positions)
+            h = _norm(cp["ln"], x, cfg)
+            ek = jnp.einsum("bsd,dhe->bshe", enc, cp["attn"]["wk"])
+            ev = jnp.einsum("bsd,dhe->bshe", enc, cp["attn"]["wv"])
+            if cfg.qkv_bias:
+                ek, ev = ek + cp["attn"]["bk"], ev + cp["attn"]["bv"]
+            x = x + attn.gqa_apply_cross(cp["attn"], cfg, h, ek, ev)
+            h = _norm(lp["ln2"], x, cfg)
+            return x + gelu_mlp_apply(lp["mlp"], h), None
+
+        x, _ = jax.lax.scan(_maybe_ckpt(body, remat), x,
+                            (p["layers"], p["cross"]))
+        return _unembed(p, cfg, x), jnp.zeros((), jnp.float32)
+
+    raise ValueError(fam)
+
+
+def encode_source(p, cfg: ModelConfig, frontend):
+    """Whisper encoder over stubbed frame embeddings (B, Ssrc, d)."""
+    enc = p["encoder"]
+    x = frontend.astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2]).astype(jnp.int32)
+
+    def body(x, lp):
+        h = _norm(lp["ln1"], x, cfg)
+        x = x + attn.gqa_apply_full(lp["attn"], cfg, h, pos, causal=False,
+                                    rope_theta=0.0)
+        h = _norm(lp["ln2"], x, cfg)
+        return x + gelu_mlp_apply(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return _norm(enc["final_norm"], x, cfg)

@@ -1,0 +1,58 @@
+"""GRPO / PPO objectives (the paper's workloads train with these, §4.4)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    group_size: int = 4          # completions per prompt
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0
+    adv_eps: float = 1.0e-4
+
+
+def group_advantages(rewards: np.ndarray, group_size: int,
+                     eps: float = 1e-4) -> np.ndarray:
+    """GRPO: advantage = (r - mean_group) / (std_group + eps).
+
+    rewards: (B,) where B = n_prompts * group_size, grouped contiguously.
+    """
+    r = rewards.reshape(-1, group_size)
+    mean = r.mean(axis=1, keepdims=True)
+    std = r.std(axis=1, keepdims=True)
+    return ((r - mean) / (std + eps)).reshape(-1).astype(np.float32)
+
+
+def token_logprobs(logits, labels):
+    """logits: (B,S,V) fp32; labels: (B,S) -> (B,S) log p(label)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def policy_gradient_loss(logits, labels, advantages, loss_mask,
+                         behavior_logp=None, clip_eps: float = 0.2):
+    """Clipped-ratio policy gradient (PPO/GRPO); ratio=1 when no behaviour
+    logprobs are given (pure on-policy single update, the paper's setting).
+
+    logits (B,S,V), labels/advantages/loss_mask (B,S). Returns (loss, metrics).
+    """
+    logp = token_logprobs(logits, labels)
+    adv = advantages
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    if behavior_logp is None:
+        pg = -(logp * adv * loss_mask).sum() / denom
+        clip_frac = jnp.zeros(())
+    else:
+        ratio = jnp.exp(logp - behavior_logp)
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+        pg = -(jnp.minimum(unclipped, clipped) * loss_mask).sum() / denom
+        clip_frac = ((jnp.abs(ratio - 1) > clip_eps) * loss_mask).sum() / denom
+    ent = -(jax.nn.softmax(logits) * jax.nn.log_softmax(logits)).sum(-1)
+    entropy = (ent * loss_mask).sum() / denom
+    return pg, {"pg_loss": pg, "entropy": entropy, "clip_frac": clip_frac}

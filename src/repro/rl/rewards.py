@@ -1,0 +1,19 @@
+"""Verifiable rewards (RLVR): exact-match verification of generated answers."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.rl.rollout import completions_to_text
+
+
+def arithmetic_reward(completions, mask, answers: list[str]) -> np.ndarray:
+    """1.0 for exact numeric match, +0.1 shaping for a digit-only prefix."""
+    texts = completions_to_text(completions, mask)
+    out = np.zeros(len(texts), np.float32)
+    for i, (txt, ans) in enumerate(zip(texts, answers)):
+        txt = txt.strip()
+        if txt == ans:
+            out[i] = 1.0
+        elif txt and all(c in "-0123456789" for c in txt):
+            out[i] = 0.1
+    return out

@@ -1,0 +1,76 @@
+"""Rollout phase: batched autoregressive generation with a KV cache.
+
+This is the memory-bandwidth-bound phase of the paper's workload model.
+Generation runs prefill once then a lax.scan of decode steps; per-token
+behaviour logprobs are recorded for the (optionally off-policy-corrected)
+training phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import tokenizer as tok
+from repro.models.model import Model
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    max_new_tokens: int = 16
+    temperature: float = 1.0
+    eos_id: int = tok.EOS
+
+
+@partial(jax.jit, static_argnames=("model", "sampler"))
+def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
+             frontend=None):
+    """prompts: (B, Sp) int32 -> dict with tokens/completions/logprobs/mask.
+
+    Completion stops contributing (mask=0) after the first EOS; token length
+    is static (max_new_tokens) as in a fixed-budget rollout.
+    """
+    B, Sp = prompts.shape
+    T = sampler.max_new_tokens
+    cache = model.init_cache(B, Sp + T)
+    logits, cache = model.prefill(params, prompts, cache, frontend=frontend)
+
+    def sample(logits, key):
+        if sampler.temperature == 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / sampler.temperature, axis=-1).astype(jnp.int32)
+
+    def step(carry, key):
+        logits, cache, alive = carry
+        nxt = sample(logits, key)                            # (B,)
+        logp = jax.nn.log_softmax(logits, -1)
+        tok_logp = jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+        logits, cache = model.decode_step(params, nxt[:, None], cache)
+        mask = alive.astype(jnp.float32)
+        alive = alive & (nxt != sampler.eos_id)
+        return (logits, cache, alive), (nxt, tok_logp, mask)
+
+    keys = jax.random.split(rng, T)
+    alive0 = jnp.ones((B,), bool)
+    (_, cache, _), (toks, logps, mask) = jax.lax.scan(
+        step, (logits, cache, alive0), keys)
+    completions = jnp.moveaxis(toks, 0, 1)                   # (B,T)
+    return {
+        "prompts": prompts,
+        "completions": completions,
+        "tokens": jnp.concatenate([prompts, completions], axis=1),
+        "behavior_logp": jnp.moveaxis(logps, 0, 1),          # (B,T)
+        "mask": jnp.moveaxis(mask, 0, 1),                    # (B,T) fp32
+    }
+
+
+def completions_to_text(completions, mask) -> list[str]:
+    import numpy as np
+    out = []
+    for row, m in zip(np.asarray(completions), np.asarray(mask)):
+        ids = [int(t) for t, mi in zip(row, m) if mi > 0 and int(t) != tok.EOS]
+        out.append(tok.decode(ids))
+    return out

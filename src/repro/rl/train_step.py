@@ -1,0 +1,74 @@
+"""The training phase: RL policy-gradient step (fwd+bwd+AdamW), with
+microbatched gradient accumulation and activation checkpointing — this is
+what ``train_4k`` lowers in the dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_loss_fn(model: Model, *, remat: bool = True, clip_eps: float = 0.2):
+    from repro.rl.grpo import policy_gradient_loss
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch["tokens"],
+                                    frontend=batch.get("frontend"),
+                                    remat=remat)
+        pg, metrics = policy_gradient_loss(
+            logits, batch["labels"], batch["advantages"], batch["loss_mask"],
+            behavior_logp=batch.get("behavior_logp"), clip_eps=clip_eps)
+        loss = pg + aux
+        metrics = dict(metrics, moe_aux=aux, loss=loss)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig(), *,
+                    microbatches: int = 1, remat: bool = True,
+                    lr_schedule=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}. ``microbatches`` > 1 scans gradient
+    accumulation over the leading batch dim (memory lever for 32B+ archs).
+    """
+    loss_fn = make_loss_fn(model, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def mb_slice(i, x):
+                size = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * size, size, 0)
+
+            def acc_step(carry, i):
+                gsum = carry
+                mb = jax.tree.map(partial(mb_slice, i), batch)
+                (_, m), g = grad_fn(params, mb)
+                return jax.tree.map(jnp.add, gsum, g), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, ms = jax.lax.scan(acc_step, zeros,
+                                    jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg, lr_schedule)
+        return {"params": new_params, "opt": new_opt}, metrics | opt_metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key, opt_cfg: AdamWConfig = AdamWConfig()):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}

@@ -1,0 +1,7 @@
+from repro.sync.topology import ClusterTopology
+from repro.sync.model_sync import (flat_sync_baseline, hierarchical_sync,
+                                   lower_sync, make_sync_mesh,
+                                   sync_params_between_jobs)
+
+__all__ = ["ClusterTopology", "flat_sync_baseline", "hierarchical_sync",
+           "lower_sync", "make_sync_mesh", "sync_params_between_jobs"]

@@ -1,0 +1,95 @@
+"""Topology-aware model synchronization (paper §5.2) as JAX collectives.
+
+The disaggregated layout is a 2-D mesh ("cluster", "intra"): row 0 = training
+pool (holds fresh shards), row 1 = rollout pool. RollMux's hierarchical
+two-stage transfer maps to
+  stage 1 (inter-cluster scatter):  jax.lax.ppermute over the "cluster" axis
+                                    — exactly one model copy crosses the link,
+                                    as |intra| parallel P2P shard streams;
+  stage 2 (intra-cluster broadcast): jax.lax.all_gather over "intra" on the
+                                    rollout row, on the fast local fabric.
+
+The veRL baseline (flat AllGather spanning both pools) is provided for the
+collective-bytes comparison: the dry-run HLO shows it moving |intra| x more
+bytes across the slow axis. Collective-byte attribution = ppermute bytes ->
+slow link, all-gather bytes -> fast fabric (see launch/roofline.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def make_sync_mesh(n_per_cluster: int) -> Mesh:
+    devs = np.array(jax.devices()[:2 * n_per_cluster]).reshape(2, n_per_cluster)
+    return Mesh(devs, ("cluster", "intra"))
+
+
+def _flatten_concat(params) -> jax.Array:
+    leaves = jax.tree.leaves(params)
+    return jnp.concatenate([l.reshape(-1) for l in leaves])
+
+
+def hierarchical_sync(mesh: Mesh, flat_train: jax.Array) -> jax.Array:
+    """flat_train: model flattened, sharded over ("cluster","intra") so the
+    training row holds the fresh copy. Returns the full model replicated on
+    every rollout device (and the training row keeps its shards).
+    """
+    n_intra = mesh.shape["intra"]
+    pad = (-flat_train.size) % n_intra
+    x = jnp.pad(flat_train, (0, pad))
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=P("intra"),                 # shards along intra only
+             out_specs=P("cluster", "intra"),
+             check_rep=False)
+    def _sync(shard):                             # shard: (M/n,) on all devs
+        # stage 1: training row pushes its shard to the rollout peer —
+        # ONE model copy total crosses the "cluster" (slow) axis.
+        recv = jax.lax.ppermute(shard, "cluster", perm=[(0, 1)])
+        cluster_id = jax.lax.axis_index("cluster")
+        mine = jnp.where(cluster_id == 1, recv, shard)
+        # stage 2: broadcast shards inside the cluster on the fast fabric.
+        full = jax.lax.all_gather(mine, "intra", tiled=True)
+        return full[None, None]                   # (1,1,M) per device
+
+    return _sync(x)
+
+
+def flat_sync_baseline(mesh: Mesh, flat_train: jax.Array) -> jax.Array:
+    """veRL-style flat AllGather spanning BOTH pools: every rollout device
+    independently pulls every shard across the slow axis."""
+    n_intra = mesh.shape["intra"]
+    pad = (-flat_train.size) % n_intra
+    x = jnp.pad(flat_train, (0, pad))
+
+    @partial(shard_map, mesh=mesh, in_specs=P("intra"),
+             out_specs=P("cluster", "intra"), check_rep=False)
+    def _sync(shard):
+        full = jax.lax.all_gather(shard, ("cluster", "intra"), tiled=True)
+        # both rows hold 2 copies worth of shards; keep one model's length
+        return full[None, None, :shard.size * n_intra]
+
+    return _sync(x)
+
+
+def lower_sync(n_per_cluster: int, model_bytes: int, *, mode: str):
+    """Lower either sync strategy for HLO collective-byte analysis."""
+    mesh = make_sync_mesh(n_per_cluster)
+    n_elem = model_bytes // 2  # bf16
+    flat = jax.ShapeDtypeStruct((n_elem,), jnp.bfloat16)
+    fn = hierarchical_sync if mode == "hierarchical" else flat_sync_baseline
+    sharding = NamedSharding(mesh, P("intra"))
+    return jax.jit(partial(fn, mesh),
+                   in_shardings=(sharding,)).lower(flat)
+
+
+def sync_params_between_jobs(train_params, rollout_params):
+    """Single-host execution plane: the 'sync' phase of the RL loop — copy
+    the updated training params into the rollout actor's tree."""
+    return jax.tree.map(lambda t, _: t, train_params, rollout_params)

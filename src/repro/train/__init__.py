@@ -1,0 +1,8 @@
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_opt_specs,
+                                   adamw_update, warmup_cosine)
+from repro.train.checkpoints import (HostStateCache, load_checkpoint,
+                                     save_checkpoint)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_opt_specs", "adamw_update",
+           "warmup_cosine", "HostStateCache", "load_checkpoint",
+           "save_checkpoint"]

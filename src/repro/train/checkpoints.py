@@ -1,0 +1,78 @@
+"""Checkpointing: disk save/load + the host-DRAM actor cache that backs
+RollMux's warm-start context switching (paper §5.1 / C3).
+
+``HostStateCache`` is the "actor cache" of Fig 9: offloaded job states live
+here as host numpy arrays; a warm start is a ``device_put`` back, a cold
+start re-reads from disk (or re-initializes) — the latency gap is what the
+paper's Fig 4 measures.
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save_checkpoint(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump({"leaves": leaves, "treedef": treedef}, f,
+                    protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def load_checkpoint(path: str):
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    return jax.tree.unflatten(blob["treedef"], blob["leaves"])
+
+
+class HostStateCache:
+    """Host-memory residency cache with a byte budget (the paper's residency
+    constraint). Evicting a resident job = falling back to cold start."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._store: dict[str, tuple[list[np.ndarray], Any]] = {}
+        self.stats = {"warm_hits": 0, "cold_misses": 0, "offloads": 0}
+
+    def used_bytes(self) -> int:
+        return sum(sum(a.nbytes for a in leaves)
+                   for leaves, _ in self._store.values())
+
+    def can_admit(self, nbytes: int) -> bool:
+        return self.used_bytes() + nbytes <= self.capacity
+
+    def offload(self, key: str, tree) -> float:
+        """Device -> host. Returns seconds spent."""
+        t0 = time.perf_counter()
+        self._store[key] = _flatten(jax.device_get(tree))
+        self.stats["offloads"] += 1
+        return time.perf_counter() - t0
+
+    def restore(self, key: str):
+        """Host -> device (warm start). Returns (tree, seconds) or (None, 0)."""
+        if key not in self._store:
+            self.stats["cold_misses"] += 1
+            return None, 0.0
+        t0 = time.perf_counter()
+        leaves, treedef = self._store[key]
+        tree = jax.tree.unflatten(treedef, [jax.device_put(a) for a in leaves])
+        self.stats["warm_hits"] += 1
+        return tree, time.perf_counter() - t0
+
+    def evict(self, key: str) -> None:
+        self._store.pop(key, None)
+
+    def resident(self, key: str) -> bool:
+        return key in self._store

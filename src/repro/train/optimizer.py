@@ -1,0 +1,84 @@
+"""AdamW in pure JAX (no optax) + LR schedules. Optimizer moments carry the
+same logical sharding specs as the parameters (FSDP for the 236B archs)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3.0e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1.0e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_opt_specs(param_specs) -> dict:
+    """Logical specs for the optimizer state, mirroring the params tree."""
+    return {"mu": param_specs, "nu": param_specs, "step": ()}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt, params, cfg: AdamWConfig,
+                 lr_schedule: Callable | None = None):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = cfg.lr if lr_schedule is None else lr_schedule(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(m.dtype)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(m.dtype)
+        return (p.astype(m.dtype) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt["mu"], opt["nu"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac=0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

@@ -1,0 +1,15 @@
+"""Test config. NOTE: no XLA_FLAGS device-count forcing here — smoke tests
+and benches must see the single real CPU device (the 512-device view is
+exclusively the dry-run's, per spec)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

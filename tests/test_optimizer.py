@@ -1,0 +1,43 @@
+"""AdamW + schedules + host-cache checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (AdamWConfig, adamw_init, adamw_update,
+                         load_checkpoint, save_checkpoint, warmup_cosine)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, grad_clip=0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, opt, m = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+    assert int(opt["step"]) == 200
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    params = {"x": jnp.zeros(3)}
+    opt = adamw_init(params, cfg)
+    _, _, m = adamw_update({"x": jnp.full(3, 100.0)}, opt, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(100.0 * np.sqrt(3), rel=1e-5)
+
+
+def test_warmup_cosine():
+    sched = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+    p = str(tmp_path / "ck.pkl")
+    save_checkpoint(p, tree)
+    out = load_checkpoint(p)
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.ones((2, 2)))

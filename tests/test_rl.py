@@ -1,0 +1,92 @@
+"""RL substrate: rewards, GRPO advantages, PG loss, rollout semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import ArithmeticTask, tokenizer as tok
+from repro.models import build_model
+from repro.rl import (SamplerConfig, arithmetic_reward, generate,
+                      group_advantages, policy_gradient_loss)
+
+
+def test_tokenizer_roundtrip():
+    s = "12+34=46"
+    assert tok.decode(tok.encode(s)) == s
+    batch = tok.pad_batch([tok.encode("7+8=")], 10)
+    assert batch.shape == (1, 10)
+    assert batch[0, 0] == tok.PAD
+
+
+def test_task_answers():
+    t = ArithmeticTask(seed=0)
+    b = t.sample_batch(16)
+    for txt, ans in zip(b.prompt_text, b.answers):
+        a, rest = txt.split("+") if "+" in txt else txt.split("-")
+        bnum = rest[:-1]
+        expect = int(a) + int(bnum) if "+" in txt else int(a) - int(bnum)
+        assert str(expect) == ans
+
+
+def test_arithmetic_reward():
+    # completions: "46" exact, "4x" junk, "12" wrong-but-numeric
+    seqs = [tok.encode("46") + [tok.EOS], tok.encode("4x") + [tok.EOS],
+            tok.encode("12") + [tok.EOS]]
+    comp = np.full((3, 4), tok.EOS, np.int32)
+    mask = np.zeros((3, 4), np.float32)
+    for i, s in enumerate(seqs):
+        comp[i, :len(s)] = s
+        mask[i, :len(s) - 1] = 1.0   # mask covers pre-EOS tokens
+    r = arithmetic_reward(jnp.asarray(comp), jnp.asarray(mask),
+                          ["46", "46", "46"])
+    assert r[0] == 1.0 and r[1] == 0.0 and r[2] == pytest.approx(0.1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0, 1), min_size=8, max_size=8))
+def test_group_advantages_zero_mean(rs):
+    adv = group_advantages(np.asarray(rs, np.float32), group_size=4)
+    g = adv.reshape(-1, 4)
+    np.testing.assert_allclose(g.mean(axis=1), 0.0, atol=1e-5)
+
+
+def test_policy_gradient_clipping():
+    B, S, V = 2, 4, 11
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (B, S, V))
+    labels = jax.random.randint(key, (B, S), 0, V)
+    adv = jnp.ones((B, S))
+    mask = jnp.ones((B, S))
+    # behaviour logp far from current -> heavy clipping
+    beh = jnp.full((B, S), -20.0)
+    _, m = policy_gradient_loss(logits, labels, adv, mask,
+                                behavior_logp=beh, clip_eps=0.2)
+    assert float(m["clip_frac"]) == 1.0
+    # on-policy: no clipping
+    from repro.rl.grpo import token_logprobs
+    beh2 = token_logprobs(logits, labels)
+    _, m2 = policy_gradient_loss(logits, labels, adv, mask,
+                                 behavior_logp=beh2, clip_eps=0.2)
+    assert float(m2["clip_frac"]) == 0.0
+
+
+def test_generate_stops_masking_after_eos(rng_key):
+    m = build_model("internlm2-1.8b", reduced=True)
+    params = m.init(rng_key)
+    prompts = jnp.asarray(tok.pad_batch([tok.encode("1+1=", bos=True)] * 2, 8))
+    out = generate(m, params, prompts, rng_key,
+                   SamplerConfig(max_new_tokens=6, temperature=1.0))
+    assert out["completions"].shape == (2, 6)
+    assert out["mask"].shape == (2, 6)
+    mask = np.asarray(out["mask"])
+    comp = np.asarray(out["completions"])
+    for b in range(2):
+        seen_eos = False
+        for t in range(6):
+            if seen_eos:
+                assert mask[b, t] == 0.0
+            if comp[b, t] == tok.EOS:
+                seen_eos = True
+    # behaviour logprobs are valid log-probabilities
+    assert np.all(np.asarray(out["behavior_logp"]) <= 0.0)

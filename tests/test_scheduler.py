@@ -1,0 +1,127 @@
+"""Inter-group scheduler (Algorithm 1) behaviour + group DES invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (CoExecutionGroup, GreedyMostIdle, InterGroupScheduler,
+                        Node, NodeAllocator, Placement, RLJob, H20, H800)
+
+
+def mk_job(jid, troll, ttrain, slo=2.0, mem_r=100.0, mem_t=100.0, n=8):
+    return RLJob(jid, t_roll=troll, t_train=ttrain, slo=slo,
+                 mem_roll_gb=mem_r, mem_train_gb=mem_t,
+                 n_roll_gpus=n, n_train_gpus=n)
+
+
+def test_complementary_jobs_share_cycle():
+    sched = InterGroupScheduler(NodeAllocator())
+    d1 = sched.schedule(mk_job("a", 100, 90))
+    d2 = sched.schedule(mk_job("b", 95, 85))
+    assert d2.group is d1.group            # packed together
+    res = d1.group.simulate()
+    # both share the cycle: t_load = 195 (slightly-overloaded direct pack,
+    # Fig 10a semantics) — 2.6% over the 190 s solo cycle, within SLO
+    assert res.iter_time["a"] == pytest.approx(195.0)
+    assert res.iter_time["b"] == pytest.approx(195.0)
+    assert res.iter_time["a"] <= 1.1 * d1.group.t_cycle()
+
+
+def test_rollout_heavy_jobs_share_train_pool():
+    sched = InterGroupScheduler(NodeAllocator())
+    for i in range(4):
+        d = sched.schedule(mk_job(f"rh{i}", 600, 150, slo=1.5))
+    G = d.group
+    assert len(G.jobs) == 4
+    assert len(G.train_nodes) == 1          # one shared train pool
+    assert len(G.rollout_nodes) == 4        # rollout scaling per job
+    res = G.simulate()
+    for j in G.jobs.values():
+        assert res.iter_time[j.job_id] <= j.slo * j.t_solo + 1e-6
+
+
+def test_saturation_pruning():
+    """A saturated group never admits more work (Algorithm 1 line 4)."""
+    sched = InterGroupScheduler(NodeAllocator())
+    d1 = sched.schedule(mk_job("a", 100, 100, slo=2.0))
+    d2 = sched.schedule(mk_job("b", 100, 100, slo=2.0))
+    if d2.group is d1.group:
+        # group load = 200 train = cycle -> saturated now
+        assert d1.group.saturated() or d1.group.t_load() <= d1.group.t_cycle()
+        d3 = sched.schedule(mk_job("c", 100, 100, slo=2.0))
+        assert d3.group is not d1.group or not d1.group.saturated()
+
+
+def test_memory_residency_blocks_admission():
+    sched = InterGroupScheduler(NodeAllocator())
+    big = 900.0  # GB; two of these exceed the 1536 GB node budget
+    d1 = sched.schedule(mk_job("a", 600, 100, mem_r=big, mem_t=big))
+    d2 = sched.schedule(mk_job("b", 600, 100, mem_r=big, mem_t=big))
+    # cannot share the train node: must be a different group
+    assert d2.group is not d1.group
+
+
+def test_slo_admission_rejects_slow_pairing():
+    sched = InterGroupScheduler(NodeAllocator())
+    d1 = sched.schedule(mk_job("long", 500, 500, slo=2.0))
+    # short job with tight SLO cannot absorb the long job's cycle
+    d2 = sched.schedule(mk_job("short", 50, 50, slo=1.1))
+    assert d2.group is not d1.group
+
+
+def test_marginal_cost_prefers_packing():
+    sched = InterGroupScheduler(NodeAllocator())
+    sched.schedule(mk_job("a", 300, 100, slo=2.0))
+    d = sched.schedule(mk_job("b", 280, 90, slo=2.0))
+    assert d.strategy in ("pack", "scale_rollout")
+    assert d.delta_cost < sched._isolated_cost(mk_job("b", 280, 90))
+
+
+def test_release_frees_nodes():
+    alloc = NodeAllocator()
+    sched = InterGroupScheduler(alloc)
+    sched.schedule(mk_job("a", 100, 90))
+    sched.schedule(mk_job("b", 95, 85))
+    cost_before = sched.total_cost_per_hour()
+    sched.release("a")
+    sched.release("b")
+    assert sched.total_cost_per_hour() == 0.0
+    assert not sched.groups
+
+
+def test_group_des_migration_improves_packing():
+    """Long-tail migration frees rollout nodes early -> faster iterations
+    when the shared rollout node is the binding resource (rollout-heavy)."""
+    nodes_r = [Node("r0", H20)]
+    nodes_t = [Node("t0", H800)]
+    G = CoExecutionGroup("g", nodes_r, nodes_t)
+    a = mk_job("a", 200, 80)
+    b = mk_job("b", 200, 80)
+    a.t80_frac = b.t80_frac = 0.5
+    G.add_job(a, Placement(("r0",)))
+    G.add_job(b, Placement(("r0",)))
+    base = G.simulate(migration=False)
+    mig = G.simulate(migration=True)
+    assert mig.makespan < base.makespan
+    assert all(mig.iter_time[j] < base.iter_time[j] - 1e-6 for j in ("a", "b"))
+
+
+def test_gavel_job_atomic_is_worse():
+    nodes_r = [Node("r0", H20), Node("r1", H20)]
+    nodes_t = [Node("t0", H800)]
+    G = CoExecutionGroup("g", nodes_r, nodes_t)
+    G.add_job(mk_job("a", 100, 100), Placement(("r0",)))
+    G.add_job(mk_job("b", 100, 100), Placement(("r1",)))
+    phased = G.simulate()
+    atomic = G.simulate(job_atomic=True)
+    assert atomic.iter_time["a"] > phased.iter_time["a"]
+
+
+def test_decision_latency_scales():
+    import time
+    from repro.core.trace import make_sim_job
+    rng = np.random.default_rng(0)
+    sched = InterGroupScheduler(NodeAllocator())
+    for i in range(60):
+        sched.schedule(make_sim_job(rng, f"j{i}", duration=1e9))
+    t0 = time.perf_counter()
+    sched.schedule(make_sim_job(rng, "probe", duration=1e9))
+    assert time.perf_counter() - t0 < 1.0   # sub-second (paper Table 5)

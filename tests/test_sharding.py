@@ -1,0 +1,79 @@
+"""Logical-axis sharding rules: divisibility fallbacks, spec trees."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.models.sharding import DEFAULT_RULES, ShardingRules
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_divisibility_fallback():
+    rules = ShardingRules()
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 28 heads not divisible by 16 -> replicated
+    spec = rules.resolve(("embed", "heads", "head_dim"), (3584, 28, 128), mesh)
+    assert spec == P("data", None, None)
+    # divisible head count -> sharded over model
+    spec = rules.resolve(("embed", "heads", "head_dim"), (4096, 32, 128), mesh)
+    assert spec == P("data", "model", None)
+    # whisper vocab 51865 not divisible -> replicated
+    spec = rules.resolve(("embed", "vocab"), (384, 51865), mesh)
+    assert spec == P("data", None)
+
+
+def test_no_double_axis_assignment():
+    rules = ShardingRules()
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # cache: seq grabs model first; kv_heads must not also claim it
+    spec = rules.resolve(("layers", "batch", "cache_seq", "kv_heads", None),
+                         (24, 128, 32768, 32, 128), mesh)
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_batch_pod_fallback():
+    rules = ShardingRules()
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = rules.resolve(("batch", "seq"), (256, 4096), mesh)
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicate
+    spec = rules.resolve(("batch", "seq"), (1, 524288), mesh)
+    assert spec == P(None, None)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_cover_tree(arch):
+    """Every param leaf has a logical spec with matching rank."""
+    m = build_model(arch, reduced=True)
+    params = m.init_abstract()
+    specs = m.logical_specs()
+    flat_p = jax.tree.leaves(params)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_s = jax.tree.leaves(specs, is_leaf=is_spec)
+    assert len(flat_p) == len(flat_s)
+    pd = jax.tree.structure(params)
+    sd = jax.tree.structure(specs, is_leaf=is_spec)
+    assert pd == sd
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape), (s, p.shape)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cache_specs_cover_tree(arch):
+    m = build_model(arch, reduced=True)
+    cache = jax.eval_shape(lambda: m.init_cache(2, 32))
+    specs = m.cache_logical_specs()
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_c = jax.tree.leaves(cache)
+    flat_s = jax.tree.leaves(specs, is_leaf=is_spec)
+    assert len(flat_c) == len(flat_s)
+    for c, s in zip(flat_c, flat_s):
+        assert len(s) == len(c.shape), (s, c.shape)

@@ -1,0 +1,57 @@
+"""Topology-aware model sync: analytic model + collective structure."""
+import jax
+import pytest
+
+from repro.sync import ClusterTopology, sync_params_between_jobs
+
+
+def test_single_node_speedup_matches_paper():
+    topo = ClusterTopology()
+    s = topo.speedup_single_node(14e9, 8)
+    # paper Fig 12: 7.87-8.33x for 8 H800 -> 8 H20
+    assert 6.5 <= s <= 9.0
+
+
+def test_multi_node_speedup_positive():
+    topo = ClusterTopology()
+    s = topo.speedup_multi_node(28e9, 16)
+    assert s > 1.5   # paper: 2.62-2.75x (our ring model is conservative)
+
+
+def test_one_copy_crosses_slow_link():
+    topo = ClusterTopology()
+    m = 10e9
+    t_hier = topo.hierarchical_time_s(m, 8, 8)
+    # stage-1 time == exactly one copy over the slow link (fast stage ~free)
+    one_copy = m * 8 / (topo.inter_cluster_gbps * 1e9 * topo.stream_efficiency)
+    assert t_hier == pytest.approx(one_copy, rel=0.05)
+
+
+def test_warm_vs_cold_start_gap():
+    topo = ClusterTopology()
+    state = 275e9   # 7B rollout actor (paper Table 2)
+    cold = topo.cold_start_s(state)
+    warm = topo.warm_start_s(state)
+    assert cold / warm > 10          # paper: up to 48x
+    assert cold > 60                 # paper Fig 4: up to ~80 s
+
+
+def test_sync_params_between_jobs():
+    a = {"w": jax.numpy.ones(3)}
+    b = {"w": jax.numpy.zeros(3)}
+    out = sync_params_between_jobs(a, b)
+    assert float(out["w"].sum()) == 3.0
+
+
+@pytest.mark.skipif(jax.device_count() < 16,
+                    reason="hierarchical sync collectives need a 2x8 mesh "
+                           "(covered by benchmarks/model_sync.py subprocess)")
+def test_hierarchical_sync_collectives():
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sync import hierarchical_sync, make_sync_mesh
+    mesh = make_sync_mesh(8)
+    flat = jax.numpy.arange(8 * 100, dtype=jax.numpy.bfloat16) % 97
+    x = jax.device_put(flat, NamedSharding(mesh, P("intra")))
+    out = np.asarray(hierarchical_sync(mesh, x))
+    assert (out[1, 0] == np.asarray(flat)).all()
