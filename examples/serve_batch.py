@@ -1,6 +1,12 @@
-"""Batched serving example: prefill + KV-cache decode on any assigned arch.
+"""Serving example: continuous-batching engine vs the static-batch path.
+
+Requests stream through ``repro.serve.Engine`` — FIFO admission into a
+fixed pool of KV-cache slots (here fewer slots than requests, so the
+engine queues, recycles slots on EOS/budget, and keeps the decode batch
+full).  Pass ``--engine static`` for the legacy one-shot batch.
 
     PYTHONPATH=src python examples/serve_batch.py --arch gemma3-4b
+    PYTHONPATH=src python examples/serve_batch.py --batch 8 --slots 2
 """
 import argparse
 import os
@@ -8,19 +14,32 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.serve import serve_batch
+from repro.launch.serve import serve_batch, serve_continuous
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="KV-cache slot pool size (continuous engine)")
     ap.add_argument("--max-new", type=int, default=24)
     args = ap.parse_args()
     prompts = [f"{10+i}+{20+i}=" for i in range(args.batch)]
-    res = serve_batch(args.arch, prompts, max_new=args.max_new)
-    print(f"{args.arch}: {res['tokens']} tokens in {res['wall_s']:.2f}s "
-          f"({res['tok_per_s']:.1f} tok/s, random weights)")
+    if args.engine == "continuous":
+        res = serve_continuous(args.arch, prompts, max_new=args.max_new,
+                               num_slots=args.slots)
+        print(f"{args.arch} [continuous, {args.slots} slots]: "
+              f"{res['tokens']} tokens in {res['wall_s']:.2f}s "
+              f"({res['tok_per_s']:.1f} tok/s, slot util "
+              f"{res['slot_utilization']:.0%}, random weights)")
+    else:
+        res = serve_batch(args.arch, prompts, max_new=args.max_new)
+        print(f"{args.arch} [static]: {res['tokens']} tokens in "
+              f"{res['wall_s']:.2f}s ({res['tok_per_s']:.1f} tok/s, "
+              f"random weights)")
     for p, t in zip(prompts, res["texts"]):
         print(f"  {p!r} -> {t[:40]!r}")
 

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 NEG_INF = -1.0e30
 
 
@@ -101,7 +103,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,18 @@
+"""Compatibility shim for the Pallas TPU compiler-params rename.
+
+Newer JAX exposes ``pltpu.CompilerParams``; 0.4.x-era releases (this
+container ships jax 0.4.37) only have ``pltpu.TPUCompilerParams``. Both
+accept the same keyword arguments we use (``dimension_semantics``), so the
+kernels import :func:`compiler_params` from here instead of touching the
+class directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this JAX provides."""
+    return CompilerParams(**kwargs)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 
 def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, st_ref, state_s,
                  *, chunk: int, n_chunks: int):
@@ -101,7 +103,7 @@ def rwkv6_scan(r, k, v, log_w, u, *, chunk: int = 64, interpret: bool = True):
             jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(rt, kt, vt, lwt, u)

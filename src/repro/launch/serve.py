@@ -1,7 +1,13 @@
-"""Batched serving driver: prefill + decode with a KV cache (single host).
+"""Serving drivers: continuous-batching engine (default) + static batch.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
-        --batch 4 --prompt-len 16 --max-new 32
+The continuous path feeds prompts through ``repro.serve.Engine`` — FIFO
+admission into a fixed pool of KV-cache slots, slot recycle on EOS, decode
+batched across all live slots.  The static path is the legacy
+one-batch-end-to-end ``generate`` call, kept as the benchmark baseline.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
+        --batch 8 --slots 4 --max-new 32              # continuous (default)
+    PYTHONPATH=src python -m repro.launch.serve --engine static ...
 """
 from __future__ import annotations
 
@@ -14,14 +20,11 @@ import numpy as np
 
 from repro.data import tokenizer as tok
 from repro.models import build_model
-from repro.rl import SamplerConfig, completions_to_text, generate
+from repro.rl import (SamplerConfig, completions_to_text, generate,
+                      generate_continuous)
 
 
-def serve_batch(arch: str, prompts_text: list[str], *, reduced: bool = True,
-                max_new: int = 32, temperature: float = 0.8, seed: int = 0):
-    model = build_model(arch, reduced=reduced)
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
+def _encode_prompts(model, prompts_text):
     plen = max(len(tok.encode(t, bos=True)) for t in prompts_text)
     prompts = jnp.asarray(tok.pad_batch(
         [tok.encode(t, bos=True) for t in prompts_text], plen))
@@ -32,6 +35,20 @@ def serve_batch(arch: str, prompts_text: list[str], *, reduced: bool = True,
     elif model.cfg.frontend == "audio":
         fr = jnp.zeros((prompts.shape[0], model.cfg.max_source_len,
                         model.cfg.d_model))
+    return prompts, fr
+
+
+def serve_batch(arch: str, prompts_text: list[str], *, reduced: bool = True,
+                max_new: int = 32, temperature: float = 0.8, seed: int = 0,
+                model=None, params=None):
+    """Static batch: one prefill + fixed-length decode scan for the whole
+    batch (every request pays ``max_new`` steps regardless of EOS)."""
+    if model is None:
+        model = build_model(arch, reduced=reduced)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init(key)
+    prompts, fr = _encode_prompts(model, prompts_text)
     sampler = SamplerConfig(max_new_tokens=max_new, temperature=temperature)
     t0 = time.perf_counter()
     out = generate(model, params, prompts, key, sampler, frontend=fr)
@@ -43,17 +60,59 @@ def serve_batch(arch: str, prompts_text: list[str], *, reduced: bool = True,
             "tok_per_s": n_tok / max(dt, 1e-9)}
 
 
+def serve_continuous(arch: str, prompts_text: list[str], *,
+                     reduced: bool = True, max_new: int = 32,
+                     temperature: float = 0.8, seed: int = 0,
+                     num_slots: int | None = None, block_size: int = 1,
+                     model=None, params=None):
+    """Continuous batching: requests stream through the slot-pool engine."""
+    if model is None:
+        model = build_model(arch, reduced=reduced)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init(key)
+    prompts, fr = _encode_prompts(model, prompts_text)
+    sampler = SamplerConfig(max_new_tokens=max_new, temperature=temperature)
+    t0 = time.perf_counter()
+    out = generate_continuous(model, params, prompts, key, sampler,
+                              frontend=fr, num_slots=num_slots,
+                              block_size=block_size)
+    dt = time.perf_counter() - t0
+    n_tok = int(out["mask"].sum())
+    stats = out["engine_stats"]
+    return {"texts": completions_to_text(out["completions"], out["mask"]),
+            "wall_s": dt, "tokens": n_tok,
+            "tok_per_s": n_tok / max(dt, 1e-9),
+            "slot_utilization": stats.slot_utilization,
+            "prefills": stats.prefills, "decode_steps": stats.steps}
+
+
 def _main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="KV-cache slots (continuous only; default = batch)")
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="decode steps fused per scheduler tick")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
     prompts = [f"{i}+{i+1}=" for i in range(args.batch)]
-    res = serve_batch(args.arch, prompts, max_new=args.max_new)
-    print(f"served {args.batch} requests, {res['tokens']} tokens in "
-          f"{res['wall_s']:.2f}s ({res['tok_per_s']:.1f} tok/s)")
+    if args.engine == "continuous":
+        res = serve_continuous(args.arch, prompts, max_new=args.max_new,
+                               num_slots=args.slots,
+                               block_size=args.block_size)
+        extra = (f", slot util {res['slot_utilization']:.0%}, "
+                 f"{res['decode_steps']} decode steps")
+    else:
+        res = serve_batch(args.arch, prompts, max_new=args.max_new)
+        extra = ""
+    print(f"[{args.engine}] served {args.batch} requests, {res['tokens']} "
+          f"tokens in {res['wall_s']:.2f}s ({res['tok_per_s']:.1f} tok/s"
+          f"{extra})")
     for p, t in zip(prompts, res["texts"]):
         print(f"  {p!r} -> {t!r}")
 

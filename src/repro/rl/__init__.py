@@ -1,9 +1,10 @@
 from repro.rl.grpo import GRPOConfig, group_advantages, policy_gradient_loss
-from repro.rl.rollout import SamplerConfig, generate, completions_to_text
+from repro.rl.rollout import (SamplerConfig, completions_to_text, generate,
+                              generate_continuous)
 from repro.rl.rewards import arithmetic_reward
 from repro.rl.train_step import init_train_state, make_loss_fn, make_train_step
 
 __all__ = ["GRPOConfig", "group_advantages", "policy_gradient_loss",
-           "SamplerConfig", "generate", "completions_to_text",
-           "arithmetic_reward", "init_train_state", "make_loss_fn",
-           "make_train_step"]
+           "SamplerConfig", "generate", "generate_continuous",
+           "completions_to_text", "arithmetic_reward", "init_train_state",
+           "make_loss_fn", "make_train_step"]

@@ -67,6 +67,61 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
     }
 
 
+def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
+                        frontend=None, *, num_slots: int | None = None,
+                        block_size: int = 1):
+    """Rollout-phase executor backed by the continuous-batching engine.
+
+    Drop-in alternative to :func:`generate`: same inputs, same output dict
+    ((B, T) completions / behaviour logprobs / mask, T = max_new_tokens),
+    so GRPO training consumes it unchanged.  Internally each prompt row
+    becomes a ``repro.serve.Request`` served by ``repro.serve.Engine`` over
+    ``num_slots`` KV-cache slots (default: one per request) — with fewer
+    slots than requests the engine queues and recycles, which is the
+    serving regime the paper's rollout pool actually runs in.
+
+    Greedy decoding (``temperature=0``) is token- and logprob-identical to
+    per-request :func:`generate`; sampled decoding draws per-step keys from
+    ``rng`` via the engine (a different, equally valid stream than
+    ``generate``'s).
+    """
+    import numpy as np
+
+    from repro.serve import Engine, EngineConfig, Request
+
+    B, Sp = prompts.shape
+    T = sampler.max_new_tokens
+    prompts_np = np.asarray(prompts, np.int32)
+    engine = Engine(model, params, EngineConfig(
+        num_slots=B if num_slots is None else num_slots,
+        max_seq_len=Sp + T,
+        eos_id=sampler.eos_id, temperature=sampler.temperature,
+        block_size=block_size), rng=rng)
+    for i in range(B):
+        fr = None if frontend is None else frontend[i:i + 1]
+        engine.submit(Request(rid=i, prompt=prompts_np[i], max_new_tokens=T,
+                              frontend=fr))
+    outs = engine.run()
+
+    completions = np.full((B, T), sampler.eos_id, np.int32)
+    behavior_logp = np.zeros((B, T), np.float32)
+    mask = np.zeros((B, T), np.float32)
+    for o in outs:
+        n = o.num_tokens
+        completions[o.rid, :n] = o.tokens
+        behavior_logp[o.rid, :n] = o.logprobs
+        mask[o.rid, :n] = 1.0
+    completions = jnp.asarray(completions)
+    return {
+        "prompts": prompts,
+        "completions": completions,
+        "tokens": jnp.concatenate([prompts, completions], axis=1),
+        "behavior_logp": jnp.asarray(behavior_logp),
+        "mask": jnp.asarray(mask),
+        "engine_stats": engine.stats,
+    }
+
+
 def completions_to_text(completions, mask) -> list[str]:
     import numpy as np
     out = []

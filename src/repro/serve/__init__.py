@@ -1,0 +1,16 @@
+"""Continuous-batching rollout serving subsystem.
+
+The paper's rollout phase is memory-bandwidth-bound *serving*; this package
+makes it a first-class serving problem: ``Request``s flow through a FIFO
+``RequestQueue`` into a fixed pool of KV-cache slots (``SlotManager``) and
+the ``Engine`` interleaves prefill-into-free-slot admission with batched
+single-token decode across all live slots (in-flight batching).  See
+``repro.serve.engine`` for the scheduling model and exactness guarantees.
+"""
+from repro.serve.engine import Engine, EngineConfig, EngineStats, run_trace
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, RequestOutput
+from repro.serve.slots import SlotManager
+
+__all__ = ["Engine", "EngineConfig", "EngineStats", "run_trace",
+           "RequestQueue", "Request", "RequestOutput", "SlotManager"]

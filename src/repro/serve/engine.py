@@ -1,0 +1,294 @@
+"""Continuous-batching rollout engine (in-flight batching over a slot pool).
+
+The engine services generation requests the way a rollout pool must under
+heavy traffic: a FIFO :class:`~repro.serve.queue.RequestQueue` feeds a
+fixed pool of KV-cache slots (:class:`~repro.serve.slots.SlotManager`);
+each scheduler iteration first *prefills* waiting requests into free slots,
+then runs one (or ``block_size`` fused) *decode* step(s) for every live
+slot at once.  Requests therefore join and leave the decode batch
+mid-flight: a slot is recycled the moment its request hits EOS or its
+per-request decode budget, and the next queued request prefills into it —
+no static-batch barrier, no head-of-line blocking on long generations.
+
+Per-slot sequence positions are independent (the pool cache carries a
+per-slot ``index`` vector); decode is the model's own single-token step
+``vmap``-ped over slots, so engine output is mathematically the per-request
+``rl.rollout.generate`` computation, token for token and logprob for
+logprob (the equivalence ``tests/test_serve_engine.py`` asserts).
+
+``block_size > 1`` fuses K decode steps into one jitted ``lax.scan`` to
+amortise per-step dispatch (scheduling decisions then happen every K
+tokens); ``block_size=1`` is exact per-token continuous batching.
+
+Compilation notes: jitted prefill / admit / decode-block functions are
+cached per (model, max_seq_len, temperature, eos_id) — engines with the
+same serving shape share compilations (cheap to construct per trace), and
+prefill additionally specialises on prompt length, so drivers should
+bucket prompt lengths (the benchmark uses a handful of buckets).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, RequestOutput
+from repro.serve.slots import SlotManager, _batch_axis, insert_cache
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 8
+    max_seq_len: int = 256
+    eos_id: int = tok.EOS
+    temperature: float = 0.0          # 0 => greedy
+    block_size: int = 1               # decode steps fused per scheduler tick
+    max_waiting: Optional[int] = None
+
+    def __post_init__(self):
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if self.max_seq_len < 2:
+            raise ValueError("max_seq_len must cover prompt + decode")
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0                    # decode steps executed (all slots)
+    blocks: int = 0                   # scheduler ticks that ran a decode
+    prefills: int = 0
+    recorded_tokens: int = 0          # useful (mask=1) tokens produced
+    slot_steps: int = 0               # num_slots * steps (capacity offered)
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.recorded_tokens / max(self.slot_steps, 1)
+
+
+@functools.lru_cache(maxsize=32)
+def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
+    """Jitted prefill / admit / decode-block shared by all engines with the
+    same serving shape (keyed on the hashable frozen ``Model``)."""
+
+    def prefill_fn(params, prompt, frontend):
+        cache = model.init_cache(1, max_seq_len)
+        logits, cache = model.prefill(params, prompt, cache,
+                                      frontend=frontend)
+        return logits[0], cache
+
+    def admit_fn(params, prompt, frontend, pool, slot, last_logits, alive,
+                 remaining, budget):
+        """Prefill one request and splice it into slot ``slot`` — a single
+        dispatch covering cache insert + logits/alive/budget row updates."""
+        logits, one = prefill_fn(params, prompt, frontend)
+        return (insert_cache(pool, one, slot),
+                last_logits.at[slot].set(logits),
+                alive.at[slot].set(True),
+                remaining.at[slot].set(budget))
+
+    cache_axes = {k: _batch_axis(k) for k in model.cache_logical_specs()}
+
+    def decode_one(params, token, cache):
+        # re-grow the batch=1 axis the vmap stripped, run the model's own
+        # decode step, then strip it again for out_axes
+        cache_b = {k: (v if k == "index" else v[:, None])
+                   for k, v in cache.items()}
+        logits, cache_b = model.decode_step(
+            params, jnp.reshape(token, (1, 1)), cache_b)
+        cache_o = {k: (v if k == "index" else v[:, 0])
+                   for k, v in cache_b.items()}
+        return logits[0], cache_o
+
+    pool_decode = jax.vmap(decode_one, in_axes=(None, 0, cache_axes),
+                           out_axes=(0, cache_axes))
+
+    def sample(logits, key):
+        if temperature == 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def block_fn(params, last_logits, cache, alive, remaining, keys):
+        def step(carry, key):
+            logits, cache, alive, remaining = carry
+            nxt = sample(logits, key)                       # (N,)
+            logp = jax.nn.log_softmax(logits, -1)
+            tok_logp = jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+            rec = alive & (remaining > 0)
+            logits, cache = pool_decode(params, nxt, cache)
+            alive = alive & (nxt != eos_id)
+            remaining = remaining - rec.astype(jnp.int32)
+            return (logits, cache, alive, remaining), (nxt, tok_logp, rec)
+
+        carry, out = jax.lax.scan(
+            step, (last_logits, cache, alive, remaining), keys)
+        return carry, out                   # out: (toks, logps, recs) (K,N)
+
+    return jax.jit(admit_fn), jax.jit(block_fn)
+
+
+class Engine:
+    """Continuous-batching generation engine over a fixed slot pool."""
+
+    def __init__(self, model, params, config: EngineConfig,
+                 rng: Optional[jax.Array] = None):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.queue = RequestQueue(config.max_waiting)
+        self.slots = SlotManager(model, config.num_slots, config.max_seq_len)
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        N = config.num_slots
+        self._last_logits = jnp.zeros((N, model.cfg.vocab_size), jnp.float32)
+        self._alive = jnp.zeros((N,), bool)
+        self._remaining = jnp.zeros((N,), jnp.int32)
+        self._zero_keys = jnp.zeros((config.block_size, 2), jnp.uint32)
+        self._active: dict[int, tuple[Request, RequestOutput]] = {}
+        self.finished: dict[int, RequestOutput] = {}
+        self.stats = EngineStats()
+        self.clock = None             # optional wall-clock for trace drivers
+        self._admit_fn, self._block = _engine_fns(
+            model, config.max_seq_len, config.temperature, config.eos_id)
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.total_budget > self.config.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + budget "
+                f"{req.max_new_tokens} exceeds max_seq_len "
+                f"{self.config.max_seq_len}")
+        self.queue.push(req)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self._active
+
+    # ---- scheduler ---------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (FIFO, lowest slot first)."""
+        while self.queue and self.slots.num_free:
+            req = self.queue.pop()
+            slot = self.slots.assign(req.rid)
+            (self.slots.cache, self._last_logits, self._alive,
+             self._remaining) = self._admit_fn(
+                self.params, jnp.asarray(req.prompt)[None], req.frontend,
+                self.slots.cache, jnp.asarray(slot, jnp.int32),
+                self._last_logits, self._alive, self._remaining,
+                jnp.asarray(req.max_new_tokens, jnp.int32))
+            out = RequestOutput(rid=req.rid, prompt=req.prompt,
+                                prefill_step=self.stats.steps,
+                                arrival_time=req.arrival_time)
+            self._active[slot] = (req, out)
+            self.stats.prefills += 1
+
+    def _finalize(self, slot: int) -> None:
+        req, out = self._active[slot]
+        out.finish_reason = ("eos" if out.tokens and
+                             out.tokens[-1] == self.config.eos_id else "length")
+        out.finish_step = self.stats.steps
+        if self.clock is not None:
+            out.finish_time = self.clock()
+        self.finished[req.rid] = out
+        del self._active[slot]
+        self.slots.release(slot)
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit waiting requests, then run
+        ``block_size`` decode steps for all slots.  Returns False if there
+        was nothing to do (idle)."""
+        self._admit()
+        if not self._active:
+            return False
+        if self.config.temperature == 0:
+            keys = self._zero_keys          # unused by greedy sampling
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            keys = jax.random.split(sub, self.config.block_size)
+        (self._last_logits, self.slots.cache, self._alive, self._remaining), \
+            out = self._block(self.params, self._last_logits,
+                              self.slots.cache, self._alive,
+                              self._remaining, keys)
+        toks, logps, recs, alive, remaining = jax.device_get(
+            (*out, self._alive, self._remaining))
+        K = self.config.block_size
+        self.stats.steps += K
+        self.stats.blocks += 1
+        self.stats.slot_steps += K * self.config.num_slots
+        for slot in list(self._active):
+            _, o = self._active[slot]
+            rec_col = recs[:, slot]
+            n_rec = int(rec_col.sum())
+            if n_rec:
+                if not o.tokens and self.clock is not None:
+                    o.first_token_time = self.clock()   # first token on host
+                o.tokens.extend(int(t) for t in toks[rec_col, slot])
+                o.logprobs.extend(float(l) for l in logps[rec_col, slot])
+                self.stats.recorded_tokens += n_rec
+            if (not alive[slot]) or remaining[slot] <= 0:
+                self._finalize(slot)
+        return True
+
+    def run(self) -> list[RequestOutput]:
+        """Drive the engine until queue and slots are empty; outputs by rid."""
+        while not self.idle:
+            self.step()
+        return [self.finished[r] for r in sorted(self.finished)]
+
+
+def run_trace(engine: Engine, requests: list[Request],
+              *, realtime: bool = True) -> dict:
+    """Replay a timed arrival trace through ``engine`` against the wall
+    clock: each request is submitted once ``arrival_time`` (seconds from
+    trace start) has elapsed, and per-request first-token / finish
+    timestamps are recorded.  ``realtime=False`` fast-forwards idle gaps
+    instead of sleeping through them: when the engine runs dry the next
+    pending request is submitted immediately and its ``arrival_time`` is
+    rebased to the current clock so latency/TTFT stay well-defined.
+    Returns a report with latency, throughput and slot-utilization
+    aggregates (the benchmark's raw material)."""
+    pending = sorted(requests, key=lambda r: (r.arrival_time, r.rid))
+    t0 = time.perf_counter()
+    engine.clock = lambda: time.perf_counter() - t0
+    while pending or not engine.idle:
+        now = engine.clock()
+        while pending and pending[0].arrival_time <= now:
+            engine.submit(pending.pop(0))
+        progressed = engine.step()
+        if not progressed and pending:
+            if realtime:
+                wait = pending[0].arrival_time - engine.clock()
+                if wait > 0:
+                    time.sleep(min(wait, 0.01))
+            else:
+                nxt = pending.pop(0)
+                nxt.arrival_time = engine.clock()
+                engine.submit(nxt)
+    makespan = engine.clock()
+    engine.clock = None
+    outs = [engine.finished[r] for r in sorted(engine.finished)]
+    lat = np.array([o.finish_time - o.arrival_time for o in outs])
+    ttft = np.array([o.first_token_time - o.arrival_time for o in outs])
+    n_tok = sum(o.num_tokens for o in outs)
+    return {
+        "outputs": outs,
+        "makespan_s": makespan,
+        "tokens": n_tok,
+        "tok_per_s": n_tok / max(makespan, 1e-9),
+        "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
+        "latency_p95_s": float(np.quantile(lat, 0.95)) if len(lat) else 0.0,
+        "ttft_mean_s": float(ttft.mean()) if len(ttft) else 0.0,
+        "slot_utilization": engine.stats.slot_utilization,
+    }

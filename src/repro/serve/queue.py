@@ -1,0 +1,37 @@
+"""FIFO admission queue for the rollout engine.
+
+Requests wait here until a KV-cache slot frees up.  Admission order is
+strictly first-in-first-out: the engine always prefills the head of the
+queue into the lowest-numbered free slot, so under staggered arrivals no
+late request can overtake an earlier one (the fairness property
+``tests/test_serve_engine.py`` locks in).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from repro.serve.request import Request
+
+
+class RequestQueue:
+    """Bounded FIFO of waiting :class:`Request` objects."""
+
+    def __init__(self, max_waiting: Optional[int] = None):
+        self._q: deque[Request] = deque()
+        self.max_waiting = max_waiting
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def push(self, req: Request) -> None:
+        if self.max_waiting is not None and len(self._q) >= self.max_waiting:
+            raise RuntimeError(
+                f"queue full ({self.max_waiting} waiting); admit slower")
+        self._q.append(req)
+
+    def pop(self) -> Request:
+        return self._q.popleft()

@@ -1,0 +1,66 @@
+"""Request/response records for the continuous-batching rollout engine.
+
+A :class:`Request` is one generation job: a token prompt plus per-request
+decode budget (and optional sampling key / modality frontend embeddings).
+The engine turns it into a :class:`RequestOutput` whose per-token behaviour
+logprobs follow exactly the semantics of ``rl.rollout.generate`` — the
+token that triggers EOS is still recorded (mask 1), everything after it is
+dropped — so GRPO training consumes engine output unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int32 token sequence (already BOS'd / padded however
+    the caller likes — the engine treats it verbatim, like ``generate`` does
+    a batch row).  ``max_new_tokens`` is this request's decode budget;
+    generation stops at the first EOS or when the budget is exhausted,
+    whichever comes first.  ``arrival_time`` is only meaningful to trace
+    drivers (see ``engine.run_trace``); the engine itself is clock-free.
+    """
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    frontend: Optional[Any] = None       # (1, F, d) modality embeddings
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_budget(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclass
+class RequestOutput:
+    """Completed request: generated tokens + per-token behaviour logprobs."""
+    rid: int
+    prompt: np.ndarray
+    tokens: list[int] = field(default_factory=list)
+    logprobs: list[float] = field(default_factory=list)
+    finish_reason: str = ""              # "eos" | "length"
+    # trace timestamps (engine step counts and/or driver clock)
+    prefill_step: int = -1
+    finish_step: int = -1
+    arrival_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.tokens)

@@ -1,0 +1,86 @@
+"""Slot-based KV-cache manager for continuous batching.
+
+The pool is one stacked decode cache (``models/kvcache.py`` layout, batch
+axis = ``num_slots``) whose scalar ``index`` is widened to a per-slot
+vector, so every slot advances through its own sequence independently.
+Host-side bookkeeping tracks which request owns which slot; device-side,
+:func:`insert_cache` (fused into the engine's jitted admit step) writes a
+freshly prefilled single-request cache into a slot with one
+``dynamic_update_slice`` per leaf (a full-slot overwrite, so recycled
+slots can never leak a previous request's KV — and attention additionally
+masks positions >= the slot's live ``index``).
+
+Invariants (checked, and locked in by ``tests/test_serve_engine.py``):
+  * a slot is owned by at most one live request at a time;
+  * ``assign`` only takes free slots, ``release`` only live ones;
+  * recycling happens exactly once per finished request (on EOS or budget
+    exhaustion), after which the slot is immediately reusable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_axis(name: str) -> int:
+    """Pool batch axis per cache leaf: ``index`` is (num_slots,), every other
+    leaf keeps the kvcache.py layout with batch at axis 1."""
+    return 0 if name == "index" else 1
+
+
+def insert_cache(pool: dict, one: dict, slot) -> dict:
+    """Write a batch=1 cache pytree into ``pool`` at batch position ``slot``
+    (pure function — the engine fuses it into its jitted admit step)."""
+    out = {}
+    for name, leaf in pool.items():
+        upd = one[name]
+        if name == "index":
+            out[name] = leaf.at[slot].set(jnp.asarray(upd, leaf.dtype))
+        else:
+            start = (0, slot) + (0,) * (leaf.ndim - 2)
+            out[name] = jax.lax.dynamic_update_slice(
+                leaf, upd.astype(leaf.dtype), start)
+    return out
+
+
+class SlotManager:
+    """Fixed pool of ``num_slots`` batch slots over one stacked KV cache."""
+
+    def __init__(self, model, num_slots: int, max_seq_len: int):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        cache = model.init_cache(num_slots, max_seq_len)
+        cache["index"] = jnp.zeros((num_slots,), jnp.int32)
+        self.cache = cache
+        self.owner: list[Optional[int]] = [None] * num_slots  # rid per slot
+        self.free: list[int] = list(range(num_slots - 1, -1, -1))  # LIFO, 0 on top
+        self.events: list[tuple] = []     # ("assign"|"release", rid, slot)
+
+    # ---- bookkeeping -------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def assign(self, rid: int) -> int:
+        """Claim the lowest-numbered free slot for request ``rid``."""
+        if not self.free:
+            raise RuntimeError("no free slot")
+        slot = self.free.pop()
+        if self.owner[slot] is not None:   # invariant: never double-assign
+            raise AssertionError(f"slot {slot} already owned by "
+                                 f"{self.owner[slot]}")
+        self.owner[slot] = rid
+        self.events.append(("assign", rid, slot))
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Recycle a slot whose request finished (EOS or budget)."""
+        rid = self.owner[slot]
+        if rid is None:                    # invariant: release only live slots
+            raise AssertionError(f"slot {slot} is already free")
+        self.owner[slot] = None
+        self.free.append(slot)
+        self.events.append(("release", rid, slot))

@@ -1,0 +1,73 @@
+"""Optional-``hypothesis`` shim for the property-based test modules.
+
+When ``hypothesis`` is installed, this module simply re-exports its
+``given`` / ``settings`` / ``strategies``.  When it is not (the tier-1
+container pins only pytest + jax), a tiny deterministic stand-in replaces
+them: each ``@given`` test is run as a seeded-random sweep of
+``max_examples`` draws from the declared strategies, so the same value
+sequence is exercised on every run.  Only the strategy combinators used by
+this suite are implemented (integers / floats / booleans / tuples / lists /
+sampled_from).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+except ModuleNotFoundError:
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: random.Random):
+            return self._sample_fn(rng)
+
+    class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.sample(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", 20)
+                seed = zlib.crc32(fn.__name__.encode("utf-8"))
+                rng = random.Random(seed)
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in strats))
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner._max_examples = getattr(fn, "_max_examples", 20)
+            return runner
+        return deco

@@ -10,6 +10,7 @@ from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels import ref
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,H,Hkv,D,causal,window", [
     (2, 128, 4, 2, 64, True, None),
@@ -33,6 +34,7 @@ def test_flash_attention_sweep(B, S, H, Hkv, D, causal, window, dtype,
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,H,Hkv,D,length,bk", [
     (2, 1024, 8, 2, 64, 700, 128),
@@ -53,6 +55,7 @@ def test_decode_attention_sweep(B, S, H, Hkv, D, length, bk, dtype, rng_key):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,H,Dk,Dv,chunk", [
     (2, 100, 3, 16, 16, 32),
     (1, 64, 2, 64, 64, 64),
@@ -89,6 +92,7 @@ def test_kernel_matches_model_attention_path(rng_key):
                                rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,H,N,hd,chunk", [
     (2, 100, 3, 16, 32, 32),
     (1, 64, 2, 64, 64, 64),

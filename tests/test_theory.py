@@ -1,6 +1,6 @@
 """Theorem 1 (round-robin utilization optimality) as property-based tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.theory import (aggregate_utilization, check_theorem1,
                                make_group)
