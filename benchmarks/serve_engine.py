@@ -1,12 +1,20 @@
-"""Trace-driven rollout-serving benchmark: continuous batching vs static.
+"""Trace-driven rollout-serving benchmark: continuous batching vs static,
+contiguous vs paged KV.
 
 Replays a Poisson-arrival trace with heavy-tailed per-request decode
 budgets (the paper's long-tail response-length model, ``core.distributions``)
-through two servers sharing one model + weights:
+through three servers sharing one model + weights:
 
-  * **engine** — ``repro.serve.Engine``: FIFO queue over a fixed slot pool,
-    prefill-into-free-slot admission, slot recycle on EOS/budget, decode
-    batched across live slots (``--block-size`` fused steps per tick);
+  * **engine** — ``repro.serve.Engine``: FIFO queue over a fixed slot pool
+    of contiguous ``max_seq_len`` KV stripes, prefill-into-free-slot
+    admission, slot recycle on EOS/budget, decode batched across live
+    slots (``--block-size`` fused steps per tick);
+  * **paged** — the same engine on the block-pool KV layout at **equal KV
+    memory**: the pool holds exactly as many ``--kv-block-size``-token
+    blocks as ``--slots`` contiguous stripes, but requests reserve only
+    their own budget's worth of blocks, so the long-tail trace packs more
+    live requests into the same bytes (``--paged-slots-factor`` × more
+    decode slots are offered; blocks are the binding constraint);
   * **static** — the legacy ``serve_batch`` path: requests are grouped
     FIFO into fixed batches of ``--slots``; each batch waits for its last
     member to arrive, then runs prefill + a fixed ``--max-new``-step decode
@@ -18,8 +26,9 @@ by the budgets — the EOS channel is disabled in both servers (random
 weights emit EOS at random, which would make the two servers decode
 different useful-token totals and add noise to the comparison; EOS-driven
 slot recycling is covered by tests/test_serve_engine.py).  Reports token
-throughput, request latency (mean / p95), time-to-first-token and engine
-slot utilization.
+throughput, request latency (mean / p95), time-to-first-token, slot/block
+utilization and peak concurrency, and writes the whole report to
+``BENCH_serve.json`` at the repo root so the trajectory is tracked per PR.
 
     PYTHONPATH=src python benchmarks/serve_engine.py
     PYTHONPATH=src python benchmarks/serve_engine.py --arch rwkv6-7b
@@ -27,6 +36,7 @@ slot utilization.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -41,7 +51,7 @@ from repro.core.distributions import sample_response_fractions
 from repro.data import tokenizer as tok
 from repro.models import build_model
 from repro.rl import SamplerConfig, generate
-from repro.serve import Engine, EngineConfig, Request, run_trace
+from repro.serve import Engine, EngineConfig, Request, blocks_for, run_trace
 
 PROMPT_BUCKETS = (8, 16)
 NO_EOS = -1           # lengths come from budgets; see module docstring
@@ -109,6 +119,10 @@ def run_static(model, params, reqs, batch_size: int, max_new: int,
     }
 
 
+def _strip_outputs(report: dict) -> dict:
+    return {k: v for k, v in report.items() if k != "outputs"}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -122,11 +136,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=48,
                     help="static decode budget / engine per-request cap")
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block for the paged server")
+    ap.add_argument("--paged-slots-factor", type=int, default=2,
+                    help="paged server offers factor * --slots decode slots "
+                         "over the SAME KV memory (blocks bind admission)")
     ap.add_argument("--repeats", type=int, default=3,
                     help="run each server this many times and keep its best "
                          "(min-makespan) run — wall-clock noise rejection on "
                          "shared/throttled CPUs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"),
+        help="report path ('' disables)")
     args = ap.parse_args()
 
     model = build_model(args.arch, reduced=True)
@@ -135,18 +157,36 @@ def main():
     reqs = make_trace(rng, args.n_requests, args.rate, args.max_new)
     max_len = max(PROMPT_BUCKETS) + args.max_new
 
-    def fresh_engine():
+    # equal KV memory: the paged pool holds exactly --slots contiguous
+    # stripes' worth of block capacity; extra decode slots are nearly free
+    # (no per-slot stripe), so blocks are the binding admission resource.
+    # Architectures with no cache_seq leaves (rwkv6: pure recurrent state)
+    # have nothing to page — extra slots there would just be extra state
+    # memory, so the equal-memory comparison is skipped.
+    num_kv_blocks = args.slots * blocks_for(max_len, args.kv_block_size)
+    paged_slots = args.paged_slots_factor * args.slots
+    has_paged_kv = bool(model.paged_cache_names())
+
+    def fresh_engine(kv: str):
+        if kv == "paged":
+            return Engine(model, params, EngineConfig(
+                num_slots=paged_slots, max_seq_len=max_len, temperature=0.0,
+                eos_id=NO_EOS, block_size=args.block_size, kv_layout="paged",
+                kv_block_size=args.kv_block_size,
+                num_kv_blocks=num_kv_blocks))
         return Engine(model, params, EngineConfig(
             num_slots=args.slots, max_seq_len=max_len, temperature=0.0,
             eos_id=NO_EOS, block_size=args.block_size))
 
-    # ---- warmup: compile both prompt buckets for engine prefill AND the
-    # static generate path, plus the engine decode block
-    warm = fresh_engine()
-    for b in PROMPT_BUCKETS:
-        warm.submit(Request(rid=-b, prompt=np.full(b, tok.PAD, np.int32),
-                            max_new_tokens=1))
-    warm.run()
+    # ---- warmup: compile both prompt buckets for engine prefill (both KV
+    # layouts) AND the static generate path, plus the decode blocks
+    layouts = ("contiguous", "paged") if has_paged_kv else ("contiguous",)
+    for kv in layouts:
+        warm = fresh_engine(kv)
+        for b in PROMPT_BUCKETS:
+            warm.submit(Request(rid=-b, prompt=np.full(b, tok.PAD, np.int32),
+                                max_new_tokens=1))
+        warm.run()
     for b in PROMPT_BUCKETS:
         fake = [Request(rid=-100 - b - j, prompt=np.full(b, tok.PAD, np.int32),
                         max_new_tokens=1, arrival_time=0.0)
@@ -154,25 +194,76 @@ def main():
         run_static(model, params, fake, args.slots, args.max_new)
 
     # ---- timed runs (best-of-N per server; interleaved for fairness)
-    eng_runs, sta_runs = [], []
+    eng_runs, pag_runs, sta_runs = [], [], []
     for _ in range(max(args.repeats, 1)):
-        eng_runs.append(run_trace(fresh_engine(), reqs))
+        eng_runs.append(run_trace(fresh_engine("contiguous"), reqs))
+        if has_paged_kv:
+            pag_runs.append(run_trace(fresh_engine("paged"), reqs))
         sta_runs.append(run_static(model, params, reqs, args.slots,
                                    args.max_new, seed=args.seed))
     eng_res = min(eng_runs, key=lambda r: r["makespan_s"])
     sta_res = min(sta_runs, key=lambda r: r["makespan_s"])
+    # capacity numbers are properties of the trace, not of timing: report
+    # the max across repeats so a lucky fast run can't under-state them
+    eng_res["peak_active"] = max(r["peak_active"] for r in eng_runs)
+    pag_res = None
+    if has_paged_kv:
+        pag_res = min(pag_runs, key=lambda r: r["makespan_s"])
+        pag_res["peak_active"] = max(r["peak_active"] for r in pag_runs)
+        pag_res["peak_kv_blocks"] = max(r["peak_kv_blocks"]
+                                        for r in pag_runs)
+        pag_res["kv_block_utilization"] = (
+            pag_res["peak_kv_blocks"] / max(pag_res["kv_blocks_total"], 1))
 
     speedup = eng_res["tok_per_s"] / max(sta_res["tok_per_s"], 1e-9)
     print(f"# {args.arch}: {args.n_requests} reqs, {args.slots} slots, "
-          f"rate {args.rate}/s, cap {args.max_new}, "
-          f"block {args.block_size}")
-    for name, r in (("engine", eng_res), ("static", sta_res)):
+          f"rate {args.rate}/s, cap {args.max_new}, block {args.block_size}, "
+          f"kv-block {args.kv_block_size} ({num_kv_blocks} blocks = equal "
+          f"memory, paged offers {paged_slots} slots)")
+    servers = [("engine", eng_res), ("static", sta_res)]
+    if pag_res is not None:
+        servers.insert(1, ("paged ", pag_res))
+    for name, r in servers:
         print(f"{name}: {r['tokens']} tokens in {r['makespan_s']:.2f}s = "
               f"{r['tok_per_s']:.1f} tok/s | latency mean "
               f"{r['latency_mean_s']:.2f}s p95 {r['latency_p95_s']:.2f}s | "
               f"ttft {r['ttft_mean_s']:.2f}s")
     print(f"engine slot utilization: {eng_res['slot_utilization']:.1%}")
+    if pag_res is not None:
+        print(f"concurrency at equal KV memory: contiguous peaks at "
+              f"{eng_res['peak_active']} live requests (slot-capped at "
+              f"{args.slots}), paged at {pag_res['peak_active']} "
+              f"(block util {pag_res['kv_block_utilization']:.0%})")
+    else:
+        print(f"{args.arch} has no cache_seq leaves — nothing to page, "
+              f"equal-memory paged comparison skipped")
     print(f"throughput speedup (engine/static): {speedup:.2f}x")
+
+    if args.json:
+        report = {
+            "arch": args.arch,
+            "config": {
+                "n_requests": args.n_requests, "slots": args.slots,
+                "rate": args.rate, "max_new": args.max_new,
+                "block_size": args.block_size,
+                "kv_block_size": args.kv_block_size,
+                "num_kv_blocks": num_kv_blocks, "paged_slots": paged_slots,
+                "repeats": args.repeats, "seed": args.seed,
+            },
+            "engine": _strip_outputs(eng_res),
+            "static": _strip_outputs(sta_res),
+            "speedup_engine_vs_static": speedup,
+        }
+        if pag_res is not None:
+            report["paged"] = _strip_outputs(pag_res)
+            report["speedup_paged_vs_static"] = (
+                pag_res["tok_per_s"] / max(sta_res["tok_per_s"], 1e-9))
+            report["paged_extra_concurrency_at_equal_memory"] = (
+                pag_res["peak_active"] - eng_res["peak_active"])
+        path = os.path.abspath(args.json)
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {path}")
     return speedup
 
 

@@ -3,7 +3,8 @@ flash_attention (training), decode_attention (rollout, HBM-bound),
 rwkv6_scan (SSM archs). Each has a pure-jnp oracle in ref.py and a jit'd
 wrapper in ops.py; validation runs in interpret mode on CPU."""
 from repro.kernels.ops import (decode_attention_op, flash_attention_op,
-                               mamba2_scan_op, rwkv6_scan_op)
+                               mamba2_scan_op, paged_decode_attention_op,
+                               rwkv6_scan_op)
 
 __all__ = ["decode_attention_op", "flash_attention_op", "mamba2_scan_op",
-           "rwkv6_scan_op"]
+           "paged_decode_attention_op", "rwkv6_scan_op"]

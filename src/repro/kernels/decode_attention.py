@@ -1,11 +1,20 @@
-"""One-token GQA decode attention Pallas kernel — the memory-bandwidth-bound
+"""One-token GQA decode attention Pallas kernels — the memory-bandwidth-bound
 rollout hotspot (the phase RollMux offloads to the cheap pool).
 
-The KV cache streams through VMEM in (bk, D) blocks along the sequential nk
-grid axis; all G query heads of a KV group are processed together so each KV
-block is read from HBM exactly once (arithmetic intensity ~ 2G flops/byte —
-bandwidth-bound, which is precisely the paper's motivation for H20-class
-hardware). The live cache length arrives via scalar prefetch (SMEM).
+:func:`decode_attention` (contiguous): the KV cache streams through VMEM in
+(bk, D) blocks along the sequential nk grid axis; all G query heads of a KV
+group are processed together so each KV block is read from HBM exactly once
+(arithmetic intensity ~ 2G flops/byte — bandwidth-bound, which is precisely
+the paper's motivation for H20-class hardware). The live cache length
+arrives via scalar prefetch (SMEM).
+
+:func:`paged_decode_attention` (block-table): same online-softmax loop, but
+K/V live in a shared block pool (``models/kvcache.init_paged_cache``
+layout) and each batch row owns a *block table* of physical block ids.  The
+table is scalar-prefetched and consumed inside the BlockSpec ``index_map``,
+so the kernel DMAs exactly the row's own physical blocks straight out of
+the pool — no gather materialization, which is the entire point of paged
+serving: the contiguous view never has to exist in HBM.
 """
 from __future__ import annotations
 
@@ -100,4 +109,96 @@ def decode_attention(q, k, v, length, *, block_k: int = 512,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length, qt, kt, vt)
+    return out.reshape(B, H, D)
+
+
+def _paged_dec_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_s, l_s, acc_s, *, scale: float, bs: int, nb: int):
+    b, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # logical position of this table entry's tokens; masks both the live
+    # prefix and any null-block (table id 0) tail entries past the length
+    pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret: bool = True):
+    """Block-table GQA decode attention over a shared paged KV pool.
+
+    q: (B,H,D); k_pool/v_pool: (NB,bs,Hkv,D) — a pool of NB physical blocks
+    of bs token positions (entry 0 = null block); block_tables: (B,MB) int32
+    physical block ids per batch row (0 where unassigned); lengths: (B,)
+    live prefix per row.  Row b attends over logical positions
+    ``[0, lengths[b])`` of the sequence ``concat(pool[tables[b]])``.
+    Returns (B,H,D) — allclose to ``decode_attention`` on the gathered
+    contiguous cache (``kernels/ref.paged_decode_attention_ref``).
+    """
+    B, H, D = q.shape
+    NB, bs, Hkv, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    G = H // Hkv
+    scale = D ** -0.5
+    qt = q.reshape(B, Hkv, G, D)
+    kt = jnp.moveaxis(k_pool, 2, 1)                   # (NB, Hkv, bs, D)
+    vt = jnp.moveaxis(v_pool, 2, 1)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_paged_dec_kernel, scale=scale, bs=bs, nb=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                        # block tables, lengths
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, ki, tbl, lens: (b, h, 0, 0)),
+            # the paged DMA: this row's ki-th logical block comes from
+            # physical pool block tbl[b, ki]
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, ki, tbl, lens: (tbl[b, ki], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, ki, tbl, lens: (tbl[b, ki], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl, lengths, qt, kt, vt)
     return out.reshape(B, H, D)

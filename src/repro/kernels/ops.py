@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            paged_decode_attention)
 from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels.mamba2_scan import mamba2_scan
 
@@ -28,6 +29,11 @@ def flash_attention_op(q, k, v, *, causal=True, window=None,
 def decode_attention_op(q, k, v, length, *, block_k=512):
     return decode_attention(q, k, v, length, block_k=block_k,
                             interpret=DEFAULT_INTERPRET)
+
+
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths):
+    return paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                                  interpret=DEFAULT_INTERPRET)
 
 
 def rwkv6_scan_op(r, k, v, log_w, u, *, chunk=64):

@@ -46,6 +46,22 @@ def decode_attention_ref(q, k, v, length, *, scale=None):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               scale=None):
+    """Block-table decode oracle: gather each row's physical blocks into a
+    contiguous cache, then run :func:`decode_attention_ref` per row.
+
+    q: (B,H,D); k_pool/v_pool: (NB,bs,Hkv,D); block_tables: (B,MB) int32;
+    lengths: (B,). Returns (B,H,D)."""
+    from repro.models.attention import gather_blocks
+    k = jax.vmap(lambda t: gather_blocks(k_pool, t, axis=0))(block_tables)
+    v = jax.vmap(lambda t: gather_blocks(v_pool, t, axis=0))(block_tables)
+    return jax.vmap(
+        lambda qb, kb, vb, n: decode_attention_ref(
+            qb[None], kb[None], vb[None], n, scale=scale)[0]
+    )(q, k, v, lengths)
+
+
 def rwkv6_scan_ref(r, k, v, log_w, u):
     """RWKV6 WKV recurrence oracle. Shapes: (B,S,H,D); u: (H,D).
     Returns (y (B,S,H,D), state (B,H,D,D))."""

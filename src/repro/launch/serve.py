@@ -64,8 +64,11 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                      reduced: bool = True, max_new: int = 32,
                      temperature: float = 0.8, seed: int = 0,
                      num_slots: int | None = None, block_size: int = 1,
+                     kv: str = "contiguous", kv_block_size: int = 16,
+                     num_kv_blocks: int | None = None,
                      model=None, params=None):
-    """Continuous batching: requests stream through the slot-pool engine."""
+    """Continuous batching: requests stream through the slot-pool engine
+    (``kv="paged"`` serves from the shared block-pool KV layout)."""
     if model is None:
         model = build_model(arch, reduced=reduced)
     key = jax.random.PRNGKey(seed)
@@ -76,7 +79,9 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
     t0 = time.perf_counter()
     out = generate_continuous(model, params, prompts, key, sampler,
                               frontend=fr, num_slots=num_slots,
-                              block_size=block_size)
+                              block_size=block_size, kv_layout=kv,
+                              kv_block_size=kv_block_size,
+                              num_kv_blocks=num_kv_blocks)
     dt = time.perf_counter() - t0
     n_tok = int(out["mask"].sum())
     stats = out["engine_stats"]
@@ -84,7 +89,9 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
             "wall_s": dt, "tokens": n_tok,
             "tok_per_s": n_tok / max(dt, 1e-9),
             "slot_utilization": stats.slot_utilization,
-            "prefills": stats.prefills, "decode_steps": stats.steps}
+            "prefills": stats.prefills, "decode_steps": stats.steps,
+            "peak_active": stats.peak_active,
+            "peak_kv_blocks": stats.peak_kv_blocks}
 
 
 def _main():
@@ -97,6 +104,14 @@ def _main():
                     help="KV-cache slots (continuous only; default = batch)")
     ap.add_argument("--block-size", type=int, default=1,
                     help="decode steps fused per scheduler tick")
+    ap.add_argument("--kv", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV-cache layout (continuous engine only)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block (--kv paged)")
+    ap.add_argument("--num-kv-blocks", type=int, default=None,
+                    help="paged pool size in blocks (default: same memory "
+                         "as the contiguous slot pool)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
@@ -104,7 +119,9 @@ def _main():
     if args.engine == "continuous":
         res = serve_continuous(args.arch, prompts, max_new=args.max_new,
                                num_slots=args.slots,
-                               block_size=args.block_size)
+                               block_size=args.block_size, kv=args.kv,
+                               kv_block_size=args.kv_block_size,
+                               num_kv_blocks=args.num_kv_blocks)
         extra = (f", slot util {res['slot_utilization']:.0%}, "
                  f"{res['decode_steps']} decode steps")
     else:

@@ -6,6 +6,14 @@
 Runs the full synchronous on-policy loop the paper schedules:
 rollout (generation) -> reward (verifiable) -> GRPO advantages ->
 training step -> weight sync into the rollout actor.
+
+``--rollout engine`` routes the rollout phase through the
+continuous-batching serving engine (``rl.generate_continuous``) instead of
+the static-batch ``generate`` scan — the same engine the serving drivers
+and benchmarks exercise, so training traffic measures real serving
+behaviour (``--kv paged`` serves it from the block-pool KV layout).
+Greedy rollouts are token-identical across the two backends; sampled
+rollouts draw from a different (equally valid) key stream.
 """
 from __future__ import annotations
 
@@ -19,7 +27,8 @@ import numpy as np
 from repro.data import ArithmeticTask, tokenizer as tok
 from repro.models import build_model
 from repro.rl import (SamplerConfig, arithmetic_reward, generate,
-                      group_advantages, init_train_state, make_train_step)
+                      generate_continuous, group_advantages,
+                      init_train_state, make_train_step)
 from repro.train.optimizer import AdamWConfig, warmup_cosine
 
 
@@ -39,13 +48,22 @@ def build_train_batch(out, adv, prompt_len):
 def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  steps: int = 50, batch: int = 8, group: int = 4,
                  max_new: int = 8, lr: float = 3e-4, seed: int = 0,
-                 log_every: int = 5, model=None):
+                 log_every: int = 5, model=None, rollout: str = "static",
+                 temperature: float = 1.0, num_slots: int | None = None,
+                 engine_block_size: int = 1, kv: str = "contiguous",
+                 kv_block_size: int = 16):
+    """One synchronous GRPO loop.  ``rollout`` picks the generation backend:
+    ``"static"`` = one fixed-shape ``generate`` scan per step, ``"engine"``
+    = the continuous-batching serving engine (``num_slots`` KV slots,
+    ``kv`` layout)."""
+    if rollout not in ("static", "engine"):
+        raise ValueError(f"unknown rollout backend {rollout!r}")
     model = model or build_model(arch, reduced=reduced)
     key = jax.random.PRNGKey(seed)
     opt_cfg = AdamWConfig(lr=lr)
     state = init_train_state(model, key, opt_cfg)
     task = ArithmeticTask(seed=seed)
-    sampler = SamplerConfig(max_new_tokens=max_new, temperature=1.0)
+    sampler = SamplerConfig(max_new_tokens=max_new, temperature=temperature)
     train_step = jax.jit(make_train_step(model, opt_cfg,
                                          lr_schedule=warmup_cosine(lr, 10, steps)))
     history = []
@@ -53,7 +71,13 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
         b = task.sample_batch(batch)
         prompts = jnp.asarray(np.repeat(b.prompts, group, axis=0))
         key, k1 = jax.random.split(key)
-        out = generate(model, state["params"], prompts, k1, sampler)
+        if rollout == "engine":
+            out = generate_continuous(
+                model, state["params"], prompts, k1, sampler,
+                num_slots=num_slots, block_size=engine_block_size,
+                kv_layout=kv, kv_block_size=kv_block_size)
+        else:
+            out = generate(model, state["params"], prompts, k1, sampler)
         answers = [a for a in b.answers for _ in range(group)]
         rewards = arithmetic_reward(out["completions"], out["mask"], answers)
         adv = group_advantages(rewards, group)
@@ -80,11 +104,24 @@ def _main():
     ap.add_argument("--group", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--rollout", choices=("static", "engine"),
+                    default="static",
+                    help="rollout backend: static generate scan or the "
+                         "continuous-batching serving engine")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine KV slots (--rollout engine; default = "
+                         "batch * group)")
+    ap.add_argument("--kv", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="engine KV layout (--rollout engine)")
+    ap.add_argument("--kv-block-size", type=int, default=16)
     args = ap.parse_args()
     t0 = time.time()
     _, hist = run_training(args.arch, reduced=args.reduced, steps=args.steps,
                            batch=args.batch, group=args.group,
-                           max_new=args.max_new, lr=args.lr)
+                           max_new=args.max_new, lr=args.lr,
+                           rollout=args.rollout, num_slots=args.slots,
+                           kv=args.kv, kv_block_size=args.kv_block_size)
     print(f"done in {time.time()-t0:.1f}s; "
           f"final reward {hist[-1]['reward']:.3f}")
 

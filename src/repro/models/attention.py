@@ -6,6 +6,15 @@ Two compute paths:
     a scan over Q blocks) bounding activation memory for 32k+ prefill. The
     Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-tiled
     version of the same algorithm.
+
+Paged decode: when the KV cache lives in a shared block pool (see
+``repro.models.kvcache.init_paged_cache``), :func:`gather_blocks`
+materializes a slot's contiguous sequence view from its block table.
+Because the gather is a pure permutation-copy, running the contiguous
+decode steps below on that view is value-identical to the slot-stripe
+layout — the contiguous path stays the reference the paged engine and the
+block-table Pallas kernel (``repro.kernels.decode_attention``) are checked
+against.
 """
 from __future__ import annotations
 
@@ -19,6 +28,21 @@ from repro.models.common import apply_mrope, apply_rope, dense_init, rms_norm
 
 NEG_INF = -1.0e30
 DIRECT_MAX_KV = 4096  # direct path threshold
+
+
+def gather_blocks(pool, table, axis: int = 0):
+    """Materialize a contiguous sequence view from a paged KV pool.
+
+    ``pool`` carries a (num_blocks, block_size) axis pair starting at
+    ``axis``; ``table`` is a 1-D int32 vector of physical block ids (0 = the
+    all-garbage null block — callers mask positions past the live length, so
+    its contents are never observable).  Returns ``pool`` with the two block
+    axes merged into one sequence axis of ``len(table) * block_size``.
+    """
+    g = jnp.take(pool, table, axis=axis)
+    shape = g.shape[:axis] + (g.shape[axis] * g.shape[axis + 1],) \
+        + g.shape[axis + 2:]
+    return g.reshape(shape)
 
 
 # ---------------------------------------------------------------------------

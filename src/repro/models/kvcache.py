@@ -2,9 +2,19 @@
 
 Cache sequence dims carry the ``cache_seq`` logical axis → sharded over the
 ``model`` mesh axis (context parallelism for decode); batch over ``data``.
+
+Two serving layouts are built from the same specs:
+  * contiguous (:func:`init_cache`) — one ``max_len`` stripe per batch row;
+  * paged (:func:`init_paged_cache`) — every leaf whose spec carries the
+    ``cache_seq`` axis is re-laid-out as a shared pool of fixed-size blocks
+    ``(layers, num_blocks + 1, block_size, ...)`` (block 0 is the null
+    block), while seq-less leaves (SSM/conv state, cross-attention KV) stay
+    per-slot.  A slot's logical sequence is then the concatenation of the
+    blocks its block table names — see ``repro.serve.slots``.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -80,6 +90,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
         } | idx
 
     raise ValueError(f"no cache for family {cfg.family!r}")
+
+
+def paged_names(cfg: ModelConfig) -> tuple[str, ...]:
+    """Cache leaves that get block-paged: those with a ``cache_seq`` axis.
+
+    Families without such leaves (rwkv6: pure recurrent state) page nothing
+    — their paged layout degenerates to the contiguous one and a request
+    needs zero KV blocks.
+    """
+    return tuple(sorted(k for k, ax in cache_specs(cfg).items()
+                        if ax and "cache_seq" in ax))
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, max_len: int, *,
+                     block_size: int, num_blocks: int) -> dict:
+    """Zeroed paged decode cache: ``cache_seq`` leaves become block pools
+    ``(L, num_blocks + 1, block_size, ...)`` shared across slots (entry 0 is
+    the null block), everything else keeps the per-slot layout. ``index``
+    is widened to a per-slot vector, as the serving engine expects."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, num_slots, max_len))
+    paged = set(paged_names(cfg))
+    out = {}
+    for name, sd in shapes.items():
+        if name == "index":
+            out[name] = jnp.zeros((num_slots,), jnp.int32)
+        elif name in paged:
+            # (L, B, S, *rest) -> (L, num_blocks + 1, block_size, *rest)
+            out[name] = jnp.zeros(
+                (sd.shape[0], num_blocks + 1, block_size) + sd.shape[3:],
+                sd.dtype)
+        else:
+            out[name] = jnp.zeros(sd.shape, sd.dtype)
+    return out
 
 
 def cache_specs(cfg: ModelConfig) -> dict:

@@ -37,6 +37,15 @@ class Model:
     def init_cache(self, batch: int, max_len: int, *, ring: bool = False):
         return kvcache.init_cache(self.cfg, batch, max_len, ring=ring)
 
+    def init_paged_cache(self, num_slots: int, max_len: int, *,
+                         block_size: int, num_blocks: int) -> dict:
+        return kvcache.init_paged_cache(self.cfg, num_slots, max_len,
+                                        block_size=block_size,
+                                        num_blocks=num_blocks)
+
+    def paged_cache_names(self) -> tuple[str, ...]:
+        return kvcache.paged_names(self.cfg)
+
     def cache_logical_specs(self) -> dict:
         return kvcache.cache_specs(self.cfg)
 

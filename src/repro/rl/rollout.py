@@ -69,7 +69,9 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
 
 def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         frontend=None, *, num_slots: int | None = None,
-                        block_size: int = 1):
+                        block_size: int = 1, kv_layout: str = "contiguous",
+                        kv_block_size: int = 16,
+                        num_kv_blocks: int | None = None):
     """Rollout-phase executor backed by the continuous-batching engine.
 
     Drop-in alternative to :func:`generate`: same inputs, same output dict
@@ -79,6 +81,9 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     ``num_slots`` KV-cache slots (default: one per request) — with fewer
     slots than requests the engine queues and recycles, which is the
     serving regime the paper's rollout pool actually runs in.
+    ``kv_layout="paged"`` serves from the block-pool KV layout
+    (``kv_block_size`` tokens per block, ``num_kv_blocks`` pool size) —
+    same outputs, heterogeneous lengths share memory.
 
     Greedy decoding (``temperature=0``) is token- and logprob-identical to
     per-request :func:`generate`; sampled decoding draws per-step keys from
@@ -96,7 +101,8 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         num_slots=B if num_slots is None else num_slots,
         max_seq_len=Sp + T,
         eos_id=sampler.eos_id, temperature=sampler.temperature,
-        block_size=block_size), rng=rng)
+        block_size=block_size, kv_layout=kv_layout,
+        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks), rng=rng)
     for i in range(B):
         fr = None if frontend is None else frontend[i:i + 1]
         engine.submit(Request(rid=i, prompt=prompts_np[i], max_new_tokens=T,

@@ -2,15 +2,26 @@
 
 The paper's rollout phase is memory-bandwidth-bound *serving*; this package
 makes it a first-class serving problem: ``Request``s flow through a FIFO
-``RequestQueue`` into a fixed pool of KV-cache slots (``SlotManager``) and
-the ``Engine`` interleaves prefill-into-free-slot admission with batched
-single-token decode across all live slots (in-flight batching).  See
-``repro.serve.engine`` for the scheduling model and exactness guarantees.
+``RequestQueue`` into a fixed pool of KV-cache slots and the ``Engine``
+interleaves prefill-into-free-slot admission with batched single-token
+decode across all live slots (in-flight batching).
+
+KV memory comes in two layouts.  ``SlotManager`` (contiguous) gives every
+slot a full ``max_seq_len`` stripe; ``PagedSlotManager`` shares a pool of
+fixed-size blocks (``BlockAllocator``: ref-counted free list, worst-case
+reservation at admit, on-demand materialization as ``index`` crosses block
+boundaries) so long-tail response lengths stop stranding memory — the same
+KV bytes admit strictly more concurrent requests.  Both layouts produce
+token/logprob-identical greedy output.  See ``repro.serve.engine`` for the
+scheduling model and exactness guarantees, ``repro.serve.slots`` for the
+layout invariants.
 """
+from repro.serve.blocks import BlockAllocator, blocks_for
 from repro.serve.engine import Engine, EngineConfig, EngineStats, run_trace
 from repro.serve.queue import RequestQueue
 from repro.serve.request import Request, RequestOutput
-from repro.serve.slots import SlotManager
+from repro.serve.slots import PagedSlotManager, SlotManager
 
-__all__ = ["Engine", "EngineConfig", "EngineStats", "run_trace",
-           "RequestQueue", "Request", "RequestOutput", "SlotManager"]
+__all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
+           "EngineStats", "run_trace", "RequestQueue", "Request",
+           "RequestOutput", "PagedSlotManager", "SlotManager"]

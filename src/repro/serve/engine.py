@@ -20,6 +20,17 @@ logprob (the equivalence ``tests/test_serve_engine.py`` asserts).
 amortise per-step dispatch (scheduling decisions then happen every K
 tokens); ``block_size=1`` is exact per-token continuous batching.
 
+Two KV layouts (``EngineConfig.kv_layout``): **contiguous** gives every
+slot a full ``max_seq_len`` stripe; **paged** stores ``cache_seq`` leaves
+in a shared pool of ``kv_block_size``-token blocks
+(:class:`~repro.serve.slots.PagedSlotManager`).  Paged admission gates on
+*block* availability as well as slots (a request reserves only what its
+own budget can touch), block tables grow on demand as ``index`` crosses
+block boundaries, and decode runs the same model step over a gathered
+per-slot view of the block table — a pure permutation-copy, so paged
+output is token/logprob-identical to contiguous (locked in by
+``tests/test_serve_paged.py``).
+
 Compilation notes: jitted prefill / admit / decode-block functions are
 cached per (model, max_seq_len, temperature, eos_id) — engines with the
 same serving shape share compilations (cheap to construct per trace), and
@@ -38,9 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import tokenizer as tok
+from repro.models.attention import gather_blocks
+from repro.serve.blocks import blocks_for
 from repro.serve.queue import RequestQueue
 from repro.serve.request import Request, RequestOutput
-from repro.serve.slots import SlotManager, _batch_axis, insert_cache
+from repro.serve.slots import (PagedSlotManager, SlotManager, _batch_axis,
+                               insert_cache)
 
 
 @dataclass(frozen=True)
@@ -51,6 +65,10 @@ class EngineConfig:
     temperature: float = 0.0          # 0 => greedy
     block_size: int = 1               # decode steps fused per scheduler tick
     max_waiting: Optional[int] = None
+    kv_layout: str = "contiguous"     # "contiguous" | "paged"
+    kv_block_size: int = 16           # tokens per KV block (paged only)
+    num_kv_blocks: Optional[int] = None   # paged pool size (default: same
+                                          # memory as contiguous num_slots)
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -59,6 +77,10 @@ class EngineConfig:
             raise ValueError("block_size must be >= 1")
         if self.max_seq_len < 2:
             raise ValueError("max_seq_len must cover prompt + decode")
+        if self.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r}")
+        if self.kv_block_size < 1:
+            raise ValueError("kv_block_size must be >= 1")
 
 
 @dataclass
@@ -68,6 +90,8 @@ class EngineStats:
     prefills: int = 0
     recorded_tokens: int = 0          # useful (mask=1) tokens produced
     slot_steps: int = 0               # num_slots * steps (capacity offered)
+    peak_active: int = 0              # max concurrently live requests
+    peak_kv_blocks: int = 0           # max KV blocks in use (paged only)
 
     @property
     def slot_utilization(self) -> float:
@@ -136,6 +160,122 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
     return jax.jit(admit_fn), jax.jit(block_fn)
 
 
+@functools.lru_cache(maxsize=32)
+def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
+                      temperature: float, eos_id: int):
+    """Jitted admit / decode-block for the paged KV layout.
+
+    Admission scatters a prefilled contiguous cache into the slot's block
+    table; decode gathers each live slot's blocks into a contiguous view,
+    runs the model's own single-token step on it (value-identical to the
+    contiguous path — the gather is a permutation-copy), then scatters back
+    only the block that step wrote.  Dead / over-budget slots carry
+    all-zero table rows, so their writes land in the null block 0.
+    """
+    paged = frozenset(model.paged_cache_names())
+    MB = blocks_for(max_seq_len, kv_block_size)   # table entries per slot
+    S_view = MB * kv_block_size                   # gathered view length
+
+    def prefill_fn(params, prompt, frontend):
+        cache = model.init_cache(1, max_seq_len)
+        logits, cache = model.prefill(params, prompt, cache,
+                                      frontend=frontend)
+        return logits[0], cache
+
+    def admit_fn(params, prompt, frontend, pool, table_row, slot,
+                 last_logits, alive, remaining, budget):
+        """Prefill one request and scatter it into its block table (plus the
+        slot-resident leaf rows) in a single dispatch."""
+        logits, one = prefill_fn(params, prompt, frontend)
+        out = {}
+        for name, leaf in pool.items():
+            upd = one[name]
+            if name == "index":
+                out[name] = leaf.at[slot].set(jnp.asarray(upd, leaf.dtype))
+            elif name in paged:
+                u = upd[:, 0]                               # (L, S, *rest)
+                pad = [(0, 0)] * u.ndim
+                pad[1] = (0, S_view - u.shape[1])
+                u = jnp.pad(u, pad).reshape(
+                    u.shape[0], MB, kv_block_size, *u.shape[2:])
+                # unassigned table entries are 0: their (all-zero) blocks
+                # fall through to the null block
+                out[name] = leaf.at[:, table_row].set(u.astype(leaf.dtype))
+            else:
+                start = (0, slot) + (0,) * (leaf.ndim - 2)
+                out[name] = jax.lax.dynamic_update_slice(
+                    leaf, upd.astype(leaf.dtype), start)
+        return (out, last_logits.at[slot].set(logits),
+                alive.at[slot].set(True), remaining.at[slot].set(budget))
+
+    cache_axes = {k: (0 if k == "index" else (None if k in paged else 1))
+                  for k in model.cache_logical_specs()}
+    slot_axes = {k: ax for k, ax in cache_axes.items() if k not in paged}
+
+    def decode_one(params, token, cache, table_row):
+        # gather this slot's blocks into a contiguous (batch=1) view, run
+        # the model's own decode step, and hand back the written block
+        old_idx = cache["index"]
+        cache_b = {}
+        for k, v in cache.items():
+            if k == "index":
+                cache_b[k] = v
+            elif k in paged:
+                # (L, S_view, *rest) with the batch=1 axis re-grown
+                cache_b[k] = gather_blocks(v, table_row, axis=1)[:, None]
+            else:
+                cache_b[k] = v[:, None]
+        logits, cache_b = model.decode_step(
+            params, jnp.reshape(token, (1, 1)), cache_b)
+        b = jnp.minimum(old_idx // kv_block_size, MB - 1)
+        pid = jnp.take(table_row, b)        # 0 (null) if not materialized
+        out, written = {}, {}
+        for k, v in cache_b.items():
+            if k == "index":
+                out[k] = v
+            elif k in paged:
+                written[k] = jax.lax.dynamic_slice_in_dim(
+                    v[:, 0], b * kv_block_size, kv_block_size, axis=1)
+            else:
+                out[k] = v[:, 0]
+        return logits[0], out, written, pid
+
+    pool_decode = jax.vmap(
+        decode_one, in_axes=(None, 0, cache_axes, 0),
+        out_axes=(0, slot_axes, {k: 0 for k in paged}, 0))
+
+    def sample(logits, key):
+        if temperature == 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def block_fn(params, last_logits, cache, tables, alive, remaining, keys):
+        def step(carry, key):
+            logits, cache, alive, remaining = carry
+            nxt = sample(logits, key)                       # (N,)
+            logp = jax.nn.log_softmax(logits, -1)
+            tok_logp = jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+            rec = alive & (remaining > 0)
+            logits, slot_cache, written, pids = pool_decode(
+                params, nxt, cache, tables)
+            new_cache = dict(slot_cache)
+            for k in paged:
+                blk = jnp.moveaxis(written[k], 0, 1)        # (L, N, bs, ...)
+                # distinct live slots own distinct blocks, so pids collide
+                # only at the null block 0 (dead slots) — a don't-care write
+                new_cache[k] = cache[k].at[:, pids].set(blk)
+            alive = alive & (nxt != eos_id)
+            remaining = remaining - rec.astype(jnp.int32)
+            return (logits, new_cache, alive, remaining), (nxt, tok_logp, rec)
+
+        carry, out = jax.lax.scan(
+            step, (last_logits, cache, alive, remaining), keys)
+        return carry, out                   # out: (toks, logps, recs) (K,N)
+
+    return jax.jit(admit_fn), jax.jit(block_fn)
+
+
 class Engine:
     """Continuous-batching generation engine over a fixed slot pool."""
 
@@ -145,19 +285,31 @@ class Engine:
         self.params = params
         self.config = config
         self.queue = RequestQueue(config.max_waiting)
-        self.slots = SlotManager(model, config.num_slots, config.max_seq_len)
+        self.paged = config.kv_layout == "paged"
+        if self.paged:
+            self.slots = PagedSlotManager(
+                model, config.num_slots, config.max_seq_len,
+                block_size=config.kv_block_size,
+                num_blocks=config.num_kv_blocks)
+            self._admit_fn, self._block = _paged_engine_fns(
+                model, config.max_seq_len, config.kv_block_size,
+                config.temperature, config.eos_id)
+        else:
+            self.slots = SlotManager(model, config.num_slots,
+                                     config.max_seq_len)
+            self._admit_fn, self._block = _engine_fns(
+                model, config.max_seq_len, config.temperature, config.eos_id)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         N = config.num_slots
         self._last_logits = jnp.zeros((N, model.cfg.vocab_size), jnp.float32)
         self._alive = jnp.zeros((N,), bool)
         self._remaining = jnp.zeros((N,), jnp.int32)
         self._zero_keys = jnp.zeros((config.block_size, 2), jnp.uint32)
+        self._host_index = [0] * N    # per-slot sequence position (host view)
         self._active: dict[int, tuple[Request, RequestOutput]] = {}
         self.finished: dict[int, RequestOutput] = {}
         self.stats = EngineStats()
         self.clock = None             # optional wall-clock for trace drivers
-        self._admit_fn, self._block = _engine_fns(
-            model, config.max_seq_len, config.temperature, config.eos_id)
 
     # ---- submission --------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -166,6 +318,12 @@ class Engine:
                 f"request {req.rid}: prompt {req.prompt_len} + budget "
                 f"{req.max_new_tokens} exceeds max_seq_len "
                 f"{self.config.max_seq_len}")
+        if self.paged:
+            need = self.slots.blocks_required(req.total_budget)
+            if need > self.slots.alloc.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks but the "
+                    f"pool has {self.slots.alloc.num_blocks}")
         self.queue.push(req)
 
     @property
@@ -177,22 +335,50 @@ class Engine:
         return not self.queue and not self._active
 
     # ---- scheduler ---------------------------------------------------------
+    def _can_admit_head(self) -> bool:
+        """FIFO head admission gate: a free slot, and (paged) enough
+        uncommitted KV blocks for the head's worst-case budget.  The head
+        never gets skipped — arrival order is preserved even when a later,
+        smaller request would fit."""
+        if not self.queue:
+            return False
+        if self.paged:
+            return self.slots.can_admit(self.queue.peek().total_budget)
+        return bool(self.slots.num_free)
+
     def _admit(self) -> None:
         """Prefill queued requests into free slots (FIFO, lowest slot first)."""
-        while self.queue and self.slots.num_free:
+        while self._can_admit_head():
             req = self.queue.pop()
-            slot = self.slots.assign(req.rid)
-            (self.slots.cache, self._last_logits, self._alive,
-             self._remaining) = self._admit_fn(
-                self.params, jnp.asarray(req.prompt)[None], req.frontend,
-                self.slots.cache, jnp.asarray(slot, jnp.int32),
-                self._last_logits, self._alive, self._remaining,
-                jnp.asarray(req.max_new_tokens, jnp.int32))
+            if self.paged:
+                slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
+                                         total_budget=req.total_budget)
+                row = self.slots.device_tables()[slot]
+                (self.slots.cache, self._last_logits, self._alive,
+                 self._remaining) = self._admit_fn(
+                    self.params, jnp.asarray(req.prompt)[None], req.frontend,
+                    self.slots.cache, row, jnp.asarray(slot, jnp.int32),
+                    self._last_logits, self._alive, self._remaining,
+                    jnp.asarray(req.max_new_tokens, jnp.int32))
+            else:
+                slot = self.slots.assign(req.rid)
+                (self.slots.cache, self._last_logits, self._alive,
+                 self._remaining) = self._admit_fn(
+                    self.params, jnp.asarray(req.prompt)[None], req.frontend,
+                    self.slots.cache, jnp.asarray(slot, jnp.int32),
+                    self._last_logits, self._alive, self._remaining,
+                    jnp.asarray(req.max_new_tokens, jnp.int32))
+            self._host_index[slot] = req.prompt_len
             out = RequestOutput(rid=req.rid, prompt=req.prompt,
                                 prefill_step=self.stats.steps,
                                 arrival_time=req.arrival_time)
             self._active[slot] = (req, out)
             self.stats.prefills += 1
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     len(self._active))
+        if self.paged:
+            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+                                            self.slots.blocks_in_use)
 
     def _finalize(self, slot: int) -> None:
         req, out = self._active[slot]
@@ -217,13 +403,28 @@ class Engine:
         else:
             self._rng, sub = jax.random.split(self._rng)
             keys = jax.random.split(sub, self.config.block_size)
-        (self._last_logits, self.slots.cache, self._alive, self._remaining), \
-            out = self._block(self.params, self._last_logits,
-                              self.slots.cache, self._alive,
-                              self._remaining, keys)
+        K = self.config.block_size
+        if self.paged:
+            # materialize blocks this decode block will write into
+            # (allocation stays within each request's admit-time reservation)
+            for slot in self._active:
+                self.slots.ensure(slot, self._host_index[slot] + K - 1)
+            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+                                            self.slots.blocks_in_use)
+            (self._last_logits, self.slots.cache, self._alive,
+             self._remaining), out = self._block(
+                self.params, self._last_logits, self.slots.cache,
+                self.slots.device_tables(), self._alive, self._remaining,
+                keys)
+        else:
+            (self._last_logits, self.slots.cache, self._alive,
+             self._remaining), out = self._block(
+                self.params, self._last_logits, self.slots.cache,
+                self._alive, self._remaining, keys)
+        for slot in self._active:
+            self._host_index[slot] += K
         toks, logps, recs, alive, remaining = jax.device_get(
             (*out, self._alive, self._remaining))
-        K = self.config.block_size
         self.stats.steps += K
         self.stats.blocks += 1
         self.stats.slot_steps += K * self.config.num_slots
@@ -282,7 +483,7 @@ def run_trace(engine: Engine, requests: list[Request],
     lat = np.array([o.finish_time - o.arrival_time for o in outs])
     ttft = np.array([o.first_token_time - o.arrival_time for o in outs])
     n_tok = sum(o.num_tokens for o in outs)
-    return {
+    report = {
         "outputs": outs,
         "makespan_s": makespan,
         "tokens": n_tok,
@@ -291,4 +492,12 @@ def run_trace(engine: Engine, requests: list[Request],
         "latency_p95_s": float(np.quantile(lat, 0.95)) if len(lat) else 0.0,
         "ttft_mean_s": float(ttft.mean()) if len(ttft) else 0.0,
         "slot_utilization": engine.stats.slot_utilization,
+        "peak_active": engine.stats.peak_active,
     }
+    if engine.paged:
+        total = engine.slots.alloc.num_blocks
+        report["kv_blocks_total"] = total
+        report["peak_kv_blocks"] = engine.stats.peak_kv_blocks
+        report["kv_block_utilization"] = (
+            engine.stats.peak_kv_blocks / max(total, 1))
+    return report

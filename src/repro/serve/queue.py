@@ -33,5 +33,9 @@ class RequestQueue:
                 f"queue full ({self.max_waiting} waiting); admit slower")
         self._q.append(req)
 
+    def peek(self) -> Request:
+        """Head of the queue without removing it (admission-gate check)."""
+        return self._q[0]
+
     def pop(self) -> Request:
         return self._q.popleft()

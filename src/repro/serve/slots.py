@@ -1,20 +1,39 @@
-"""Slot-based KV-cache manager for continuous batching.
+"""Slot-based KV-cache managers for continuous batching.
 
-The pool is one stacked decode cache (``models/kvcache.py`` layout, batch
-axis = ``num_slots``) whose scalar ``index`` is widened to a per-slot
-vector, so every slot advances through its own sequence independently.
-Host-side bookkeeping tracks which request owns which slot; device-side,
-:func:`insert_cache` (fused into the engine's jitted admit step) writes a
-freshly prefilled single-request cache into a slot with one
-``dynamic_update_slice`` per leaf (a full-slot overwrite, so recycled
-slots can never leak a previous request's KV — and attention additionally
-masks positions >= the slot's live ``index``).
+Two memory layouts back the same slot abstraction:
 
-Invariants (checked, and locked in by ``tests/test_serve_engine.py``):
+**Contiguous** (:class:`SlotManager`) — the pool is one stacked decode
+cache (``models/kvcache.py`` layout, batch axis = ``num_slots``) whose
+scalar ``index`` is widened to a per-slot vector, so every slot advances
+through its own sequence independently; each slot owns a full
+``max_seq_len`` sequence stripe.  Host-side bookkeeping tracks which
+request owns which slot; device-side, :func:`insert_cache` (fused into the
+engine's jitted admit step) writes a freshly prefilled single-request cache
+into a slot with one ``dynamic_update_slice`` per leaf (a full-slot
+overwrite, so recycled slots can never leak a previous request's KV — and
+attention additionally masks positions >= the slot's live ``index``).
+
+**Paged** (:class:`PagedSlotManager`) — ``cache_seq`` leaves live in a
+shared pool of ``num_blocks`` fixed-size blocks (``kvcache.
+init_paged_cache``); each live slot holds a *block table*, a row of
+physical block ids whose concatenation is its logical sequence.  Blocks
+are reserved at admit (worst case for the request's total budget, so
+on-demand growth can never fail) but materialized lazily as the slot's
+``index`` crosses block boundaries (:meth:`PagedSlotManager.ensure`).
+Unassigned / recycled table entries point at the null block 0, so a dead
+slot's in-flight decode writes land in garbage nothing reads.  Because a
+request only commits blocks for *its own* budget rather than a
+``max_seq_len`` stripe, heterogeneous long-tail lengths share the pool —
+the same KV bytes admit strictly more concurrent requests.
+
+Invariants (checked, and locked in by ``tests/test_serve_engine.py`` /
+``tests/test_serve_paged.py``):
   * a slot is owned by at most one live request at a time;
   * ``assign`` only takes free slots, ``release`` only live ones;
   * recycling happens exactly once per finished request (on EOS or budget
-    exhaustion), after which the slot is immediately reusable.
+    exhaustion), after which the slot is immediately reusable;
+  * (paged) live slots' block tables are disjoint, released rows are
+    zeroed, and no block leaks or is double-freed across interleavings.
 """
 from __future__ import annotations
 
@@ -22,6 +41,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.blocks import BlockAllocator, blocks_for
 
 
 def _batch_axis(name: str) -> int:
@@ -84,3 +106,126 @@ class SlotManager:
         self.owner[slot] = None
         self.free.append(slot)
         self.events.append(("release", rid, slot))
+
+
+class PagedSlotManager:
+    """Slot pool whose ``cache_seq`` KV lives in shared fixed-size blocks.
+
+    Slot bookkeeping (``assign``/``release``/``owner``/``events``) mirrors
+    :class:`SlotManager`; on top of it each live slot carries a block table
+    row and a :class:`~repro.serve.blocks.BlockAllocator` reservation sized
+    for its request's total budget.  ``num_blocks`` defaults to the
+    contiguous pool's footprint (``num_slots`` full stripes), in which case
+    admission never gates on blocks — shrink it (or raise ``num_slots``)
+    to share memory across heterogeneous lengths.
+    """
+
+    def __init__(self, model, num_slots: int, max_seq_len: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        self.block_size = block_size
+        self.max_blocks = blocks_for(max_seq_len, block_size)  # per slot
+        if num_blocks is None:
+            num_blocks = num_slots * self.max_blocks
+        self.paged_names = model.paged_cache_names()
+        self.alloc = BlockAllocator(num_blocks, block_size)
+        self.cache = model.init_paged_cache(
+            num_slots, max_seq_len, block_size=block_size,
+            num_blocks=num_blocks)
+        self.owner: list[Optional[int]] = [None] * num_slots
+        self.free: list[int] = list(range(num_slots - 1, -1, -1))
+        self.events: list[tuple] = []
+        self.tables = np.zeros((num_slots, self.max_blocks), np.int32)
+        self.nblocks = [0] * num_slots     # materialized blocks per slot
+        self._tables_dev = jnp.asarray(self.tables)
+        self._dirty = False
+
+    # ---- bookkeeping -------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.alloc.num_live
+
+    def blocks_required(self, total_budget: int) -> int:
+        """Worst-case blocks a request with this prompt+decode budget can
+        write (0 for families with no ``cache_seq`` leaves, e.g. rwkv6)."""
+        if not self.paged_names:
+            return 0
+        return blocks_for(min(total_budget, self.max_seq_len),
+                          self.block_size)
+
+    def can_admit(self, total_budget: int) -> bool:
+        return bool(self.free) and self.alloc.can_reserve(
+            self.blocks_required(total_budget))
+
+    def assign(self, rid: int, *, prompt_len: int, total_budget: int) -> int:
+        """Claim a slot + block reservation; materialize the prompt's blocks."""
+        if not self.free:
+            raise RuntimeError("no free slot")
+        slot = self.free.pop()
+        if self.owner[slot] is not None:
+            raise AssertionError(f"slot {slot} already owned by "
+                                 f"{self.owner[slot]}")
+        self.alloc.reserve(rid, self.blocks_required(total_budget))
+        self.owner[slot] = rid
+        self.events.append(("assign", rid, slot))
+        if self.paged_names and prompt_len:
+            self.ensure(slot, prompt_len - 1)
+        return slot
+
+    def ensure(self, slot: int, upto_pos: int) -> None:
+        """Materialize blocks so the slot's table covers sequence positions
+        ``<= upto_pos``, clamped to the request's quota (writes past the
+        budget fall through to the null block by design)."""
+        if not self.paged_names:
+            return
+        rid = self.owner[slot]
+        if rid is None:
+            raise AssertionError(f"ensure on free slot {slot}")
+        want = min(upto_pos // self.block_size + 1, self.max_blocks)
+        while self.nblocks[slot] < want and self.alloc.quota.get(rid, 0) > 0:
+            bid = self.alloc.allocate(rid)
+            self.tables[slot, self.nblocks[slot]] = bid
+            self.nblocks[slot] += 1
+            self._dirty = True
+
+    def release(self, slot: int) -> None:
+        """Recycle a finished slot: free its blocks, zero its table row."""
+        rid = self.owner[slot]
+        if rid is None:
+            raise AssertionError(f"slot {slot} is already free")
+        self.alloc.free_all(rid)
+        self.tables[slot, :] = 0           # dead slot writes -> null block
+        self.nblocks[slot] = 0
+        self._dirty = True
+        self.owner[slot] = None
+        self.free.append(slot)
+        self.events.append(("release", rid, slot))
+
+    def device_tables(self) -> jax.Array:
+        """Device copy of the block tables (re-uploaded only when changed)."""
+        if self._dirty:
+            self._tables_dev = jnp.asarray(self.tables)
+            self._dirty = False
+        return self._tables_dev
+
+    def check(self) -> None:
+        """Cross-structure invariants (used by the property tests)."""
+        self.alloc.check()
+        live_rows = [self.tables[s, :self.nblocks[s]]
+                     for s in range(self.num_slots) if self.owner[s] is not None]
+        flat = [int(b) for row in live_rows for b in row]
+        assert 0 not in flat, "live table row points at the null block"
+        assert len(set(flat)) == len(flat), "block shared across slots"
+        assert len(flat) == self.alloc.num_live, \
+            "materialized blocks out of sync with tables"
+        for s in range(self.num_slots):
+            if self.owner[s] is None:
+                assert not self.tables[s].any(), "released row not zeroed"
+            else:
+                assert not self.tables[s, self.nblocks[s]:].any()

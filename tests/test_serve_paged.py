@@ -1,0 +1,292 @@
+"""Paged KV-cache layer: BlockAllocator / PagedSlotManager property
+invariants, block-gated admission, and the block-table decode kernel.
+
+The property sweeps (``tests/_hypothesis_compat``: real hypothesis when
+installed, deterministic seeded draws otherwise) drive random
+admit/grow/finish interleavings and assert after every operation that no
+block is double-assigned, leaked, or double-freed and that the free-block
+count is conserved.  The full-size interleaving sweeps are marked ``slow``
+so the fast lane (``pytest -m "not slow"``) stays quick.
+
+Engine-level greedy equivalence of the paged layout lives in
+``tests/test_serve_engine.py``; here we cover the paged-only behaviours:
+admission gated on block availability (not just free slots), rejection of
+requests larger than the pool, the zero-block degenerate case (rwkv6 has
+no ``cache_seq`` leaves), and ``paged_decode_attention`` vs its oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from test_serve_engine import MAX_LEN, get_model, make_requests, reference
+
+from repro.data import tokenizer as tok
+from repro.serve import (BlockAllocator, Engine, EngineConfig,
+                         PagedSlotManager, Request, blocks_for)
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator properties
+# ---------------------------------------------------------------------------
+def _drive_allocator(ops, num_blocks):
+    """Replay (kind, value) ops; invariants checked after every op."""
+    alloc = BlockAllocator(num_blocks, block_size=4)
+    live, next_owner = [], 0
+    for kind, val in ops:
+        if kind == 0:                      # admit a new owner
+            n = 1 + val % num_blocks
+            if alloc.can_reserve(n):
+                alloc.reserve(next_owner, n)
+                live.append(next_owner)
+                next_owner += 1
+        elif kind == 1 and live:           # grow a random live owner
+            o = live[val % len(live)]
+            if alloc.quota[o] > 0:
+                bid = alloc.allocate(o)
+                assert 1 <= bid <= num_blocks
+        elif kind == 2 and live:           # finish a random owner
+            alloc.free_all(live.pop(val % len(live)))
+        alloc.check()
+    for o in live:                         # drain: everything comes back
+        alloc.free_all(o)
+    alloc.check()
+    assert alloc.num_free == alloc.num_blocks
+    assert not alloc.quota and not alloc.refcount
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 63)),
+                min_size=1, max_size=30),
+       st.integers(1, 12))
+def test_block_allocator_interleaving(ops, num_blocks):
+    _drive_allocator(ops, num_blocks)
+
+
+@pytest.mark.slow
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1023)),
+                min_size=1, max_size=120),
+       st.integers(1, 48))
+def test_block_allocator_interleaving_sweep(ops, num_blocks):
+    _drive_allocator(ops, num_blocks)
+
+
+def test_block_allocator_rejects_bad_transitions():
+    a = BlockAllocator(4, block_size=8)
+    with pytest.raises(RuntimeError):
+        a.reserve(0, 5)                    # beyond pool capacity
+    a.reserve(0, 4)
+    with pytest.raises(AssertionError):
+        a.reserve(0, 1)                    # double reservation
+    with pytest.raises(RuntimeError):
+        a.reserve(1, 1)                    # pool fully committed
+    bid = a.allocate(0)
+    with pytest.raises(AssertionError):
+        a.incref(bid + 1)                  # not a live block
+    a.free_all(0)
+    with pytest.raises(AssertionError):
+        a.decref(bid)                      # double free
+    with pytest.raises(AssertionError):
+        a.free_all(0)                      # owner already gone
+    a.check()
+    assert a.num_free == 4
+
+
+def test_block_allocator_refcount_pins_blocks():
+    """incref'd blocks survive their owner's free_all until decref — the
+    hook future prefix sharing builds on."""
+    a = BlockAllocator(3, block_size=8)
+    a.reserve(0, 2)
+    b0 = a.allocate(0)
+    a.incref(b0)
+    a.free_all(0)
+    assert b0 in a.refcount and a.num_free == 2   # still pinned
+    a.decref(b0)
+    a.check()
+    assert a.num_free == 3
+
+
+def test_blocks_for():
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+    assert blocks_for(48, 16) == 3
+
+
+# ---------------------------------------------------------------------------
+# PagedSlotManager properties (host bookkeeping over a real model cache)
+# ---------------------------------------------------------------------------
+def _drive_slot_manager(ops, sm: PagedSlotManager):
+    live, rid = [], 0
+    for kind, val in ops:
+        if kind == 0:                      # admit
+            plen = 1 + val % 10
+            budget = plen + 1 + val % 12
+            if sm.can_admit(budget):
+                slot = sm.assign(rid, prompt_len=plen, total_budget=budget)
+                live.append((slot, plen, budget))
+                rid += 1
+        elif kind == 1 and live:           # decode progress -> table growth
+            slot, plen, budget = live[val % len(live)]
+            sm.ensure(slot, min(plen + val % 8, budget - 1))
+        elif kind == 2 and live:           # finish
+            slot, _, _ = live.pop(val % len(live))
+            sm.release(slot)
+        sm.check()
+    for slot, _, _ in live:
+        sm.release(slot)
+    sm.check()
+    assert sm.blocks_in_use == 0 and sm.num_free == sm.num_slots
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 63)),
+                min_size=1, max_size=25))
+def test_paged_slot_manager_interleaving(ops):
+    m, _ = get_model("internlm2-1.8b")
+    _drive_slot_manager(ops, PagedSlotManager(m, 3, MAX_LEN, block_size=8,
+                                              num_blocks=10))
+
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1023)),
+                min_size=1, max_size=80),
+       st.integers(1, 7),                  # block size
+       st.integers(4, 24))                 # pool blocks
+def test_paged_slot_manager_interleaving_sweep(ops, bs, nb):
+    m, _ = get_model("internlm2-1.8b")
+    _drive_slot_manager(ops, PagedSlotManager(m, 4, MAX_LEN, block_size=bs,
+                                              num_blocks=nb))
+
+
+def test_paged_slot_manager_no_seq_leaves_needs_no_blocks():
+    """rwkv6 carries pure recurrent state — paged layout degenerates: a
+    request reserves zero blocks and admission never gates on the pool."""
+    m, _ = get_model("rwkv6-7b")
+    sm = PagedSlotManager(m, 2, MAX_LEN, block_size=8, num_blocks=1)
+    assert sm.paged_names == ()
+    assert sm.blocks_required(MAX_LEN) == 0
+    assert sm.can_admit(MAX_LEN)
+    slot = sm.assign(0, prompt_len=6, total_budget=MAX_LEN)
+    assert sm.blocks_in_use == 0
+    sm.release(slot)
+    sm.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine: admission gated on blocks, not just slots
+# ---------------------------------------------------------------------------
+def test_paged_admission_gated_on_block_availability():
+    """Pool sized for one request at a time: despite 3 free slots, requests
+    are served one-by-one (FIFO), outputs still match the reference, and
+    every block returns to the free list."""
+    m, params = get_model("internlm2-1.8b")
+    # near-max budgets: each request's reservation spans the whole pool
+    reqs = make_requests(3, max_new=40)
+    need = blocks_for(MAX_LEN, 16)
+    eng = Engine(m, params, EngineConfig(
+        num_slots=3, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=16, num_kv_blocks=need))
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run()
+    assert eng.stats.peak_active == 1      # blocks, not slots, bound it
+    admit_order = [rid for ev, rid, _ in eng.slots.events if ev == "assign"]
+    assert admit_order == [0, 1, 2]        # FIFO preserved under gating
+    for r, o in zip(reqs, outs):
+        ref_t, ref_l = reference(m, params, r, max_new=40)
+        assert o.tokens == ref_t
+        np.testing.assert_allclose(o.logprobs, ref_l, atol=1e-5)
+    eng.slots.check()
+    assert eng.slots.blocks_in_use == 0
+
+
+def test_paged_admits_more_than_contiguous_at_equal_memory():
+    """The tentpole's point, in miniature: short-budget requests through a
+    pool worth 2 contiguous stripes run >2-wide when paged."""
+    m, params = get_model("internlm2-1.8b")
+    prompt = np.asarray(tok.encode("5+5=", bos=True), np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=4)
+            for i in range(6)]
+    stripes = 2
+    blocks = stripes * blocks_for(MAX_LEN, 8)
+    contig = Engine(m, params, EngineConfig(num_slots=stripes,
+                                            max_seq_len=MAX_LEN))
+    paged = Engine(m, params, EngineConfig(
+        num_slots=6, max_seq_len=MAX_LEN, kv_layout="paged",
+        kv_block_size=8, num_kv_blocks=blocks))
+    for e in (contig, paged):
+        for r in reqs:
+            e.submit(Request(rid=r.rid, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens))
+        e.run()
+    assert contig.stats.peak_active == stripes
+    assert paged.stats.peak_active > contig.stats.peak_active
+
+
+def test_paged_submit_rejects_request_larger_than_pool():
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, kv_layout="paged",
+        kv_block_size=16, num_kv_blocks=2))      # 32 tokens of KV
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.zeros(10, np.int32),
+                           max_new_tokens=30))   # needs 3 blocks, pool has 2
+
+
+def test_paged_engine_rwkv6_degenerate_matches_contiguous():
+    m, params = get_model("rwkv6-7b")
+    reqs = make_requests(3)
+
+    def run(cfg):
+        eng = Engine(m, params, cfg)
+        for r in reqs:
+            eng.submit(r)
+        return [o.tokens for o in eng.run()]
+
+    a = run(EngineConfig(num_slots=2, max_seq_len=MAX_LEN))
+    b = run(EngineConfig(num_slots=2, max_seq_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=8))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Block-table decode attention kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,Hkv,D,bs,lengths", [
+    (3, 8, 2, 32, 16, (70, 16, 33)),       # ragged, multi-block
+    (2, 4, 4, 64, 8, (1, 57)),             # single live token / long row
+])
+def test_paged_decode_attention_matches_oracle(B, H, Hkv, D, bs, lengths,
+                                               rng_key):
+    from repro.kernels import ref
+    from repro.kernels.decode_attention import (decode_attention,
+                                                paged_decode_attention)
+    from repro.models.attention import gather_blocks
+    MB = max(blocks_for(n, bs) for n in lengths) + 1
+    NB = B * MB + 1                        # pool + null block
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k_pool = jax.random.normal(ks[1], (NB, bs, Hkv, D))
+    v_pool = jax.random.normal(ks[2], (NB, bs, Hkv, D))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, NB))
+    tables = np.zeros((B, MB), np.int32)
+    for b in range(B):                     # disjoint tables, zero tails
+        nb = blocks_for(lengths[b], bs)
+        tables[b, :nb] = perm[b * MB:b * MB + nb]
+    lengths = np.asarray(lengths, np.int32)
+    out = paged_decode_attention(q, k_pool, v_pool, tables, lengths)
+    expect = ref.paged_decode_attention_ref(q, k_pool, v_pool, tables,
+                                            lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-5, atol=5e-5)
+    # and against the contiguous kernel on the gathered view, row by row
+    for b in range(B):
+        kb = gather_blocks(k_pool, jnp.asarray(tables[b]), axis=0)[None]
+        vb = gather_blocks(v_pool, jnp.asarray(tables[b]), axis=0)[None]
+        o2 = decode_attention(q[b:b + 1], kb, vb, int(lengths[b]))
+        np.testing.assert_allclose(np.asarray(out)[b], np.asarray(o2)[0],
+                                   rtol=5e-5, atol=5e-5)
