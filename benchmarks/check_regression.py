@@ -1,0 +1,77 @@
+"""Benchmark regression guard: diff a freshly measured BENCH_*.json against
+the committed baseline and fail (exit 1) on a >``--tolerance`` drop.
+
+    python benchmarks/check_regression.py BASELINE CANDIDATE \
+        --metrics engine.tok_per_s,speedup_engine_vs_static [--tolerance 0.15]
+
+Metrics are dotted paths into the report JSON.  A metric regresses when
+``candidate < baseline * (1 - tolerance)``; higher must be better for every
+guarded metric (throughputs, speedup ratios, reclaimed-bubble fractions —
+never latencies).  Ratio metrics (mode-vs-mode speedups, bubble fractions)
+are machine-independent; absolute tok/s is only comparable when baseline
+and candidate ran on the same runner class, which is why CI diffs the
+``--quick`` reports whose baselines are refreshed from CI artifacts.
+
+The candidate's ``config`` block must match the baseline's (same workload,
+seed and sizes) — comparing different workloads is a config error, not a
+regression, and exits 2.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(report: dict, path: str):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("candidate", help="freshly measured BENCH_*.json")
+    ap.add_argument("--metrics", required=True,
+                    help="comma-separated dotted paths; higher is better")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional drop before failing")
+    ap.add_argument("--skip-config-check", action="store_true")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+
+    if not args.skip_config_check and base.get("config") != cand.get("config"):
+        print(f"config mismatch:\n  baseline : {base.get('config')}\n"
+              f"  candidate: {cand.get('config')}")
+        return 2
+
+    failed = []
+    for path in [m.strip() for m in args.metrics.split(",") if m.strip()]:
+        b, c = lookup(base, path), lookup(cand, path)
+        if b is None or c is None:
+            print(f"MISSING  {path}: baseline={b} candidate={c}")
+            failed.append(path)
+            continue
+        floor = b * (1.0 - args.tolerance)
+        status = "FAIL" if c < floor else "ok"
+        print(f"{status:7s}  {path}: baseline={b:.4g} candidate={c:.4g} "
+              f"(floor {floor:.4g}, {(c / b - 1) * 100:+.1f}%)")
+        if c < floor:
+            failed.append(path)
+    if failed:
+        print(f"\nregression in: {', '.join(failed)}")
+        return 1
+    print("\nno regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,9 @@
 """Shared helpers for the paper-artifact benchmarks."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.paper_jobs import PAPER_JOB_TYPES
-from repro.core import (CoExecutionGroup, InterGroupScheduler, Node,
-                        NodeAllocator, Placement, RLJob, SoloDisaggregation,
-                        SwitchCosts, from_profile, H20, H800)
+from repro.core import (CoExecutionGroup, RLJob, SwitchCosts, from_profile,
+                        H20, H800)
 
 ROWS: list[tuple[str, float, str]] = []
 

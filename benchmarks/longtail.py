@@ -37,7 +37,8 @@ def run():
                           work_conserving=True)
         mig = G.simulate(migration=True, switch=SwitchCosts(),
                          work_conserving=True)
-        thr = lambda r: sum(1.0 / t for t in r.iter_time.values())
+        def thr(r):
+            return sum(1.0 / t for t in r.iter_time.values())
         emit(f"fig11_migration_gain_{label}", thr(mig) / thr(base),
              "throughput gain from long-tail migration (paper 1.06-1.28x)")
 

@@ -6,12 +6,9 @@ job types. Paper result: 1.82-2.11x over Solo-D.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import (emit, gavel_cost_eff, group_cost_eff,
-                               paper_job, solo_cost_eff, verl_cost_eff)
-from repro.core import (CoExecutionGroup, InterGroupScheduler, Node,
-                        NodeAllocator, Placement, H20, H800)
+                               paper_job, solo_cost_eff)
+from repro.core import InterGroupScheduler, NodeAllocator, H20, H800
 
 
 def _scheduled_group(jobs):

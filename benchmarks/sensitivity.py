@@ -2,8 +2,6 @@
 SLO tightness, and max group residency; RollMux vs Random/Greedy."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.core import (ClusterSimulator, GreedyMostIdle, InterGroupScheduler,
                         NodeAllocator, RandomScheduler)

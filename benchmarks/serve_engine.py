@@ -146,10 +146,24 @@ def main():
                          "(min-makespan) run — wall-clock noise rejection on "
                          "shared/throttled CPUs")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_serve.json"),
-        help="report path ('' disables)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI workload (fewer requests; best-of-N "
+                         "repeats kept for noise rejection); writes "
+                         "BENCH_serve_quick.json — the same-config baseline "
+                         "the CI bench guard diffs against")
+    ap.add_argument("--json", default=None,
+                    help="report path ('' disables; default "
+                         "BENCH_serve[_quick].json at the repo root)")
     args = ap.parse_args()
+    if args.quick:
+        # the CI bench guard diffs this report's speedup ratios at 15%
+        # tolerance, so the quick trace stays large enough (and best-of-5)
+        # to keep run-to-run ratio noise well inside that band
+        args.n_requests = 48
+        args.repeats = max(args.repeats, 5)
+    if args.json is None:
+        name = "BENCH_serve_quick.json" if args.quick else "BENCH_serve.json"
+        args.json = os.path.join(os.path.dirname(__file__), "..", name)
 
     model = build_model(args.arch, reduced=True)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -249,6 +263,7 @@ def main():
                 "kv_block_size": args.kv_block_size,
                 "num_kv_blocks": num_kv_blocks, "paged_slots": paged_slots,
                 "repeats": args.repeats, "seed": args.seed,
+                "quick": args.quick,
             },
             "engine": _strip_outputs(eng_res),
             "static": _strip_outputs(sta_res),

@@ -11,7 +11,6 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs.paper_jobs import MEM_FOOTPRINT_GB
 from repro.sync import ClusterTopology
 from repro.train.checkpoints import HostStateCache
 

@@ -92,7 +92,7 @@ def main():
     rt.pool("train", 1)
     loops = [make_job(rt, f"job{i}", i, args.iters) for i in range(2)]
     t0 = time.perf_counter()
-    ts = [threading.Thread(target=l) for l in loops]
+    ts = [threading.Thread(target=fn) for fn in loops]
     for t in ts:
         t.start()
     for t in ts:
@@ -104,9 +104,9 @@ def main():
     rt2.pool("rollout", 1)
     rt2.pool("train", 1)
     t0 = time.perf_counter()
-    for i, l in enumerate([make_job(rt2, f"job{i}", i, args.iters)
-                           for i in range(2)]):
-        l()
+    for fn in [make_job(rt2, f"job{i}", i, args.iters)
+               for i in range(2)]:
+        fn()
     seq_wall = time.perf_counter() - t0
 
     print("\nco-execution timeline (0/1 = job id, . = dependency bubble):")

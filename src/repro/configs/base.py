@@ -8,7 +8,7 @@ config is only ever lowered via ShapeDtypeStructs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 _REGISTRY: dict[str, "ModelConfig"] = {}

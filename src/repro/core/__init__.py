@@ -8,8 +8,11 @@ from repro.core.inter_group import Decision, InterGroupScheduler
 from repro.core.baselines import (GavelPlus, GreedyMostIdle, RandomScheduler,
                                   SoloDisaggregation, VeRLColocated,
                                   offline_optimal_cost)
-from repro.core.simulator import ClusterSimulator, Report, replay_verl
-from repro.core.phase_control import PermitPool, RollMuxRuntime
+from repro.core.simulator import (ClusterSimulator, Report,
+                                  group_from_profiles, replay_verl,
+                                  simulate_profiles)
+from repro.core.phase_control import (PermitPool, PhaseProfile,
+                                      RollMuxRuntime)
 from repro.core import distributions, theory, trace
 
 __all__ = [
@@ -18,6 +21,6 @@ __all__ = [
     "Placement", "SimResult", "SwitchCosts", "Decision", "InterGroupScheduler",
     "GavelPlus", "GreedyMostIdle", "RandomScheduler", "SoloDisaggregation",
     "VeRLColocated", "offline_optimal_cost", "ClusterSimulator", "Report",
-    "replay_verl", "PermitPool", "RollMuxRuntime", "distributions", "theory",
-    "trace",
+    "group_from_profiles", "replay_verl", "simulate_profiles", "PermitPool",
+    "PhaseProfile", "RollMuxRuntime", "distributions", "theory", "trace",
 ]

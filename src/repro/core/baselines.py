@@ -3,12 +3,8 @@ Solo-D, colocated veRL, Gavel+, Random, Greedy (most-idle), Offline-Optimal.
 """
 from __future__ import annotations
 
-import itertools
 import random as _random
-from dataclasses import dataclass
 from typing import Optional
-
-import numpy as np
 
 from repro.core.cluster import Node, NodeAllocator
 from repro.core.group import CoExecutionGroup, Placement

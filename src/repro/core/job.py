@@ -1,8 +1,7 @@
 """RL post-training job model consumed by the RollMux schedulers."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from repro.core.cluster import GPUS_PER_NODE
 

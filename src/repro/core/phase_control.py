@@ -4,15 +4,23 @@ run permits, warm-start state management, and runtime hooks.
 The execution plane is in-process: resource pools are permit queues, job
 states live in a HostStateCache between phases (device_put back = warm
 start), and the intra-group FIFO queues drive the round-robin schedule.
+
+Executed phases leave measured per-phase timelines behind
+(:attr:`PermitPool.timeline`); :meth:`RollMuxRuntime.phase_profiles`
+distills them into :class:`PhaseProfile` records the co-execution
+simulator consumes in place of modeled worst-case durations
+(``core.simulator.simulate_profiles``) — served, not modeled, phase times
+drive the multiplexing decisions.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 
@@ -58,6 +66,58 @@ class PhaseStats:
     switch_time: float = 0.0
     run_time: float = 0.0
     wait_time: float = 0.0
+
+
+@dataclass(frozen=True)
+class PhaseProfile:
+    """Engine-measured per-phase timeline of one job: every executed rollout
+    and training phase duration, in order.  This is the bridge from the real
+    execution plane to the planner: where ``RLJob`` carries *modeled*
+    worst-case durations, a profile carries what the serving engine and
+    train step actually took, and :meth:`to_job` turns that into the job
+    record the co-execution simulator / admission planner consume
+    (worst-case = max observed, runtime stochasticity = observed spread)."""
+    job_id: str
+    rollout_s: tuple[float, ...] = ()
+    train_s: tuple[float, ...] = ()
+
+    @property
+    def t_roll(self) -> float:
+        """Worst-case (admission-bound) rollout duration."""
+        return max(self.rollout_s, default=0.0)
+
+    @property
+    def t_train(self) -> float:
+        return max(self.train_s, default=0.0)
+
+    @property
+    def t_roll_mean(self) -> float:
+        return sum(self.rollout_s) / max(len(self.rollout_s), 1)
+
+    @property
+    def t_train_mean(self) -> float:
+        return sum(self.train_s) / max(len(self.train_s), 1)
+
+    @property
+    def iterations(self) -> int:
+        return min(len(self.rollout_s), len(self.train_s))
+
+    def to_job(self, **overrides):
+        """Build the ``core.job.RLJob`` this measured profile implies.
+
+        Worst-case phase durations are the observed maxima; the stochastic
+        runtime scale spans the observed min/max ratio, so the simulator's
+        common-random-number draws reproduce the measured spread."""
+        from repro.core.job import RLJob
+
+        lo = 1.0
+        if self.rollout_s and self.train_s:
+            lo = min(min(self.rollout_s) / max(self.t_roll, 1e-9),
+                     min(self.train_s) / max(self.t_train, 1e-9))
+        kw = dict(job_id=self.job_id, t_roll=self.t_roll,
+                  t_train=self.t_train, runtime_scale=(min(lo, 1.0), 1.0))
+        kw.update(overrides)
+        return RLJob(**kw)
 
 
 class RollMuxRuntime:
@@ -139,6 +199,43 @@ class RollMuxRuntime:
             return wrapped
         return deco
 
+    @contextlib.contextmanager
+    def permit(self, pool: str, who: str, capacity: int = 1):
+        """Run-permit scope without the state-offload machinery of
+        :meth:`phase`: acquire the pool's FIFO permit, run the body, record
+        the busy interval on the pool timeline.  The mux executors use this
+        for phases whose state stays in the driver (e.g. the pipelined
+        single-job trainer, where params are handed over directly instead
+        of through the actor cache)."""
+        p = self.pool(pool, capacity)
+        p.acquire()
+        t_start = time.perf_counter()
+        try:
+            yield p
+        finally:
+            t_end = time.perf_counter()
+            p.timeline.append((who, t_start - self._t0, t_end - self._t0))
+            p.busy_time += t_end - t_start
+            p.release()
+
     def seed_state(self, job_id: str, pool: str, state) -> None:
         """Pre-populate the actor cache (Init phase of the dependency graph)."""
         self.cache.offload(f"{job_id}/{pool}", state)
+
+    def phase_profiles(self, *, rollout_pool: str = "rollout",
+                       train_pool: str = "train") -> dict[str, PhaseProfile]:
+        """Distill the executed pool timelines into per-job
+        :class:`PhaseProfile` records (measured durations, in execution
+        order).  Timeline entries are tagged ``"job:phase"`` by both
+        :meth:`phase` and :meth:`permit`."""
+        roll: dict[str, list[float]] = {}
+        train: dict[str, list[float]] = {}
+        for pool_name, acc in ((rollout_pool, roll), (train_pool, train)):
+            p = self.pools.get(pool_name)
+            if p is None:
+                continue
+            for who, t0, t1 in p.timeline:
+                acc.setdefault(who.split(":")[0], []).append(t1 - t0)
+        return {jid: PhaseProfile(jid, tuple(roll.get(jid, ())),
+                                  tuple(train.get(jid, ())))
+                for jid in sorted(set(roll) | set(train))}

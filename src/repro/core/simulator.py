@@ -171,6 +171,40 @@ class ClusterSimulator:
             per_job_slowdown=slowdown)
 
 
+def group_from_profiles(profiles, *, gid: str = "measured",
+                        rollout_nodes: int = 1, train_nodes: int = 1,
+                        accel=None, **job_overrides) -> CoExecutionGroup:
+    """Build a co-execution group whose job durations are *engine-measured*
+    :class:`~repro.core.phase_control.PhaseProfile` records instead of
+    modeled worst cases — the feedback path from the execution plane
+    (``rl.coexec`` / ``launch.train --mux``) into the planner.
+
+    ``profiles`` is an iterable of PhaseProfiles (e.g. the dict values from
+    ``RollMuxRuntime.phase_profiles()``).  All jobs share one rollout
+    placement, matching the in-process runtime's single rollout pool.
+    """
+    from repro.core.cluster import H20, H800
+
+    roll = [Node(f"{gid}-r{i}", accel or H20) for i in range(rollout_nodes)]
+    train = [Node(f"{gid}-t{i}", accel or H800) for i in range(train_nodes)]
+    G = CoExecutionGroup(gid, roll, train)
+    placement = Placement(tuple(n.node_id for n in roll))
+    for prof in profiles:
+        G.add_job(prof.to_job(**job_overrides), placement)
+    return G
+
+
+def simulate_profiles(profiles, *, work_conserving: bool = True,
+                      switch: Optional[SwitchCosts] = None, **group_kw):
+    """Run the intra-group DES on measured phase profiles; returns the
+    ``SimResult`` whose iter_time / bubble fractions reflect served
+    durations.  This is what closes the loop: decisions the simulator
+    makes (admission, grouping) can now be checked against — and driven
+    by — what the engine actually measured."""
+    G = group_from_profiles(profiles, **group_kw)
+    return G.simulate(work_conserving=work_conserving, switch=switch)
+
+
 def replay_verl(jobs: list[RLJob], alloc: NodeAllocator) -> Report:
     """Analytic replay of the colocated veRL baseline: every job runs all
     phases on its own training-pool nodes; rollout pays the HBM-bandwidth

@@ -4,8 +4,6 @@ from __future__ import annotations
 
 import itertools
 
-import numpy as np
-
 from repro.core.cluster import Node, H20, H800
 from repro.core.group import CoExecutionGroup, Placement
 from repro.core.job import RLJob

@@ -14,7 +14,6 @@ os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "") +
                            " --xla_force_host_platform_device_count=512").strip()
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys

@@ -14,35 +14,39 @@ and benchmarks exercise, so training traffic measures real serving
 behaviour (``--kv paged`` serves it from the block-pool KV layout).
 Greedy rollouts are token-identical across the two backends; sampled
 rollouts draw from a different (equally valid) key stream.
+
+``--mux`` picks the phase-multiplexing executor (``rl.coexec``), the
+paper's answer to the rollout<->train dependency bubble:
+
+* ``off`` (default) — rollout and training back-to-back, the
+  standard-disaggregation baseline.
+* ``pipeline`` — overlap the rollout of GRPO iteration ``k+1`` with the
+  training step of iteration ``k``.  The on-policy staleness guard
+  ``--mux-staleness`` bounds how many optimizer steps the rollout weights
+  may lag: ``0`` forces full sync (bit-exact to ``off``, no overlap),
+  ``1`` (default) overlaps adjacent iterations, correcting the bounded
+  off-policy drift with the clipped importance ratio (the per-step lag is
+  recorded as ``rollout_staleness`` in the history).
+* ``coexec`` — ``--jobs`` independent GRPO jobs time-multiplex the shared
+  rollout/train pools round-robin with warm-start context switches from
+  the host-DRAM actor cache: while one job trains, another's rollout
+  drains through the engine.  Job ``i`` uses ``seed + i``; per-job losses
+  are bit-exact to running that job alone.
+
+All modes print/return per-step history; the mux modes additionally
+report the measured phase timelines (reclaimed dependency bubble) — see
+``benchmarks/train_mux.py`` for the tracked numbers.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.data import ArithmeticTask, tokenizer as tok
 from repro.models import build_model
-from repro.rl import (SamplerConfig, arithmetic_reward, generate,
-                      generate_continuous, group_advantages,
-                      init_train_state, make_train_step)
-from repro.train.optimizer import AdamWConfig, warmup_cosine
+from repro.rl.coexec import (GRPOJob, MuxConfig, build_train_batch,
+                             run_coexec, run_pipelined, run_sequential)
 
-
-def build_train_batch(out, adv, prompt_len):
-    tokens = out["tokens"][:, :-1]
-    labels = out["tokens"][:, 1:]
-    B, T = out["completions"].shape
-    zeros = jnp.zeros((B, prompt_len - 1), jnp.float32)
-    loss_mask = jnp.concatenate([zeros, out["mask"]], axis=1)
-    advm = jnp.broadcast_to(jnp.asarray(adv)[:, None], (B, T))
-    advantages = jnp.concatenate([zeros, advm], axis=1)
-    return {"tokens": tokens, "labels": labels, "loss_mask": loss_mask,
-            "advantages": advantages,
-            "behavior_logp": jnp.concatenate([zeros, out["behavior_logp"]], 1)}
+__all__ = ["build_train_batch", "run_training"]
 
 
 def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
@@ -51,52 +55,50 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  log_every: int = 5, model=None, rollout: str = "static",
                  temperature: float = 1.0, num_slots: int | None = None,
                  engine_block_size: int = 1, kv: str = "contiguous",
-                 kv_block_size: int = 16):
-    """One synchronous GRPO loop.  ``rollout`` picks the generation backend:
-    ``"static"`` = one fixed-shape ``generate`` scan per step, ``"engine"``
-    = the continuous-batching serving engine (``num_slots`` KV slots,
-    ``kv`` layout)."""
-    if rollout not in ("static", "engine"):
-        raise ValueError(f"unknown rollout backend {rollout!r}")
-    model = model or build_model(arch, reduced=reduced)
-    key = jax.random.PRNGKey(seed)
-    opt_cfg = AdamWConfig(lr=lr)
-    state = init_train_state(model, key, opt_cfg)
-    task = ArithmeticTask(seed=seed)
-    sampler = SamplerConfig(max_new_tokens=max_new, temperature=temperature)
-    train_step = jax.jit(make_train_step(model, opt_cfg,
-                                         lr_schedule=warmup_cosine(lr, 10, steps)))
-    history = []
-    for step in range(steps):
-        b = task.sample_batch(batch)
-        prompts = jnp.asarray(np.repeat(b.prompts, group, axis=0))
-        key, k1 = jax.random.split(key)
-        if rollout == "engine":
-            out = generate_continuous(
-                model, state["params"], prompts, k1, sampler,
-                num_slots=num_slots, block_size=engine_block_size,
-                kv_layout=kv, kv_block_size=kv_block_size)
-        else:
-            out = generate(model, state["params"], prompts, k1, sampler)
-        answers = [a for a in b.answers for _ in range(group)]
-        rewards = arithmetic_reward(out["completions"], out["mask"], answers)
-        adv = group_advantages(rewards, group)
-        tb = build_train_batch(out, adv, b.prompts.shape[1])
-        state, metrics = train_step(state, tb)
-        rec = {"step": step, "reward": float(rewards.mean()),
-               "acc": float((rewards >= 1.0).mean()),
-               "loss": float(metrics["loss"]),
-               "entropy": float(metrics["entropy"])}
-        history.append(rec)
-        if step % log_every == 0:
-            print(f"step {step:4d} reward={rec['reward']:.3f} "
-                  f"acc={rec['acc']:.3f} loss={rec['loss']:.4f} "
-                  f"entropy={rec['entropy']:.3f}", flush=True)
-    return state, history
+                 kv_block_size: int = 16, mux: str = "off",
+                 mux_staleness: int = 1, jobs: int = 2,
+                 return_report: bool = False):
+    """GRPO post-training through the phase-multiplexed executors.
+
+    ``rollout`` picks the generation backend (``"static"`` scan or the
+    continuous-batching serving ``"engine"``); ``mux`` picks the executor
+    (see module docstring).  Returns ``(state, history)`` — or, for
+    ``mux="coexec"``, ``(states, histories)`` dicts keyed by job id — plus
+    the :class:`~repro.rl.coexec.MuxReport` when ``return_report``.
+    """
+    cfg = MuxConfig(mode=mux, max_staleness=mux_staleness)
+
+    def make_job(jid: str, job_seed: int) -> GRPOJob:
+        return GRPOJob(
+            jid, model=model or build_model(arch, reduced=reduced),
+            seed=job_seed, steps=steps, batch=batch, group=group,
+            max_new=max_new, lr=lr, temperature=temperature, rollout=rollout,
+            num_slots=num_slots, engine_block_size=engine_block_size,
+            kv=kv, kv_block_size=kv_block_size)
+
+    if cfg.mode == "off":
+        state, hist, report = run_sequential(make_job("job0", seed),
+                                             log_every=log_every)
+    elif cfg.mode == "pipeline":
+        state, hist, report = run_pipelined(make_job("job0", seed),
+                                            max_staleness=cfg.max_staleness,
+                                            log_every=log_every)
+    else:                                   # "coexec"
+        if jobs < 1:
+            raise ValueError("coexec needs >= 1 jobs")
+        group_jobs = [make_job(f"job{i}", seed + i) for i in range(jobs)]
+        state, hist, report = run_coexec(group_jobs,
+                                         host_cache_gb=cfg.host_cache_gb,
+                                         log_every=log_every)
+    if return_report:
+        return state, hist, report
+    return state, hist
 
 
 def _main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="GRPO post-training with phase-multiplexed execution",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--steps", type=int, default=50)
@@ -104,6 +106,7 @@ def _main():
     ap.add_argument("--group", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rollout", choices=("static", "engine"),
                     default="static",
                     help="rollout backend: static generate scan or the "
@@ -115,15 +118,43 @@ def _main():
                     default="contiguous",
                     help="engine KV layout (--rollout engine)")
     ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--mux", choices=("off", "pipeline", "coexec"),
+                    default="off",
+                    help="phase multiplexing: 'off' runs rollout and "
+                         "training back-to-back (baseline); 'pipeline' "
+                         "overlaps next-iteration rollout with the current "
+                         "training step behind the --mux-staleness guard; "
+                         "'coexec' round-robins --jobs jobs over the shared "
+                         "rollout/train pools with warm-start switches")
+    ap.add_argument("--mux-staleness", type=int, default=1,
+                    help="pipeline mode: max optimizer steps the rollout "
+                         "weights may lag (0 = force sync; bit-exact to "
+                         "--mux off but with no overlap)")
+    ap.add_argument("--jobs", type=int, default=2,
+                    help="coexec mode: number of co-executing jobs "
+                         "(job i uses seed+i)")
     args = ap.parse_args()
     t0 = time.time()
-    _, hist = run_training(args.arch, reduced=args.reduced, steps=args.steps,
-                           batch=args.batch, group=args.group,
-                           max_new=args.max_new, lr=args.lr,
-                           rollout=args.rollout, num_slots=args.slots,
-                           kv=args.kv, kv_block_size=args.kv_block_size)
-    print(f"done in {time.time()-t0:.1f}s; "
-          f"final reward {hist[-1]['reward']:.3f}")
+    out = run_training(args.arch, reduced=args.reduced, steps=args.steps,
+                       batch=args.batch, group=args.group,
+                       max_new=args.max_new, lr=args.lr, seed=args.seed,
+                       rollout=args.rollout, num_slots=args.slots,
+                       kv=args.kv, kv_block_size=args.kv_block_size,
+                       mux=args.mux, mux_staleness=args.mux_staleness,
+                       jobs=args.jobs, return_report=True)
+    _, hist, report = out
+    wall = time.time() - t0
+    if args.mux == "coexec":
+        finals = {jid: h[-1]["reward"] for jid, h in hist.items() if h}
+        print(f"done in {wall:.1f}s; final rewards "
+              + ", ".join(f"{j}={r:.3f}" for j, r in sorted(finals.items())))
+    else:
+        print(f"done in {wall:.1f}s; final reward {hist[-1]['reward']:.3f}")
+    s = report.summary()
+    print(f"mux={report.mode}: rollout busy {s['total_rollout_s']:.2f}s, "
+          f"train busy {s['total_train_s']:.2f}s, overlap {s['overlap_s']:.2f}s "
+          f"({s['reclaimed_bubble_frac']:.0%} of the back-to-back bubble "
+          f"reclaimed)")
 
 
 if __name__ == "__main__":

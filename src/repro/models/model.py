@@ -3,7 +3,6 @@ prefill / decode plus abstract ``input_specs`` for the multi-pod dry-run."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,6 @@ non-uniform structure is handled inside the scan body:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

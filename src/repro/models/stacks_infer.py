@@ -16,7 +16,7 @@ from repro.models import rwkv6 as rw
 from repro.models.common import (default_mrope_positions, gelu_mlp_apply,
                                  mlp_apply)
 from repro.models.stacks import (
-    NO_WINDOW, _embed_tokens, _layer_theta_window, _norm, _sinusoid,
+    _embed_tokens, _layer_theta_window, _norm, _sinusoid,
     _unembed, encode_source)
 
 

@@ -3,8 +3,12 @@ from repro.rl.rollout import (SamplerConfig, completions_to_text, generate,
                               generate_continuous)
 from repro.rl.rewards import arithmetic_reward
 from repro.rl.train_step import init_train_state, make_loss_fn, make_train_step
+from repro.rl.coexec import (GRPOJob, MuxConfig, MuxReport, build_train_batch,
+                             run_coexec, run_pipelined, run_sequential)
 
 __all__ = ["GRPOConfig", "group_advantages", "policy_gradient_loss",
            "SamplerConfig", "generate", "generate_continuous",
            "completions_to_text", "arithmetic_reward", "init_train_state",
-           "make_loss_fn", "make_train_step"]
+           "make_loss_fn", "make_train_step", "GRPOJob", "MuxConfig",
+           "MuxReport", "build_train_batch", "run_coexec", "run_pipelined",
+           "run_sequential"]

@@ -1,0 +1,463 @@
+"""Phase-multiplexed GRPO execution — the paper's two-tier runtime (§5).
+
+This module turns "engine + simulator side-by-side" into the actual
+co-execution plane: GRPO loops run their rollout phase through the
+continuous-batching ``serve.Engine`` (or the static ``generate`` scan) and
+their training phase through ``rl.train_step``, scheduled by
+``core.phase_control`` run permits so the dependency bubble between the
+two phases is reclaimed instead of serialized away.
+
+Three executors, selected by ``launch/train.py --mux``:
+
+* :func:`run_sequential` (``--mux off``) — the standard-disaggregation
+  baseline: rollout and training back-to-back in one thread.  Phases still
+  run under run permits, so the executed timeline (and hence the measured
+  bubble) is recorded the same way as the multiplexed modes.
+* :func:`run_pipelined` (``--mux pipeline``) — single job: the rollout of
+  GRPO iteration ``k+1`` overlaps with the training step of iteration
+  ``k``, behind an **on-policy staleness guard**: the rollout weights may
+  lag the trained weights by at most ``max_staleness`` optimizer steps
+  (``0`` forces full synchronization and is bit-exact to ``off``).  The
+  off-policy drift a lag of ``>= 1`` introduces is exactly what the
+  clipped importance ratio in :func:`repro.rl.grpo.policy_gradient_loss`
+  corrects — behaviour logprobs are recorded by the engine per token.
+* :func:`run_coexec` (``--mux coexec``) — two or more logical jobs
+  time-multiplex the shared rollout/train pools round-robin (intra-group
+  FIFO permits): while job A holds the ``train`` permit, job B's rollout
+  drains through the serving engine.  Between phases each job's state is
+  suspended to the host-DRAM actor cache and warm-started back
+  (``device_put``), so per-job losses are bit-exact to running the job
+  alone — co-execution changes the schedule, never the math.
+
+Every executor returns a :class:`MuxReport` whose per-pool timelines
+measure the reclaimed bubble and export measured
+:class:`~repro.core.phase_control.PhaseProfile` records for the
+co-execution simulator (``core.simulator.simulate_profiles``).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.phase_control import PhaseProfile, RollMuxRuntime
+from repro.data import ArithmeticTask
+from repro.models import build_model
+from repro.rl.grpo import group_advantages
+from repro.rl.rewards import arithmetic_reward
+from repro.rl.rollout import SamplerConfig, generate, generate_continuous
+from repro.rl.train_step import init_train_state, make_train_step
+from repro.train.optimizer import AdamWConfig, warmup_cosine
+
+
+def build_train_batch(out, adv, prompt_len):
+    """Rollout output + GRPO advantages -> the train-step batch dict."""
+    tokens = out["tokens"][:, :-1]
+    labels = out["tokens"][:, 1:]
+    B, T = out["completions"].shape
+    zeros = jnp.zeros((B, prompt_len - 1), jnp.float32)
+    loss_mask = jnp.concatenate([zeros, out["mask"]], axis=1)
+    advm = jnp.broadcast_to(jnp.asarray(adv)[:, None], (B, T))
+    advantages = jnp.concatenate([zeros, advm], axis=1)
+    return {"tokens": tokens, "labels": labels, "loss_mask": loss_mask,
+            "advantages": advantages,
+            "behavior_logp": jnp.concatenate([zeros, out["behavior_logp"]], 1)}
+
+
+@dataclass(frozen=True)
+class MuxConfig:
+    """Phase-multiplexing knobs (see module docstring / ``--mux``)."""
+    mode: str = "off"                 # "off" | "pipeline" | "coexec"
+    max_staleness: int = 1            # pipeline: optimizer steps the rollout
+    #                                   weights may lag (0 = sync, bit-exact
+    #                                   to the sequential path)
+    host_cache_gb: float = 8.0        # coexec actor-cache budget
+
+    def __post_init__(self):
+        if self.mode not in ("off", "pipeline", "coexec"):
+            raise ValueError(f"unknown mux mode {self.mode!r}")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_train_step(model, opt_cfg: AdamWConfig, steps: int):
+    """One jitted train step per (model, optimizer, schedule) — co-executing
+    jobs with the same training shape share the compilation (keyed on the
+    hashable frozen ``Model``), like the engine's jit cache."""
+    return jax.jit(make_train_step(
+        model, opt_cfg, lr_schedule=warmup_cosine(opt_cfg.lr, 10, steps)))
+
+
+class GRPOJob:
+    """One logical RL post-training job: model, task stream, sampler and
+    jitted train step, with its rollout phase routed through either the
+    static ``generate`` scan or the continuous-batching serving engine.
+
+    The job is executor-agnostic: every executor drives the same two
+    methods (:meth:`rollout_step`, :meth:`train_phase`) in iteration order,
+    so losses are identical across ``off`` / ``pipeline``(sync) / ``coexec``
+    by construction.  Task batches and rollout keys are drawn from per-job
+    streams in call order — executors must call ``rollout_step`` with
+    ``k = 0, 1, 2, ...`` exactly once each (they do).
+    """
+
+    def __init__(self, job_id: str, model=None, *, arch: str = "internlm2-1.8b",
+                 reduced: bool = True, seed: int = 0, steps: int = 50,
+                 batch: int = 8, group: int = 4, max_new: int = 8,
+                 lr: float = 3e-4, temperature: float = 1.0,
+                 rollout: str = "static", num_slots: Optional[int] = None,
+                 engine_block_size: int = 1, kv: str = "contiguous",
+                 kv_block_size: int = 16, num_kv_blocks: Optional[int] = None,
+                 reward_fn=None):
+        if rollout not in ("static", "engine"):
+            raise ValueError(f"unknown rollout backend {rollout!r}")
+        self.job_id = job_id
+        self.model = model or build_model(arch, reduced=reduced)
+        self.seed = seed
+        self.steps = steps
+        self.batch = batch
+        self.group = group
+        self.lr = lr
+        self.rollout = rollout
+        self.num_slots = num_slots
+        self.engine_block_size = engine_block_size
+        self.kv = kv
+        self.kv_block_size = kv_block_size
+        self.num_kv_blocks = num_kv_blocks
+        self.reward_fn = reward_fn or arithmetic_reward
+        self.opt_cfg = AdamWConfig(lr=lr)
+        self.task = ArithmeticTask(seed=seed)
+        self.sampler = SamplerConfig(max_new_tokens=max_new,
+                                     temperature=temperature)
+        self._train_step = _jitted_train_step(self.model, self.opt_cfg, steps)
+        self._key = jax.random.PRNGKey(seed)
+        self._engines: dict[int, object] = {}   # max_seq_len -> Engine
+
+    def init_state(self):
+        """Fresh optimizer state; also the initial rollout weights."""
+        return init_train_state(self.model, jax.random.PRNGKey(self.seed),
+                                self.opt_cfg)
+
+    # ---- rollout phase -----------------------------------------------------
+    def _engine_for(self, num_slots: int, max_seq_len: int):
+        """Persistent per-shape engine, reused (jit cache and all) across
+        GRPO iterations via ``Engine.reset`` — weight sync swaps params in,
+        the slot pool and compiled admit/decode blocks stay."""
+        eng = self._engines.get(max_seq_len)
+        if eng is None:
+            from repro.serve import Engine, EngineConfig
+            eng = Engine(self.model, None, EngineConfig(
+                num_slots=num_slots, max_seq_len=max_seq_len,
+                eos_id=self.sampler.eos_id,
+                temperature=self.sampler.temperature,
+                block_size=self.engine_block_size, kv_layout=self.kv,
+                kv_block_size=self.kv_block_size,
+                num_kv_blocks=self.num_kv_blocks))
+            self._engines[max_seq_len] = eng
+        return eng
+
+    def rollout_step(self, params, k: int):
+        """Generate completions for iteration ``k`` with weights ``params``.
+        Returns ``(task_batch, rollout_out)``; blocks until device work is
+        done so permit timelines measure real phase time."""
+        b = self.task.sample_batch(self.batch)
+        prompts = jnp.asarray(np.repeat(b.prompts, self.group, axis=0))
+        self._key, k1 = jax.random.split(self._key)
+        if self.rollout == "engine":
+            B, Sp = prompts.shape
+            eng = self._engine_for(self.num_slots or B,
+                                   Sp + self.sampler.max_new_tokens)
+            out = generate_continuous(
+                self.model, params, prompts, k1, self.sampler,
+                num_slots=self.num_slots, block_size=self.engine_block_size,
+                kv_layout=self.kv, kv_block_size=self.kv_block_size,
+                num_kv_blocks=self.num_kv_blocks, engine=eng)
+        else:
+            out = generate(self.model, params, prompts, k1, self.sampler)
+        jax.block_until_ready(out["completions"])
+        return b, out
+
+    # ---- training phase ----------------------------------------------------
+    def train_phase(self, state, b, out):
+        """Reward -> GRPO advantages -> one optimizer step.  Returns
+        ``(state, rec)`` with the scalar metrics the history records."""
+        answers = [a for a in b.answers for _ in range(self.group)]
+        rewards = self.reward_fn(out["completions"], out["mask"], answers)
+        adv = group_advantages(rewards, self.group)
+        tb = build_train_batch(out, adv, b.prompts.shape[1])
+        state, metrics = self._train_step(state, tb)
+        jax.block_until_ready(metrics["loss"])
+        rec = {"reward": float(rewards.mean()),
+               "acc": float((rewards >= 1.0).mean()),
+               "loss": float(metrics["loss"]),
+               "entropy": float(metrics["entropy"]),
+               "tokens": int(np.asarray(out["mask"]).sum())}
+        return state, rec
+
+
+# ---------------------------------------------------------------------------
+# Reporting: measured timelines -> reclaimed bubble + PhaseProfiles
+# ---------------------------------------------------------------------------
+def _intersection_s(a: list[tuple[str, float, float]],
+                    b: list[tuple[str, float, float]]) -> float:
+    """Total time two capacity-1 pools were busy simultaneously (their
+    interval sets are each non-overlapping, so a two-pointer sweep works)."""
+    ia = sorted((t0, t1) for _, t0, t1 in a)
+    ib = sorted((t0, t1) for _, t0, t1 in b)
+    i = j = 0
+    tot = 0.0
+    while i < len(ia) and j < len(ib):
+        lo = max(ia[i][0], ib[j][0])
+        hi = min(ia[i][1], ib[j][1])
+        if hi > lo:
+            tot += hi - lo
+        if ia[i][1] < ib[j][1]:
+            i += 1
+        else:
+            j += 1
+    return tot
+
+
+@dataclass
+class MuxReport:
+    """What a mux run measured: per-pool busy timelines, the overlap they
+    achieved, and the per-job :class:`PhaseProfile` records that feed the
+    co-execution simulator."""
+    mode: str
+    wall_s: float
+    timelines: dict[str, list[tuple[str, float, float]]]
+    profiles: dict[str, PhaseProfile] = field(default_factory=dict)
+    cache_stats: dict = field(default_factory=dict)
+
+    @property
+    def total_rollout_s(self) -> float:
+        return sum(t1 - t0 for _, t0, t1 in self.timelines.get("rollout", []))
+
+    @property
+    def total_train_s(self) -> float:
+        return sum(t1 - t0 for _, t0, t1 in self.timelines.get("train", []))
+
+    @property
+    def overlap_s(self) -> float:
+        """Wall time during which a rollout phase and a training phase were
+        in flight simultaneously — the reclaimed dependency bubble."""
+        return _intersection_s(self.timelines.get("rollout", []),
+                               self.timelines.get("train", []))
+
+    @property
+    def bubble_back_to_back_s(self) -> float:
+        """The dependency bubble the back-to-back schedule pays: phases
+        strictly alternate, so over the run the lighter pool idles for the
+        whole duration of the other pool's phases —
+        ``min(total_rollout, total_train)`` is the reclaimable part."""
+        return min(self.total_rollout_s, self.total_train_s)
+
+    @property
+    def reclaimed_bubble_frac(self) -> float:
+        """Fraction of the back-to-back bubble the schedule reclaimed."""
+        return self.overlap_s / max(self.bubble_back_to_back_s, 1e-9)
+
+    def summary(self) -> dict:
+        return {
+            "mode": self.mode,
+            "wall_s": self.wall_s,
+            "total_rollout_s": self.total_rollout_s,
+            "total_train_s": self.total_train_s,
+            "overlap_s": self.overlap_s,
+            "bubble_back_to_back_s": self.bubble_back_to_back_s,
+            "reclaimed_bubble_frac": self.reclaimed_bubble_frac,
+            "cache_stats": dict(self.cache_stats),
+        }
+
+
+def _report(mode: str, rt: RollMuxRuntime, wall_s: float) -> MuxReport:
+    return MuxReport(
+        mode=mode, wall_s=wall_s,
+        timelines={name: list(p.timeline) for name, p in rt.pools.items()},
+        profiles=rt.phase_profiles(),
+        cache_stats=dict(rt.cache.stats))
+
+
+def _log(rec: dict, log_every: int, jid: str = "") -> None:
+    if log_every and rec["step"] % log_every == 0:
+        tag = f"[{jid}] " if jid else ""
+        print(f"{tag}step {rec['step']:4d} reward={rec['reward']:.3f} "
+              f"acc={rec['acc']:.3f} loss={rec['loss']:.4f} "
+              f"entropy={rec['entropy']:.3f}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+def run_sequential(job: GRPOJob, *, steps: Optional[int] = None,
+                   runtime: Optional[RollMuxRuntime] = None,
+                   log_every: int = 0):
+    """``--mux off``: the back-to-back baseline.  Phases run under permits
+    so the executed (bubbled) timeline is measured like the mux modes.
+    ``steps`` overrides the job's step count (e.g. a short warmup run)."""
+    rt = runtime or RollMuxRuntime()
+    state = job.init_state()
+    history = []
+    t0 = time.perf_counter()
+    for k in range(job.steps if steps is None else steps):
+        with rt.permit("rollout", f"{job.job_id}:roll"):
+            b, out = job.rollout_step(state["params"], k)
+        with rt.permit("train", f"{job.job_id}:train"):
+            state, rec = job.train_phase(state, b, out)
+        rec = {"step": k, **rec, "rollout_staleness": 0}
+        history.append(rec)
+        _log(rec, log_every)
+    return state, history, _report("off", rt, time.perf_counter() - t0)
+
+
+def run_pipelined(job: GRPOJob, *, max_staleness: int = 1,
+                  runtime: Optional[RollMuxRuntime] = None,
+                  log_every: int = 0):
+    """``--mux pipeline``: overlap rollout of iteration ``k+1`` with the
+    training step of iteration ``k`` (one job, two permit pools, two
+    threads), behind the on-policy staleness guard.
+
+    The rollout thread may generate for iteration ``k`` only once
+    ``trained >= k - max_staleness`` optimizer steps have completed, and it
+    always uses the *newest* synced weights available when the guard opens.
+    ``max_staleness=0`` therefore degenerates to the sequential schedule —
+    same weights, same keys, bit-exact losses — while ``>= 1`` buys overlap
+    at the price of a bounded, importance-corrected policy lag (recorded
+    per step as ``rollout_staleness``)."""
+    rt = runtime or RollMuxRuntime()
+    steps = job.steps
+    state = job.init_state()
+    cv = threading.Condition()
+    shared = {"params": state["params"], "trained": 0, "err": None}
+    rollouts: dict[int, tuple] = {}
+    history = []
+    t0 = time.perf_counter()
+
+    def roll_loop():
+        try:
+            for k in range(steps):
+                with cv:
+                    while (shared["trained"] < k - max_staleness
+                           and shared["err"] is None):
+                        cv.wait()
+                    if shared["err"] is not None:
+                        return
+                    params = shared["params"]   # newest synced weights
+                    version = shared["trained"]
+                with rt.permit("rollout", f"{job.job_id}:roll"):
+                    b, out = job.rollout_step(params, k)
+                with cv:
+                    rollouts[k] = (b, out, version)
+                    cv.notify_all()
+        except BaseException as e:           # surface into the train loop
+            with cv:
+                shared["err"] = e
+                cv.notify_all()
+
+    t = threading.Thread(target=roll_loop, name=f"{job.job_id}-rollout")
+    t.start()
+    try:
+        for k in range(steps):
+            with cv:
+                while k not in rollouts and shared["err"] is None:
+                    cv.wait()
+                if shared["err"] is not None:
+                    raise shared["err"]
+                b, out, version = rollouts.pop(k)
+            with rt.permit("train", f"{job.job_id}:train"):
+                state, rec = job.train_phase(state, b, out)
+            with cv:
+                shared["params"] = state["params"]  # weight sync
+                shared["trained"] = k + 1
+                cv.notify_all()
+            rec = {"step": k, **rec, "rollout_staleness": k - version}
+            history.append(rec)
+            _log(rec, log_every)
+    except BaseException:
+        with cv:
+            if shared["err"] is None:
+                shared["err"] = RuntimeError("train loop aborted")
+            cv.notify_all()
+        raise
+    finally:
+        t.join()
+    return state, history, _report("pipeline", rt, time.perf_counter() - t0)
+
+
+def run_coexec(jobs: list[GRPOJob], *, host_cache_gb: float = 8.0,
+               runtime: Optional[RollMuxRuntime] = None, log_every: int = 0):
+    """``--mux coexec``: N logical jobs' GRPO loops time-multiplex the
+    shared ``rollout`` / ``train`` permit pools (intra-group FIFO =
+    round-robin once saturated).  While one job holds the train permit,
+    another's rollout drains through the serving engine.
+
+    Per-job state lives in the host-DRAM actor cache between phases
+    (``RollMuxRuntime.phase`` offloads after, warm-starts before), and the
+    weight-sync step pushes freshly trained params into the job's rollout
+    actor entry — so each job computes exactly what it would alone, and
+    nothing but the schedule changes.
+
+    Returns ``(states, histories, report)`` keyed by ``job_id``."""
+    rt = runtime or RollMuxRuntime(host_cache_gb=host_cache_gb)
+    rt.pool("rollout", 1)
+    rt.pool("train", 1)
+    for job in jobs:
+        state0 = job.init_state()
+        rt.seed_state(job.job_id, "train", state0)
+        rt.seed_state(job.job_id, "rollout", {"params": state0["params"]})
+    histories: dict[str, list] = {j.job_id: [] for j in jobs}
+    errors: dict[str, BaseException] = {}
+
+    def make_loop(job: GRPOJob):
+        jid = job.job_id
+
+        @rt.phase("rollout", name="roll")
+        def roll(rstate, k):
+            b, out = job.rollout_step(rstate["params"], k)
+            return rstate, (b, out)
+
+        @rt.phase("train", name="train")
+        def train(tstate, b, out):
+            tstate, rec = job.train_phase(tstate, b, out)
+            return tstate, (tstate["params"], rec)
+
+        def loop():
+            try:
+                for k in range(job.steps):
+                    b, out = roll(jid, k)
+                    new_params, rec = train(jid, b, out)
+                    # weight sync: trained params -> this job's rollout
+                    # actor entry (the rollout state is exactly the params,
+                    # so overwrite in place — no device round trip)
+                    rt.cache.offload(f"{jid}/rollout",
+                                     {"params": new_params})
+                    rec = {"step": k, **rec, "rollout_staleness": 0}
+                    histories[jid].append(rec)
+                    _log(rec, log_every, jid)
+            except BaseException as e:
+                errors[jid] = e
+        return loop
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=make_loop(j), name=j.job_id)
+               for j in jobs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        jid, e = next(iter(errors.items()))
+        raise RuntimeError(f"co-executed job {jid} failed") from e
+    states = {}
+    for job in jobs:
+        state, _ = rt.cache.restore(f"{job.job_id}/train")
+        states[job.job_id] = state
+    return states, histories, _report("coexec", rt,
+                                      time.perf_counter() - t0)

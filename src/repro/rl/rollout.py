@@ -71,7 +71,7 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         frontend=None, *, num_slots: int | None = None,
                         block_size: int = 1, kv_layout: str = "contiguous",
                         kv_block_size: int = 16,
-                        num_kv_blocks: int | None = None):
+                        num_kv_blocks: int | None = None, engine=None):
     """Rollout-phase executor backed by the continuous-batching engine.
 
     Drop-in alternative to :func:`generate`: same inputs, same output dict
@@ -89,6 +89,13 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     per-request :func:`generate`; sampled decoding draws per-step keys from
     ``rng`` via the engine (a different, equally valid stream than
     ``generate``'s).
+
+    ``engine`` lets a training driver reuse one persistent (drained)
+    :class:`~repro.serve.Engine` across GRPO iterations: the call swaps in
+    freshly synced ``params`` and the new key stream via ``Engine.reset``
+    and serves from the existing slot pool / jit cache (the mux trainer's
+    rollout actor).  The engine must have been built for the same model
+    and a compatible ``max_seq_len``.
     """
     import numpy as np
 
@@ -97,12 +104,33 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     B, Sp = prompts.shape
     T = sampler.max_new_tokens
     prompts_np = np.asarray(prompts, np.int32)
-    engine = Engine(model, params, EngineConfig(
-        num_slots=B if num_slots is None else num_slots,
-        max_seq_len=Sp + T,
-        eos_id=sampler.eos_id, temperature=sampler.temperature,
-        block_size=block_size, kv_layout=kv_layout,
-        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks), rng=rng)
+    if engine is None:
+        engine = Engine(model, params, EngineConfig(
+            num_slots=B if num_slots is None else num_slots,
+            max_seq_len=Sp + T,
+            eos_id=sampler.eos_id, temperature=sampler.temperature,
+            block_size=block_size, kv_layout=kv_layout,
+            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks),
+            rng=rng)
+    else:
+        cfg = engine.config
+        if cfg.max_seq_len < Sp + T:
+            raise ValueError(
+                f"persistent engine max_seq_len {cfg.max_seq_len} "
+                f"< prompt {Sp} + budget {T}")
+        # the engine's sampling behaviour is baked into its jitted fns —
+        # a sampler that disagrees would be silently ignored, so refuse
+        if (cfg.temperature, cfg.eos_id) != (sampler.temperature,
+                                             sampler.eos_id):
+            raise ValueError(
+                f"persistent engine serves temperature={cfg.temperature}, "
+                f"eos_id={cfg.eos_id} but sampler asks for "
+                f"temperature={sampler.temperature}, eos_id={sampler.eos_id}")
+        if cfg.kv_layout != kv_layout:
+            raise ValueError(
+                f"persistent engine kv_layout={cfg.kv_layout!r} != "
+                f"requested {kv_layout!r}")
+        engine.reset(params, rng)
     for i in range(B):
         fr = None if frontend is None else frontend[i:i + 1]
         engine.submit(Request(rid=i, prompt=prompts_np[i], max_new_tokens=T,

@@ -4,7 +4,6 @@ what ``train_4k`` lowers in the dry-run."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -39,6 +39,7 @@ bucket prompt lengths (the benchmark uses a handful of buckets).
 """
 from __future__ import annotations
 
+import copy
 import functools
 import time
 from dataclasses import dataclass
@@ -391,13 +392,15 @@ class Engine:
         del self._active[slot]
         self.slots.release(slot)
 
-    def step(self) -> bool:
+    def step(self) -> int:
         """One scheduler iteration: admit waiting requests, then run
-        ``block_size`` decode steps for all slots.  Returns False if there
-        was nothing to do (idle)."""
+        ``block_size`` decode steps for all slots.  Returns the number of
+        decode steps executed — ``0`` means *no work* (nothing admissible
+        queued and no live slot), so drivers waiting on late submissions
+        can sleep instead of spinning (see :func:`run_trace`)."""
         self._admit()
         if not self._active:
-            return False
+            return 0
         if self.config.temperature == 0:
             keys = self._zero_keys          # unused by greedy sampling
         else:
@@ -436,17 +439,116 @@ class Engine:
                 if not o.tokens and self.clock is not None:
                     o.first_token_time = self.clock()   # first token on host
                 o.tokens.extend(int(t) for t in toks[rec_col, slot])
-                o.logprobs.extend(float(l) for l in logps[rec_col, slot])
+                o.logprobs.extend(float(x) for x in logps[rec_col, slot])
                 self.stats.recorded_tokens += n_rec
             if (not alive[slot]) or remaining[slot] <= 0:
                 self._finalize(slot)
-        return True
+        return K
 
-    def run(self) -> list[RequestOutput]:
-        """Drive the engine until queue and slots are empty; outputs by rid."""
+    def run(self, *, max_ticks: Optional[int] = None,
+            should_yield=None) -> list[RequestOutput]:
+        """Drive the engine until queue and slots are empty; outputs by rid.
+
+        ``max_ticks`` bounds the number of scheduler iterations and
+        ``should_yield()`` (checked between ticks) lets a driver preempt a
+        live engine cooperatively — in both cases ``run`` returns with work
+        possibly still in flight (``idle`` is False); call ``run`` again, or
+        :meth:`export_state` to checkpoint the live slots, to continue.
+        """
+        ticks = 0
         while not self.idle:
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            if should_yield is not None and ticks and should_yield():
+                break
             self.step()
+            ticks += 1
         return [self.finished[r] for r in sorted(self.finished)]
+
+    # ---- suspend / resume --------------------------------------------------
+    def reset(self, params=None, rng: Optional[jax.Array] = None) -> None:
+        """Prepare a drained engine for its next batch of requests: swap in
+        freshly synced weights and a new key stream, and drop the previous
+        batch's outputs.  This is how the mux trainer reuses one engine
+        (and its jit cache) across GRPO iterations."""
+        if not self.idle:
+            raise RuntimeError("reset() on a live engine; drain or "
+                               "export_state() first")
+        if params is not None:
+            self.params = params
+        if rng is not None:
+            self._rng = rng
+        self.finished.clear()
+
+    def export_state(self) -> dict:
+        """Checkpoint the live serving state mid-flight (drain of live
+        slots): ``{"device": <array pytree>, "host": <bookkeeping>}``.
+
+        The device part is a pure array pytree — exactly what a host-DRAM
+        actor cache (``train.checkpoints.HostStateCache``) offloads when a
+        co-executing job suspends between run permits.  The host part is a
+        deep copy, so the snapshot stays valid however the engine runs on
+        afterwards.  :meth:`import_state` on any engine with the same model
+        and config resumes token-for-token.
+        """
+        device = {"cache": self.slots.cache,
+                  "last_logits": self._last_logits,
+                  "alive": self._alive,
+                  "remaining": self._remaining,
+                  "rng": self._rng}
+        slots: dict = {"owner": list(self.slots.owner),
+                       "free": list(self.slots.free),
+                       "events": list(self.slots.events)}
+        if self.paged:
+            a = self.slots.alloc
+            slots.update(
+                tables=self.slots.tables.copy(),
+                nblocks=list(self.slots.nblocks),
+                alloc={"free": list(a.free),
+                       "refcount": dict(a.refcount),
+                       "quota": dict(a.quota),
+                       "owned": {k: list(v) for k, v in a.owned.items()},
+                       "events": list(a.events)})
+        host = copy.deepcopy({
+            "host_index": list(self._host_index),
+            "active": dict(self._active),
+            "queue": list(self.queue._q),
+            "finished": dict(self.finished),
+            "stats": self.stats,
+            "slots": slots,
+        })
+        return {"device": device, "host": host}
+
+    def import_state(self, state: dict) -> None:
+        """Restore a :meth:`export_state` snapshot (device leaves may come
+        back as host numpy arrays from an actor cache — they are re-put)."""
+        dev = state["device"]
+        self.slots.cache = jax.tree.map(jnp.asarray, dev["cache"])
+        self._last_logits = jnp.asarray(dev["last_logits"])
+        self._alive = jnp.asarray(dev["alive"])
+        self._remaining = jnp.asarray(dev["remaining"])
+        self._rng = jnp.asarray(dev["rng"])
+        host = copy.deepcopy(state["host"])
+        self._host_index = list(host["host_index"])
+        self._active = dict(host["active"])
+        self.queue._q.clear()
+        self.queue._q.extend(host["queue"])
+        self.finished = dict(host["finished"])
+        self.stats = host["stats"]
+        sl = host["slots"]
+        self.slots.owner = list(sl["owner"])
+        self.slots.free = list(sl["free"])
+        self.slots.events = list(sl["events"])
+        if self.paged:
+            self.slots.tables = sl["tables"].copy()
+            self.slots.nblocks = list(sl["nblocks"])
+            self.slots._dirty = True
+            a = self.slots.alloc
+            a.free = list(sl["alloc"]["free"])
+            a.refcount = dict(sl["alloc"]["refcount"])
+            a.quota = dict(sl["alloc"]["quota"])
+            a.owned = {k: list(v) for k, v in sl["alloc"]["owned"].items()}
+            a.events = list(sl["alloc"]["events"])
 
 
 def run_trace(engine: Engine, requests: list[Request],
@@ -470,9 +572,12 @@ def run_trace(engine: Engine, requests: list[Request],
         progressed = engine.step()
         if not progressed and pending:
             if realtime:
+                # engine reported "no work": sleep the idle gap away in one
+                # go — the next event is the head arrival, nothing else can
+                # wake a single-threaded trace replay (no busy spin)
                 wait = pending[0].arrival_time - engine.clock()
                 if wait > 0:
-                    time.sleep(min(wait, 0.01))
+                    time.sleep(wait)
             else:
                 nxt = pending.pop(0)
                 nxt.arrival_time = engine.clock()

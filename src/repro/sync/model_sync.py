@@ -32,7 +32,7 @@ def make_sync_mesh(n_per_cluster: int) -> Mesh:
 
 def _flatten_concat(params) -> jax.Array:
     leaves = jax.tree.leaves(params)
-    return jnp.concatenate([l.reshape(-1) for l in leaves])
+    return jnp.concatenate([x.reshape(-1) for x in leaves])
 
 
 def hierarchical_sync(mesh: Mesh, flat_train: jax.Array) -> jax.Array:

@@ -8,7 +8,6 @@ paper's Fig 4 measures.
 """
 from __future__ import annotations
 
-import io
 import os
 import pickle
 import time
@@ -20,7 +19,7 @@ import numpy as np
 
 def _flatten(tree) -> tuple[list[np.ndarray], Any]:
     leaves, treedef = jax.tree.flatten(tree)
-    return [np.asarray(l) for l in leaves], treedef
+    return [np.asarray(x) for x in leaves], treedef
 
 
 def save_checkpoint(path: str, tree) -> None:

@@ -22,7 +22,8 @@ class AdamWConfig:
 
 def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> dict:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

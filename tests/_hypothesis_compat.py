@@ -12,7 +12,7 @@ sampled_from).
 from __future__ import annotations
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
-    from hypothesis import given, settings, strategies
+    from hypothesis import given, settings, strategies  # noqa: F401
 except ModuleNotFoundError:
     import random
     import zlib

@@ -1,0 +1,323 @@
+"""Phase-multiplexed GRPO executors (``rl.coexec``) + the engine contracts
+they rely on.
+
+The load-bearing guarantees:
+
+  * ``pipeline`` with the staleness guard forced to sync
+    (``max_staleness=0``) is *bit-exact* to the sequential back-to-back
+    path — same per-step losses, same final params — while ``>= 1`` only
+    ever lags the rollout weights by the guarded bound.
+  * ``coexec`` changes the schedule, never the math: each co-executed
+    job's losses/params match running that job alone, its state
+    warm-starting from the host actor cache between every phase.
+  * the round-robin permit timeline is well-formed: zero overlapping
+    intervals per pool (run permits are exclusive) and strict job
+    alternation once both jobs are queued.
+  * warm-start offload/restore round-trips params *and* optimizer state
+    bit-exactly (the actor-cache contract the executors lean on).
+  * the engine reports "no work" distinctly (no busy spin while waiting on
+    late submissions) and can checkpoint/resume live slots mid-flight.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.phase_control import RollMuxRuntime
+from repro.core.simulator import simulate_profiles
+from repro.data import tokenizer as tok
+from repro.models import build_model
+from repro.rl.coexec import (GRPOJob, MuxConfig, run_coexec, run_pipelined,
+                             run_sequential)
+from repro.serve import Engine, EngineConfig, Request, run_trace
+from repro.train.checkpoints import HostStateCache
+
+_MODELS = {}
+
+
+def get_model(arch="internlm2-1.8b"):
+    if arch not in _MODELS:
+        _MODELS[arch] = build_model(arch, reduced=True)
+    return _MODELS[arch]
+
+
+def toy_reward(completions, mask, answers):
+    """Deterministic reward with intra-group variance (random-init models
+    rarely earn the arithmetic reward, which would zero all advantages)."""
+    c = np.asarray(completions, np.int64)
+    m = np.asarray(mask)
+    return ((c * m).sum(axis=1) % 5).astype(np.float32)
+
+
+KW = dict(steps=3, batch=2, group=2, max_new=4, temperature=1.0)
+
+
+def make_job(jid="job0", seed=0, **over):
+    kw = {**KW, **over}
+    return GRPOJob(jid, model=get_model(), seed=seed, reward_fn=toy_reward,
+                   **kw)
+
+
+def losses(history):
+    return [r["loss"] for r in history]
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: mux changes the schedule, not the math
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rollout", ["static", "engine"])
+def test_pipeline_forced_sync_is_bit_exact(rollout):
+    s_off, h_off, r_off = run_sequential(make_job(rollout=rollout))
+    s_syn, h_syn, r_syn = run_pipelined(make_job(rollout=rollout),
+                                        max_staleness=0)
+    assert losses(h_off) == losses(h_syn)
+    assert [r["reward"] for r in h_off] == [r["reward"] for r in h_syn]
+    assert all(r["rollout_staleness"] == 0 for r in h_syn)
+    assert_trees_equal(s_off["params"], s_syn["params"])
+    assert_trees_equal(s_off["opt"], s_syn["opt"])
+    # back-to-back executes zero overlap by construction
+    assert r_off.overlap_s == 0.0
+
+
+def test_pipeline_staleness_guard_bounds_lag():
+    _, hist, _ = run_pipelined(make_job(steps=5), max_staleness=1)
+    stale = [r["rollout_staleness"] for r in hist]
+    assert all(0 <= s <= 1 for s in stale)
+    assert all(np.isfinite(r["loss"]) for r in hist)
+
+
+def test_coexec_jobs_match_solo_runs_bit_exactly():
+    jobs = [make_job("job0", seed=0), make_job("job1", seed=1)]
+    states, hists, report = run_coexec(jobs)
+    for jid, seed in (("job0", 0), ("job1", 1)):
+        s_solo, h_solo, _ = run_sequential(make_job(jid, seed=seed))
+        assert losses(hists[jid]) == losses(h_solo), jid
+        assert_trees_equal(states[jid]["params"], s_solo["params"])
+        assert_trees_equal(states[jid]["opt"], s_solo["opt"])
+    # every context switch after seeding was a warm start from host DRAM
+    assert report.cache_stats["cold_misses"] == 0
+    assert report.cache_stats["warm_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Round-robin permit timeline
+# ---------------------------------------------------------------------------
+def test_coexec_round_robin_timeline_no_overlap():
+    """Deterministic two-job interleaving contract: per pool, permit
+    intervals never overlap (the run permit is exclusive) and jobs strictly
+    alternate once both are in the FIFO — job X can only re-request a pool
+    after its other phase completed, which serializes behind job Y's
+    already-queued request."""
+    jobs = [make_job("job0", seed=0), make_job("job1", seed=1)]
+    _, _, report = run_coexec(jobs)
+    for pool in ("rollout", "train"):
+        tl = sorted(report.timelines[pool], key=lambda e: e[1])
+        assert len(tl) == 2 * KW["steps"]
+        # zero overlapping intervals (train especially: one optimizer step
+        # at a time on the shared train pool)
+        for (_, _, t1_prev), (_, t0_next, _) in zip(tl, tl[1:]):
+            assert t0_next >= t1_prev - 1e-9
+        users = [who.split(":")[0] for who, _, _ in tl]
+        assert set(users) == {"job0", "job1"}
+        # strict alternation in the interior (first entry may race)
+        for u_prev, u_next in zip(users[1:], users[2:]):
+            assert u_prev != u_next, users
+    # per-job phase profiles carry one measured duration per executed phase
+    for jid in ("job0", "job1"):
+        prof = report.profiles[jid]
+        assert len(prof.rollout_s) == KW["steps"]
+        assert len(prof.train_s) == KW["steps"]
+        assert prof.iterations == KW["steps"]
+
+
+def test_measured_profiles_drive_the_simulator():
+    jobs = [make_job("job0", seed=0), make_job("job1", seed=1)]
+    _, _, report = run_coexec(jobs)
+    res = simulate_profiles(report.profiles.values())
+    assert set(res.iter_time) == {"job0", "job1"}
+    for jid, prof in report.profiles.items():
+        # a job's iteration can't beat its own serial phase sum, and the
+        # round-robin bound is phases of both jobs in the cycle
+        assert res.iter_time[jid] >= prof.t_roll_mean * 0.5
+        assert res.iter_time[jid] <= (sum(p.t_roll + p.t_train
+                                          for p in report.profiles.values())
+                                      + 1e-6)
+    assert 0.0 <= res.rollout_bubble <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Warm-start actor cache: bit-exact state round trip
+# ---------------------------------------------------------------------------
+def test_host_cache_roundtrips_train_state_bit_exactly():
+    job = make_job()
+    state = job.init_state()
+    cache = HostStateCache(1 << 30)
+    cache.offload("job0/train", state)
+    back, dt = cache.restore("job0/train")
+    assert dt >= 0
+    assert_trees_equal(state["params"], back["params"])
+    assert_trees_equal(state["opt"], back["opt"])
+    # dtypes survive the host round trip too (bf16/f32 moments alike)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_mux_config_validates():
+    with pytest.raises(ValueError):
+        MuxConfig(mode="sideways")
+    with pytest.raises(ValueError):
+        MuxConfig(max_staleness=-1)
+    assert MuxConfig(mode="pipeline").max_staleness == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine contracts the mux driver relies on
+# ---------------------------------------------------------------------------
+def _prompt():
+    return np.asarray(tok.encode("5+5=", bos=True), np.int32)
+
+
+def test_engine_step_reports_no_work_distinctly():
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=24,
+                                         temperature=0.0))
+    assert eng.step() == 0 and eng.idle
+    eng.submit(Request(rid=0, prompt=_prompt(), max_new_tokens=3))
+    assert eng.step() == eng.config.block_size      # did real decode work
+    eng.run()
+    assert eng.step() == 0                          # drained again
+
+
+def test_run_trace_sleeps_until_next_arrival_no_spin():
+    """An idle engine waiting on a late submission must sleep the gap away,
+    not poll: the whole idle window costs O(1) step() calls."""
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=24,
+                                         temperature=0.0))
+    # warm the jit caches so the timed replay only measures scheduling
+    eng.submit(Request(rid=-1, prompt=_prompt(), max_new_tokens=2))
+    eng.run()
+    eng.finished.clear()
+    calls = {"n": 0}
+    orig = eng.step
+
+    def counting_step():
+        calls["n"] += 1
+        return orig()
+
+    eng.step = counting_step
+    gap = 0.25
+    reqs = [Request(rid=0, prompt=_prompt(), max_new_tokens=2,
+                    arrival_time=0.0),
+            Request(rid=1, prompt=_prompt(), max_new_tokens=2,
+                    arrival_time=gap)]
+    t0 = time.perf_counter()
+    report = run_trace(eng, reqs, realtime=True)
+    wall = time.perf_counter() - t0
+    assert sorted(o.rid for o in report["outputs"]) == [0, 1]
+    assert wall >= gap                       # really waited for the arrival
+    # a 10ms-poll busy loop would burn ~gap/10ms calls in the idle window;
+    # sleeping until the arrival costs a handful of ticks total
+    assert calls["n"] <= 12, calls["n"]
+
+
+def test_engine_submit_while_running_mid_flight():
+    """The mux driver submits while earlier requests are still decoding."""
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=24,
+                                         temperature=0.0))
+    eng.submit(Request(rid=0, prompt=_prompt(), max_new_tokens=4))
+    eng.run(max_ticks=2)
+    assert not eng.idle                      # preempted with work in flight
+    eng.submit(Request(rid=1, prompt=_prompt(), max_new_tokens=2))
+    outs = eng.run()
+    assert [o.rid for o in outs] == [0, 1]
+    assert all(o.num_tokens > 0 for o in outs)
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_engine_checkpoint_resume_mid_flight_identical(layout):
+    """export_state mid-decode + import_state into a fresh engine resumes
+    token-for-token (drain/checkpoint of live slots for permit handoff)."""
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    cfg = EngineConfig(num_slots=2, max_seq_len=24, temperature=0.0,
+                       kv_layout=layout, kv_block_size=4)
+    e1 = Engine(m, params, cfg)
+    for i in range(5):
+        e1.submit(Request(rid=i, prompt=_prompt(), max_new_tokens=3 + i % 3))
+    e1.step()
+    e1.step()                                # live slots + queued requests
+    snap = e1.export_state()
+    ref = [(o.rid, o.tokens, o.logprobs) for o in e1.run()]
+    e2 = Engine(m, params, cfg)
+    e2.import_state(snap)
+    got = [(o.rid, o.tokens, o.logprobs) for o in e2.run()]
+    assert got == ref
+    if layout == "paged":
+        e2.slots.check()                     # allocator invariants survived
+
+
+def test_engine_checkpoint_through_host_cache():
+    """The device half of an engine snapshot survives the host-DRAM actor
+    cache (offload -> numpy -> device_put) — the coexec suspend path."""
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    cfg = EngineConfig(num_slots=2, max_seq_len=24, temperature=0.0)
+    e1 = Engine(m, params, cfg)
+    for i in range(3):
+        e1.submit(Request(rid=i, prompt=_prompt(), max_new_tokens=4))
+    e1.step()
+    snap = e1.export_state()
+    cache = HostStateCache(1 << 30)
+    cache.offload("job0/engine", snap["device"])
+    dev, _ = cache.restore("job0/engine")
+    ref = [(o.rid, o.tokens) for o in e1.run()]
+    e2 = Engine(m, params, cfg)
+    e2.import_state({"device": dev, "host": snap["host"]})
+    assert [(o.rid, o.tokens) for o in e2.run()] == ref
+
+
+def test_engine_reset_requires_drained_engine():
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(num_slots=1, max_seq_len=24))
+    eng.submit(Request(rid=0, prompt=_prompt(), max_new_tokens=3))
+    eng.step()
+    with pytest.raises(RuntimeError):
+        eng.reset()
+    eng.run()
+    eng.reset(rng=jax.random.PRNGKey(7))
+    assert eng.idle and not eng.finished
+
+
+def test_runtime_permit_records_timeline():
+    rt = RollMuxRuntime()
+    done = []
+
+    def worker(jid, delay):
+        with rt.permit("train", f"{jid}:train"):
+            time.sleep(delay)
+            done.append(jid)
+
+    ts = [threading.Thread(target=worker, args=(f"j{i}", 0.01))
+          for i in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    tl = sorted(rt.pools["train"].timeline, key=lambda e: e[1])
+    assert len(tl) == 3 and len(done) == 3
+    for (_, _, t1), (_, t0, _) in zip(tl, tl[1:]):
+        assert t0 >= t1 - 1e-9               # capacity-1 pool: no overlap
+    assert rt.pools["train"].busy_time > 0

@@ -1,5 +1,4 @@
 """AdamW + schedules + host-cache checkpointing."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

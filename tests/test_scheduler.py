@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (CoExecutionGroup, GreedyMostIdle, InterGroupScheduler,
+from repro.core import (CoExecutionGroup, InterGroupScheduler,
                         Node, NodeAllocator, Placement, RLJob, H20, H800)
 
 

@@ -3,10 +3,9 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, list_archs
-from repro.launch.mesh import make_local_mesh
+from repro.configs import list_archs
 from repro.models import build_model
-from repro.models.sharding import DEFAULT_RULES, ShardingRules
+from repro.models.sharding import ShardingRules
 
 
 class FakeMesh:
@@ -54,8 +53,9 @@ def test_param_specs_cover_tree(arch):
     params = m.init_abstract()
     specs = m.logical_specs()
     flat_p = jax.tree.leaves(params)
-    is_spec = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
     flat_s = jax.tree.leaves(specs, is_leaf=is_spec)
     assert len(flat_p) == len(flat_s)
     pd = jax.tree.structure(params)
@@ -70,8 +70,9 @@ def test_cache_specs_cover_tree(arch):
     m = build_model(arch, reduced=True)
     cache = jax.eval_shape(lambda: m.init_cache(2, 32))
     specs = m.cache_logical_specs()
-    is_spec = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
     flat_c = jax.tree.leaves(cache)
     flat_s = jax.tree.leaves(specs, is_leaf=is_spec)
     assert len(flat_c) == len(flat_s)

@@ -1,10 +1,8 @@
 """Cluster-level trace replay invariants (paper §7.4/§7.5 semantics)."""
-import numpy as np
 import pytest
 
 from repro.core import (ClusterSimulator, GreedyMostIdle, InterGroupScheduler,
-                        NodeAllocator, RandomScheduler, SoloDisaggregation,
-                        replay_verl)
+                        NodeAllocator, SoloDisaggregation, replay_verl)
 from repro.core.trace import philly_like_trace, production_replay_trace
 
 

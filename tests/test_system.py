@@ -6,10 +6,9 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.phase_control import RollMuxRuntime
-from repro.data import ArithmeticTask, tokenizer as tok
+from repro.data import ArithmeticTask
 from repro.launch.train import build_train_batch, run_training
 from repro.models import build_model
 from repro.rl import (SamplerConfig, arithmetic_reward, generate,

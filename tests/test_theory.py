@@ -2,8 +2,7 @@
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.theory import (aggregate_utilization, check_theorem1,
-                               make_group)
+from repro.core.theory import check_theorem1, make_group
 
 dur = st.floats(20.0, 400.0)
 
