@@ -3,6 +3,8 @@ the committed baseline and fail (exit 1) on a >``--tolerance`` drop.
 
     python benchmarks/check_regression.py BASELINE CANDIDATE \
         --metrics engine.tok_per_s,speedup_engine_vs_static [--tolerance 0.15]
+    python benchmarks/check_regression.py BASELINE CANDIDATE \
+        --floors prefix.extra_concurrency_at_equal_memory=1
 
 Metrics are dotted paths into the report JSON.  A metric regresses when
 ``candidate < baseline * (1 - tolerance)``; higher must be better for every
@@ -11,6 +13,13 @@ never latencies).  Ratio metrics (mode-vs-mode speedups, bubble fractions)
 are machine-independent; absolute tok/s is only comparable when baseline
 and candidate ran on the same runner class, which is why CI diffs the
 ``--quick`` reports whose baselines are refreshed from CI artifacts.
+
+``--floors path=value,...`` adds *absolute* assertions on the candidate
+alone — ``candidate >= value`` regardless of the baseline.  This is how
+the scheduler-path contracts are guarded: the prefix-sharing engine must
+keep admitting at least one extra concurrent request at equal KV memory,
+and deadline scheduling must keep its attainment floor — logical
+properties of the trace, not timings, so a hard floor is the right guard.
 
 The candidate's ``config`` block must match the baseline's (same workload,
 seed and sizes) — comparing different workloads is a config error, not a
@@ -36,12 +45,17 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="committed BENCH_*.json")
     ap.add_argument("candidate", help="freshly measured BENCH_*.json")
-    ap.add_argument("--metrics", required=True,
+    ap.add_argument("--metrics", default="",
                     help="comma-separated dotted paths; higher is better")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed fractional drop before failing")
+    ap.add_argument("--floors", default="",
+                    help="comma-separated path=value absolute floors the "
+                         "candidate must meet regardless of the baseline")
     ap.add_argument("--skip-config-check", action="store_true")
     args = ap.parse_args()
+    if not args.metrics and not args.floors:
+        ap.error("nothing to check: pass --metrics and/or --floors")
 
     with open(args.baseline) as f:
         base = json.load(f)
@@ -64,6 +78,19 @@ def main() -> int:
         status = "FAIL" if c < floor else "ok"
         print(f"{status:7s}  {path}: baseline={b:.4g} candidate={c:.4g} "
               f"(floor {floor:.4g}, {(c / b - 1) * 100:+.1f}%)")
+        if c < floor:
+            failed.append(path)
+    for spec in [f.strip() for f in args.floors.split(",") if f.strip()]:
+        path, _, floor_s = spec.partition("=")
+        floor = float(floor_s)
+        c = lookup(cand, path)
+        if c is None:
+            print(f"MISSING  {path}: candidate={c} (floor {floor:.4g})")
+            failed.append(path)
+            continue
+        status = "FAIL" if c < floor else "ok"
+        print(f"{status:7s}  {path}: candidate={c:.4g} "
+              f"(absolute floor {floor:.4g})")
         if c < floor:
             failed.append(path)
     if failed:

@@ -317,3 +317,22 @@ class CoExecutionGroup:
         res = self.simulate(n_cycles=n_cycles)
         return all(res.iter_time[j] <= self.jobs[j].slo * margin
                    * self.jobs[j].t_solo + 1e-6 for j in self.jobs)
+
+    # ---- the contract the serving layer enforces --------------------------
+    def slowdown_bound(self, job_id: Optional[str] = None,
+                       *, margin: float = 1.0) -> float:
+        """The slowdown this group's admission *guaranteed* a job: worst-case
+        iteration time stays within ``slowdown_bound * t_solo`` (that is
+        what :meth:`slo_ok` checked before the job was admitted).
+
+        This is the number the serving engine's ``SLOPolicy`` consumes
+        (``repro.serve.sched``): per-request deadlines of
+        ``arrival + bound * est_solo_latency`` turn the planner's per-job
+        promise into an admission rule the rollout engine enforces under
+        contention.  Without ``job_id`` the group's *tightest* bound is
+        returned — the constraint every co-executed request must respect
+        for no co-member's promise to break.
+        """
+        if job_id is not None:
+            return self.jobs[job_id].slo * margin
+        return min((j.slo for j in self.jobs.values()), default=1.0) * margin

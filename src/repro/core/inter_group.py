@@ -167,3 +167,20 @@ class InterGroupScheduler:
 
     def total_cost_per_hour(self) -> float:
         return sum(G.cost_per_hour() for G in self.groups.values())
+
+    # ------------------------------------------------------------------
+    def slo_contract(self) -> dict[str, float]:
+        """Export the per-job slowdown bounds admission has guaranteed:
+        ``{job_id: bound}`` with ``bound = job.slo * admission_margin``
+        (the margin the planner reserved for context-switch latency and
+        stochastic draws is part of the promise, so the serving layer
+        enforces the *tightened* bound too).
+
+        This is the wire between planning and serving: the engine policy
+        for a job's rollout traffic is
+        ``SLOPolicy.from_contract(sched.slo_contract(), job_id)`` — the
+        same bound ``slo_ok`` admitted against now orders and gates
+        per-request admission inside the engine.
+        """
+        return {jid: G.slowdown_bound(jid, margin=self.admission_margin)
+                for G in self.groups.values() for jid in G.jobs}

@@ -1,13 +1,17 @@
 """Serving drivers: continuous-batching engine (default) + static batch.
 
-The continuous path feeds prompts through ``repro.serve.Engine`` — FIFO
-admission into a fixed pool of KV-cache slots, slot recycle on EOS, decode
-batched across all live slots.  The static path is the legacy
-one-batch-end-to-end ``generate`` call, kept as the benchmark baseline.
+The continuous path feeds prompts through ``repro.serve.Engine`` —
+policy-driven admission (``--sched fifo|deadline|slo``) into a fixed pool
+of KV-cache slots, slot recycle on EOS, decode batched across all live
+slots, optional radix prompt-prefix KV sharing (``--prefix-share``, paged
+layout).  The static path is the legacy one-batch-end-to-end ``generate``
+call, kept as the benchmark baseline.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
         --batch 8 --slots 4 --max-new 32              # continuous (default)
     PYTHONPATH=src python -m repro.launch.serve --engine static ...
+    PYTHONPATH=src python -m repro.launch.serve --kv paged --prefix-share \
+        --group 4                                     # GRPO-shaped sharing
 """
 from __future__ import annotations
 
@@ -65,9 +69,14 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                      num_slots: int | None = None, block_size: int = 1,
                      kv: str = "contiguous", kv_block_size: int = 16,
                      num_kv_blocks: int | None = None,
+                     sched: str = "fifo", policy=None,
+                     prefix_share: bool = False, group: int | None = None,
                      model=None, params=None):
     """Continuous batching: requests stream through the slot-pool engine
-    (``kv="paged"`` serves from the shared block-pool KV layout)."""
+    (``kv="paged"`` serves from the shared block-pool KV layout;
+    ``sched`` picks the admission policy and ``prefix_share`` enables
+    radix prompt-prefix sharing — with ``group``, every ``group``
+    consecutive prompts are treated as one shared-prefix group)."""
     if model is None:
         model = build_model(arch, reduced=reduced)
     key = jax.random.PRNGKey(seed)
@@ -80,7 +89,9 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                               frontend=fr, num_slots=num_slots,
                               block_size=block_size, kv_layout=kv,
                               kv_block_size=kv_block_size,
-                              num_kv_blocks=num_kv_blocks)
+                              num_kv_blocks=num_kv_blocks, sched=sched,
+                              policy=policy, prefix_share=prefix_share,
+                              group=group)
     dt = time.perf_counter() - t0
     n_tok = int(out["mask"].sum())
     stats = out["engine_stats"]
@@ -90,7 +101,9 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
             "slot_utilization": stats.slot_utilization,
             "prefills": stats.prefills, "decode_steps": stats.steps,
             "peak_active": stats.peak_active,
-            "peak_kv_blocks": stats.peak_kv_blocks}
+            "peak_kv_blocks": stats.peak_kv_blocks,
+            "prefix_hits": stats.prefix_hits,
+            "blocks_saved": stats.blocks_saved}
 
 
 def _main():
@@ -111,22 +124,44 @@ def _main():
     ap.add_argument("--num-kv-blocks", type=int, default=None,
                     help="paged pool size in blocks (default: same memory "
                          "as the contiguous slot pool)")
+    ap.add_argument("--sched", choices=("fifo", "deadline", "slo"),
+                    default="fifo",
+                    help="admission policy: fifo = strict arrival order; "
+                         "deadline = EDF with bounded head skipping; slo = "
+                         "deadlines derived from a slowdown bound (the "
+                         "inter-group SLO contract)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="radix prompt-prefix KV sharing (--kv paged): "
+                         "each --group consecutive prompts share one "
+                         "prefill and pin the prompt's KV blocks")
+    ap.add_argument("--group", type=int, default=None,
+                    help="shared-prefix group size for --prefix-share "
+                         "(each prompt is duplicated group times, the "
+                         "GRPO rollout shape)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
     prompts = [f"{i}+{i+1}=" for i in range(args.batch)]
+    if args.group:
+        prompts = [p for p in prompts for _ in range(args.group)]
     if args.engine == "continuous":
         res = serve_continuous(args.arch, prompts, max_new=args.max_new,
                                num_slots=args.slots,
                                block_size=args.block_size, kv=args.kv,
                                kv_block_size=args.kv_block_size,
-                               num_kv_blocks=args.num_kv_blocks)
+                               num_kv_blocks=args.num_kv_blocks,
+                               sched=args.sched,
+                               prefix_share=args.prefix_share,
+                               group=args.group)
         extra = (f", slot util {res['slot_utilization']:.0%}, "
                  f"{res['decode_steps']} decode steps")
+        if args.prefix_share:
+            extra += (f", {res['prefix_hits']} prefix hits "
+                      f"({res['blocks_saved']} blocks saved)")
     else:
         res = serve_batch(args.arch, prompts, max_new=args.max_new)
         extra = ""
-    print(f"[{args.engine}] served {args.batch} requests, {res['tokens']} "
+    print(f"[{args.engine}] served {len(prompts)} requests, {res['tokens']} "
           f"tokens in {res['wall_s']:.2f}s ({res['tok_per_s']:.1f} tok/s"
           f"{extra})")
     for p, t in zip(prompts, res["texts"]):

@@ -55,8 +55,9 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  log_every: int = 5, model=None, rollout: str = "static",
                  temperature: float = 1.0, num_slots: int | None = None,
                  engine_block_size: int = 1, kv: str = "contiguous",
-                 kv_block_size: int = 16, mux: str = "off",
-                 mux_staleness: int = 1, jobs: int = 2,
+                 kv_block_size: int = 16, sched: str = "fifo",
+                 prefix_share: bool = False, slo_bound: float = 2.0,
+                 mux: str = "off", mux_staleness: int = 1, jobs: int = 2,
                  return_report: bool = False):
     """GRPO post-training through the phase-multiplexed executors.
 
@@ -74,7 +75,8 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
             seed=job_seed, steps=steps, batch=batch, group=group,
             max_new=max_new, lr=lr, temperature=temperature, rollout=rollout,
             num_slots=num_slots, engine_block_size=engine_block_size,
-            kv=kv, kv_block_size=kv_block_size)
+            kv=kv, kv_block_size=kv_block_size, sched=sched,
+            prefix_share=prefix_share, slo_bound=slo_bound)
 
     if cfg.mode == "off":
         state, hist, report = run_sequential(make_job("job0", seed),
@@ -118,6 +120,21 @@ def _main():
                     default="contiguous",
                     help="engine KV layout (--rollout engine)")
     ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--sched", choices=("fifo", "deadline", "slo"),
+                    default="fifo",
+                    help="engine admission policy (--rollout engine): "
+                         "fifo = strict arrival order; deadline = EDF with "
+                         "bounded head skipping + per-job token budgets; "
+                         "slo = deadlines from the job's slowdown bound "
+                         "(--slo-bound), the inter-group SLO contract")
+    ap.add_argument("--slo-bound", type=float, default=2.0,
+                    help="admitted slowdown bound the slo policy enforces "
+                         "(core.InterGroupScheduler.slo_contract exports "
+                         "this per job in a planned cluster)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="radix prompt-prefix KV sharing (--kv paged): the "
+                         "GRPO group's duplicated prompt prefills once and "
+                         "its full blocks are pinned under all members")
     ap.add_argument("--mux", choices=("off", "pipeline", "coexec"),
                     default="off",
                     help="phase multiplexing: 'off' runs rollout and "
@@ -140,6 +157,8 @@ def _main():
                        max_new=args.max_new, lr=args.lr, seed=args.seed,
                        rollout=args.rollout, num_slots=args.slots,
                        kv=args.kv, kv_block_size=args.kv_block_size,
+                       sched=args.sched, prefix_share=args.prefix_share,
+                       slo_bound=args.slo_bound,
                        mux=args.mux, mux_staleness=args.mux_staleness,
                        jobs=args.jobs, return_report=True)
     _, hist, report = out

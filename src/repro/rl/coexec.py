@@ -115,6 +115,8 @@ class GRPOJob:
                  rollout: str = "static", num_slots: Optional[int] = None,
                  engine_block_size: int = 1, kv: str = "contiguous",
                  kv_block_size: int = 16, num_kv_blocks: Optional[int] = None,
+                 sched: str = "fifo", prefix_share: bool = False,
+                 token_budget: Optional[int] = None, slo_bound: float = 2.0,
                  reward_fn=None):
         if rollout not in ("static", "engine"):
             raise ValueError(f"unknown rollout backend {rollout!r}")
@@ -131,6 +133,16 @@ class GRPOJob:
         self.kv = kv
         self.kv_block_size = kv_block_size
         self.num_kv_blocks = num_kv_blocks
+        self.sched = sched
+        self.prefix_share = prefix_share
+        # per-job token budget for deadline/SLO admission: what one run
+        # permit lets this job put in flight — a full GRPO iteration's
+        # rollout (batch * group members, max_new decode tokens each).
+        # A co-executed engine serving several jobs then cannot let one
+        # job's burst monopolise the slot pool beyond its permit's worth.
+        self.token_budget = (token_budget if token_budget is not None
+                             else batch * group * max_new)
+        self.slo_bound = slo_bound
         self.reward_fn = reward_fn or arithmetic_reward
         self.opt_cfg = AdamWConfig(lr=lr)
         self.task = ArithmeticTask(seed=seed)
@@ -146,6 +158,20 @@ class GRPOJob:
                                 self.opt_cfg)
 
     # ---- rollout phase -----------------------------------------------------
+    def _make_policy(self):
+        """The admission policy this job's engine enforces.  Deadline/SLO
+        policies carry the job's token budget (one permit's worth of
+        rollout — see ``token_budget``); the SLO policy additionally
+        enforces the slowdown bound the inter-group planner admitted the
+        job under (``core.InterGroupScheduler.slo_contract``)."""
+        from repro.serve.sched import make_policy
+        if self.sched == "fifo":
+            return make_policy("fifo")
+        kw = {"token_budgets": {self.job_id: self.token_budget}}
+        if self.sched == "slo":
+            kw["slowdown"] = self.slo_bound
+        return make_policy(self.sched, **kw)
+
     def _engine_for(self, num_slots: int, max_seq_len: int):
         """Persistent per-shape engine, reused (jit cache and all) across
         GRPO iterations via ``Engine.reset`` — weight sync swaps params in,
@@ -159,7 +185,9 @@ class GRPOJob:
                 temperature=self.sampler.temperature,
                 block_size=self.engine_block_size, kv_layout=self.kv,
                 kv_block_size=self.kv_block_size,
-                num_kv_blocks=self.num_kv_blocks))
+                num_kv_blocks=self.num_kv_blocks, sched=self.sched,
+                prefix_share=self.prefix_share),
+                policy=self._make_policy())
             self._engines[max_seq_len] = eng
         return eng
 
@@ -178,7 +206,9 @@ class GRPOJob:
                 self.model, params, prompts, k1, self.sampler,
                 num_slots=self.num_slots, block_size=self.engine_block_size,
                 kv_layout=self.kv, kv_block_size=self.kv_block_size,
-                num_kv_blocks=self.num_kv_blocks, engine=eng)
+                num_kv_blocks=self.num_kv_blocks, engine=eng,
+                prefix_share=self.prefix_share, group=self.group,
+                job_id=self.job_id)
         else:
             out = generate(self.model, params, prompts, k1, self.sampler)
         jax.block_until_ready(out["completions"])

@@ -71,7 +71,10 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         frontend=None, *, num_slots: int | None = None,
                         block_size: int = 1, kv_layout: str = "contiguous",
                         kv_block_size: int = 16,
-                        num_kv_blocks: int | None = None, engine=None):
+                        num_kv_blocks: int | None = None, engine=None,
+                        sched: str = "fifo", policy=None,
+                        prefix_share: bool = False, group: int | None = None,
+                        job_id: str | None = None):
     """Rollout-phase executor backed by the continuous-batching engine.
 
     Drop-in alternative to :func:`generate`: same inputs, same output dict
@@ -93,9 +96,20 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     ``engine`` lets a training driver reuse one persistent (drained)
     :class:`~repro.serve.Engine` across GRPO iterations: the call swaps in
     freshly synced ``params`` and the new key stream via ``Engine.reset``
-    and serves from the existing slot pool / jit cache (the mux trainer's
-    rollout actor).  The engine must have been built for the same model
-    and a compatible ``max_seq_len``.
+    (which also flushes the prefix index — new weights invalidate cached
+    prefills) and serves from the existing slot pool / jit cache (the mux
+    trainer's rollout actor).  The engine must have been built for the
+    same model and a compatible ``max_seq_len``.
+
+    ``sched`` / ``policy`` pick the admission policy
+    (``repro.serve.sched``; a policy object wins — pass e.g.
+    ``SLOPolicy.from_contract(...)`` to enforce a co-execution group's
+    slowdown bound).  ``prefix_share=True`` (paged only) enables radix
+    prompt-prefix KV sharing, and ``group`` tags every ``group``
+    consecutive rows — GRPO's duplicated prompts — with a shared
+    ``prefix_key`` so the group prefills once and its prompt blocks are
+    pinned, not copied.  ``job_id`` tags requests for per-job token
+    budgets in deadline/SLO policies.
     """
     import numpy as np
 
@@ -110,8 +124,9 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
             max_seq_len=Sp + T,
             eos_id=sampler.eos_id, temperature=sampler.temperature,
             block_size=block_size, kv_layout=kv_layout,
-            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks),
-            rng=rng)
+            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+            sched=sched, prefix_share=prefix_share),
+            rng=rng, policy=policy)
     else:
         cfg = engine.config
         if cfg.max_seq_len < Sp + T:
@@ -130,12 +145,29 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
             raise ValueError(
                 f"persistent engine kv_layout={cfg.kv_layout!r} != "
                 f"requested {kv_layout!r}")
+        if prefix_share and not cfg.prefix_share:
+            raise ValueError("persistent engine was built without "
+                             "prefix_share")
         engine.reset(params, rng)
+    from collections import deque
+    pending = deque()
     for i in range(B):
         fr = None if frontend is None else frontend[i:i + 1]
-        engine.submit(Request(rid=i, prompt=prompts_np[i], max_new_tokens=T,
-                              frontend=fr))
-    outs = engine.run()
+        # one shared prefix key per GRPO prompt group: rows i*group ..
+        # (i+1)*group-1 are the same prompt repeated
+        key = ((job_id, i // group)
+               if engine.radix is not None and group else None)
+        pending.append(Request(rid=i, prompt=prompts_np[i],
+                               max_new_tokens=T, frontend=fr,
+                               prefix_key=key, job_id=job_id))
+    # backpressure-aware drive: a full queue (max_waiting) defers
+    # submission until the engine drains instead of crashing
+    while pending or not engine.idle:
+        while pending and engine.submit(pending[0]):
+            pending.popleft()
+        if not engine.idle:
+            engine.step()
+    outs = [engine.finished[r] for r in sorted(engine.finished)]
 
     completions = np.full((B, T), sampler.eos_id, np.int32)
     behavior_logp = np.zeros((B, T), np.float32)

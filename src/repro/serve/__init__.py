@@ -1,27 +1,40 @@
 """Continuous-batching rollout serving subsystem.
 
 The paper's rollout phase is memory-bandwidth-bound *serving*; this package
-makes it a first-class serving problem: ``Request``s flow through a FIFO
-``RequestQueue`` into a fixed pool of KV-cache slots and the ``Engine``
-interleaves prefill-into-free-slot admission with batched single-token
-decode across all live slots (in-flight batching).
+makes it a first-class serving problem: ``Request``s flow through a
+``RequestQueue`` into a fixed pool of KV-cache slots in the order a
+pluggable admission policy picks (``repro.serve.sched``: strict ``FIFO``,
+deadline-aware EDF with bounded head skipping + per-job token budgets, or
+an ``SLO`` policy that enforces the inter-group scheduler's slowdown
+contract per request), and the ``Engine`` interleaves
+prefill-into-free-slot admission with batched single-token decode across
+all live slots (in-flight batching).
 
 KV memory comes in two layouts.  ``SlotManager`` (contiguous) gives every
 slot a full ``max_seq_len`` stripe; ``PagedSlotManager`` shares a pool of
 fixed-size blocks (``BlockAllocator``: ref-counted free list, worst-case
 reservation at admit, on-demand materialization as ``index`` crosses block
 boundaries) so long-tail response lengths stop stranding memory — the same
-KV bytes admit strictly more concurrent requests.  Both layouts produce
-token/logprob-identical greedy output.  See ``repro.serve.engine`` for the
-scheduling model and exactness guarantees, ``repro.serve.slots`` for the
-layout invariants.
+KV bytes admit strictly more concurrent requests.  On top of the paged
+layout, ``RadixPrefixIndex`` (``repro.serve.radix``) shares prompt-prefix
+blocks across requests with the same ``prefix_key`` (GRPO duplicates each
+prompt ``group`` times): the group prefills once and admission gates on
+net-new blocks only.  All layouts and policies produce token/logprob-
+identical greedy output.  See ``repro.serve.engine`` for the scheduling
+model and exactness guarantees, ``repro.serve.slots`` for the layout
+invariants.
 """
 from repro.serve.blocks import BlockAllocator, blocks_for
 from repro.serve.engine import Engine, EngineConfig, EngineStats, run_trace
 from repro.serve.queue import RequestQueue
+from repro.serve.radix import RadixEntry, RadixPrefixIndex
 from repro.serve.request import Request, RequestOutput
+from repro.serve.sched import (DeadlinePolicy, FIFOPolicy, SchedulerPolicy,
+                               SLOPolicy, make_policy)
 from repro.serve.slots import PagedSlotManager, SlotManager
 
 __all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
            "EngineStats", "run_trace", "RequestQueue", "Request",
-           "RequestOutput", "PagedSlotManager", "SlotManager"]
+           "RequestOutput", "PagedSlotManager", "SlotManager",
+           "RadixEntry", "RadixPrefixIndex", "SchedulerPolicy",
+           "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy"]

@@ -17,15 +17,20 @@ Long-tail traffic thus reserves what it might use, not a full
 ``max_seq_len`` stripe, which is exactly where paged beats the contiguous
 layout on concurrency at equal memory.
 
-Blocks are ref-counted (``incref``/``decref``) so future prefix sharing can
-pin a block under several owners; today each block has one owner and
-``free_all`` drops it back to the free list.
+Blocks are ref-counted (``incref``/``decref``), which is what radix
+prompt-prefix sharing (``repro.serve.radix``) builds on: a donor request
+allocates a prompt's blocks under its own reservation, the prefix index
+pins them with one extra ref, and every sharing slot increfs them again —
+an immutable full block lives until its *last* owner (slot or index) lets
+go, and ``free_all`` on any single owner only drops that owner's refs.
 
-Invariants (enforced here, locked in by ``tests/test_serve_paged.py``):
+Invariants (enforced here, locked in by ``tests/test_serve_paged.py`` and
+the shared-interleaving sweeps in ``tests/test_serve_radix.py``):
   * a free block is never handed out twice (no double-assignment);
   * ``num_free + live_blocks == num_blocks`` at all times (conservation);
   * total committed (reserved-but-unmaterialized + live) never exceeds
     ``num_blocks``;
+  * the null block 0 never enters the free list or the refcount map;
   * ``decref`` below zero / freeing an unknown block raises.
 """
 from __future__ import annotations

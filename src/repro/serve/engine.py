@@ -1,14 +1,18 @@
 """Continuous-batching rollout engine (in-flight batching over a slot pool).
 
 The engine services generation requests the way a rollout pool must under
-heavy traffic: a FIFO :class:`~repro.serve.queue.RequestQueue` feeds a
-fixed pool of KV-cache slots (:class:`~repro.serve.slots.SlotManager`);
-each scheduler iteration first *prefills* waiting requests into free slots,
-then runs one (or ``block_size`` fused) *decode* step(s) for every live
-slot at once.  Requests therefore join and leave the decode batch
-mid-flight: a slot is recycled the moment its request hits EOS or its
-per-request decode budget, and the next queued request prefills into it —
-no static-batch barrier, no head-of-line blocking on long generations.
+heavy traffic: a :class:`~repro.serve.queue.RequestQueue` feeds a fixed
+pool of KV-cache slots (:class:`~repro.serve.slots.SlotManager`) in the
+order a pluggable admission policy picks (:mod:`repro.serve.sched`:
+``fifo`` strict arrival order, ``deadline`` EDF with bounded head
+skipping and per-job token budgets, ``slo`` deadlines derived from the
+inter-group SLO contract); each scheduler iteration first *prefills*
+picked requests into free slots, then runs one (or ``block_size`` fused)
+*decode* step(s) for every live slot at once.  Requests therefore join
+and leave the decode batch mid-flight: a slot is recycled the moment its
+request hits EOS or its per-request decode budget, and the next queued
+request prefills into it — no static-batch barrier, no head-of-line
+blocking on long generations.
 
 Per-slot sequence positions are independent (the pool cache carries a
 per-slot ``index`` vector); decode is the model's own single-token step
@@ -30,6 +34,17 @@ block boundaries, and decode runs the same model step over a gathered
 per-slot view of the block table — a pure permutation-copy, so paged
 output is token/logprob-identical to contiguous (locked in by
 ``tests/test_serve_paged.py``).
+
+``EngineConfig.prefix_share`` (paged only) adds radix prompt-prefix KV
+sharing (:mod:`repro.serve.radix`): requests tagged with the same
+``prefix_key`` — GRPO's ``group``-way duplicated prompts — prefill once;
+later members pin the prompt's full blocks (ref-counted, several slot
+owners per block) and receive a private copy-on-write tail block, so a
+group costs one prompt's KV instead of ``group``.  Admission then gates
+on *net new* blocks, which is where the extra concurrency at equal KV
+memory comes from.  Output stays bit-identical to the unshared engine
+(the shared blocks hold exactly the donor's prefill, and gathers are
+permutation-copies).
 
 Compilation notes: jitted prefill / admit / decode-block functions are
 cached per (model, max_seq_len, temperature, eos_id) — engines with the
@@ -53,7 +68,9 @@ from repro.data import tokenizer as tok
 from repro.models.attention import gather_blocks
 from repro.serve.blocks import blocks_for
 from repro.serve.queue import RequestQueue
+from repro.serve.radix import RadixPrefixIndex
 from repro.serve.request import Request, RequestOutput
+from repro.serve.sched import make_policy
 from repro.serve.slots import (PagedSlotManager, SlotManager, _batch_axis,
                                insert_cache)
 
@@ -70,6 +87,11 @@ class EngineConfig:
     kv_block_size: int = 16           # tokens per KV block (paged only)
     num_kv_blocks: Optional[int] = None   # paged pool size (default: same
                                           # memory as contiguous num_slots)
+    sched: str = "fifo"               # admission policy (serve.sched):
+                                      # "fifo" | "deadline" | "slo" — or pass
+                                      # a policy object to Engine(policy=...)
+    prefix_share: bool = False        # radix prompt-prefix KV sharing
+                                      # (paged layout only)
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -82,6 +104,11 @@ class EngineConfig:
             raise ValueError(f"unknown kv_layout {self.kv_layout!r}")
         if self.kv_block_size < 1:
             raise ValueError("kv_block_size must be >= 1")
+        if self.sched not in ("fifo", "deadline", "slo"):
+            raise ValueError(f"unknown sched policy {self.sched!r}")
+        if self.prefix_share and self.kv_layout != "paged":
+            raise ValueError("prefix_share requires kv_layout='paged' "
+                             "(sharing is block-granular)")
 
 
 @dataclass
@@ -93,6 +120,9 @@ class EngineStats:
     slot_steps: int = 0               # num_slots * steps (capacity offered)
     peak_active: int = 0              # max concurrently live requests
     peak_kv_blocks: int = 0           # max KV blocks in use (paged only)
+    prefix_hits: int = 0              # admits that skipped prefill entirely
+    prefix_partial_hits: int = 0      # admits that shared blocks but prefilled
+    blocks_saved: int = 0             # KV blocks pinned instead of allocated
 
     @property
     def slot_utilization(self) -> float:
@@ -158,7 +188,7 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
             step, (last_logits, cache, alive, remaining), keys)
         return carry, out                   # out: (toks, logps, recs) (K,N)
 
-    return jax.jit(admit_fn), jax.jit(block_fn)
+    return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn)}
 
 
 @functools.lru_cache(maxsize=32)
@@ -172,6 +202,14 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
     contiguous path — the gather is a permutation-copy), then scatters back
     only the block that step wrote.  Dead / over-budget slots carry
     all-zero table rows, so their writes land in the null block 0.
+
+    Besides the fused ``admit`` (prefill + scatter, the non-sharing fast
+    path), the prefix-sharing engine uses the split pieces: ``prefill``
+    runs the model once, ``scatter`` writes a given prefill result through
+    a (possibly write-masked) table row, ``snapshot`` extracts the radix
+    entry (partial tail block + slot-resident rows), and ``share_admit``
+    admits a radix hit with *no* model compute — cached logits, cached
+    slot rows, and a copy-on-write tail block seeded from the snapshot.
     """
     paged = frozenset(model.paged_cache_names())
     MB = blocks_for(max_seq_len, kv_block_size)   # table entries per slot
@@ -183,26 +221,74 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
                                       frontend=frontend)
         return logits[0], cache
 
-    def admit_fn(params, prompt, frontend, pool, table_row, slot,
-                 last_logits, alive, remaining, budget):
-        """Prefill one request and scatter it into its block table (plus the
-        slot-resident leaf rows) in a single dispatch."""
-        logits, one = prefill_fn(params, prompt, frontend)
+    def _blockify(u):
+        """(L, S, *rest) -> (L, MB, kv_block_size, *rest), zero-padded."""
+        pad = [(0, 0)] * u.ndim
+        pad[1] = (0, S_view - u.shape[1])
+        u = jnp.pad(u, pad)
+        return u.reshape(u.shape[0], MB, kv_block_size, *u.shape[2:])
+
+    def scatter_fn(logits, one, pool, table_row, slot,
+                   last_logits, alive, remaining, budget):
+        """Write one prefilled batch=1 cache into the pool through
+        ``table_row`` (write-masked rows send shared-prefix blocks to the
+        null block) plus the logits/alive/budget row updates."""
         out = {}
         for name, leaf in pool.items():
             upd = one[name]
             if name == "index":
                 out[name] = leaf.at[slot].set(jnp.asarray(upd, leaf.dtype))
             elif name in paged:
-                u = upd[:, 0]                               # (L, S, *rest)
-                pad = [(0, 0)] * u.ndim
-                pad[1] = (0, S_view - u.shape[1])
-                u = jnp.pad(u, pad).reshape(
-                    u.shape[0], MB, kv_block_size, *u.shape[2:])
-                # unassigned table entries are 0: their (all-zero) blocks
+                u = _blockify(upd[:, 0])                    # (L, MB, bs, ...)
+                # unassigned / masked table entries are 0: their blocks
                 # fall through to the null block
                 out[name] = leaf.at[:, table_row].set(u.astype(leaf.dtype))
             else:
+                start = (0, slot) + (0,) * (leaf.ndim - 2)
+                out[name] = jax.lax.dynamic_update_slice(
+                    leaf, upd.astype(leaf.dtype), start)
+        return (out, last_logits.at[slot].set(logits),
+                alive.at[slot].set(True), remaining.at[slot].set(budget))
+
+    def admit_fn(params, prompt, frontend, pool, table_row, slot,
+                 last_logits, alive, remaining, budget):
+        """Prefill one request and scatter it into its block table (plus the
+        slot-resident leaf rows) in a single dispatch."""
+        logits, one = prefill_fn(params, prompt, frontend)
+        return scatter_fn(logits, one, pool, table_row, slot,
+                          last_logits, alive, remaining, budget)
+
+    def snapshot_fn(one, *, tail_block):
+        """Radix-entry extraction from a prefill result: the partial tail
+        block of every paged leaf (``tail_block`` is its static table
+        position, or None when the prompt ends on a block boundary) and the
+        full batch=1 rows of every slot-resident leaf."""
+        tail = {}
+        if tail_block is not None:
+            for name in sorted(paged):
+                tail[name] = _blockify(one[name][:, 0])[:, tail_block]
+        slot_leaves = {name: v for name, v in one.items()
+                       if name != "index" and name not in paged}
+        return tail, slot_leaves
+
+    def share_admit_fn(pool, tail, slot_leaves, logits, tail_pid, slot,
+                       last_logits, alive, remaining, budget, index_val):
+        """Admit an exact radix hit with zero model compute: seed the
+        private copy-on-write tail block and the slot-resident rows from
+        the donor's snapshot, and restore the cached post-prompt logits."""
+        out = {}
+        for name, leaf in pool.items():
+            if name == "index":
+                out[name] = leaf.at[slot].set(
+                    jnp.asarray(index_val, leaf.dtype))
+            elif name in paged:
+                if name in tail:
+                    out[name] = leaf.at[:, tail_pid].set(
+                        tail[name].astype(leaf.dtype))
+                else:           # prompt ends on a block boundary: no tail
+                    out[name] = leaf
+            else:
+                upd = slot_leaves[name]
                 start = (0, slot) + (0,) * (leaf.ndim - 2)
                 out[name] = jax.lax.dynamic_update_slice(
                     leaf, upd.astype(leaf.dtype), start)
@@ -274,32 +360,44 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
             step, (last_logits, cache, alive, remaining), keys)
         return carry, out                   # out: (toks, logps, recs) (K,N)
 
-    return jax.jit(admit_fn), jax.jit(block_fn)
+    return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn),
+            "prefill": jax.jit(prefill_fn),
+            "scatter": jax.jit(scatter_fn),
+            "snapshot": jax.jit(snapshot_fn,
+                                static_argnames=("tail_block",)),
+            "share_admit": jax.jit(share_admit_fn)}
 
 
 class Engine:
     """Continuous-batching generation engine over a fixed slot pool."""
 
     def __init__(self, model, params, config: EngineConfig,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, policy=None):
         self.model = model
         self.params = params
         self.config = config
         self.queue = RequestQueue(config.max_waiting)
+        # admission policy (serve.sched): a policy object wins over the
+        # config's policy name (SLO policies carry per-group parameters)
+        self.policy = policy if policy is not None else \
+            make_policy(config.sched)
         self.paged = config.kv_layout == "paged"
         if self.paged:
             self.slots = PagedSlotManager(
                 model, config.num_slots, config.max_seq_len,
                 block_size=config.kv_block_size,
                 num_blocks=config.num_kv_blocks)
-            self._admit_fn, self._block = _paged_engine_fns(
+            self._fns = _paged_engine_fns(
                 model, config.max_seq_len, config.kv_block_size,
                 config.temperature, config.eos_id)
         else:
             self.slots = SlotManager(model, config.num_slots,
                                      config.max_seq_len)
-            self._admit_fn, self._block = _engine_fns(
+            self._fns = _engine_fns(
                 model, config.max_seq_len, config.temperature, config.eos_id)
+        self._admit_fn, self._block = self._fns["admit"], self._fns["block"]
+        self.radix = (RadixPrefixIndex(self.slots.alloc)
+                      if config.prefix_share else None)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         N = config.num_slots
         self._last_logits = jnp.zeros((N, model.cfg.vocab_size), jnp.float32)
@@ -313,7 +411,11 @@ class Engine:
         self.clock = None             # optional wall-clock for trace drivers
 
     # ---- submission --------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request.  Malformed requests (too big for the engine)
+        raise; a full queue returns ``False`` — a backpressure signal the
+        caller should honour by deferring and retrying after the engine
+        drains (``run_trace`` and ``generate_continuous`` do)."""
         if req.total_budget > self.config.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + budget "
@@ -325,7 +427,7 @@ class Engine:
                 raise ValueError(
                     f"request {req.rid}: needs {need} KV blocks but the "
                     f"pool has {self.slots.alloc.num_blocks}")
-        self.queue.push(req)
+        return self.queue.push(req)
 
     @property
     def num_active(self) -> int:
@@ -336,50 +438,182 @@ class Engine:
         return not self.queue and not self._active
 
     # ---- scheduler ---------------------------------------------------------
-    def _can_admit_head(self) -> bool:
-        """FIFO head admission gate: a free slot, and (paged) enough
-        uncommitted KV blocks for the head's worst-case budget.  The head
-        never gets skipped — arrival order is preserved even when a later,
-        smaller request would fit."""
-        if not self.queue:
+    def _match(self, req: Request):
+        """Radix lookup for ``req`` (``(None, 0, False)`` with sharing off).
+
+        Requests carrying frontend embeddings never share: the prompt
+        tokens alone don't identify their KV (prefill conditions on the
+        frontend), so a token-verified hit could still serve another
+        request's image/audio-conditioned cache."""
+        if self.radix is None or req.frontend is not None:
+            return None, 0, False
+        return self.radix.match(req)
+
+    def _can_admit(self, req: Request) -> bool:
+        """Admission gate the policy consults per candidate: a free slot,
+        and (paged) enough uncommitted KV blocks for the candidate's
+        worst-case budget **net of prefix-shared blocks**.  Under block
+        pressure the radix index LRU-evicts unused entries (never the one
+        this candidate would share from) before giving up."""
+        if not self.paged:
+            return bool(self.slots.num_free)
+        if not self.slots.num_free:
             return False
-        if self.paged:
-            return self.slots.can_admit(self.queue.peek().total_budget)
-        return bool(self.slots.num_free)
+        entry, n_shared, _ = self._match(req)
+        if self.slots.can_admit(req.total_budget, shared_blocks=n_shared):
+            return True
+        if self.radix is not None and len(self.radix):
+            need = max(self.slots.blocks_required(req.total_budget)
+                       - n_shared, 0)
+            if self.radix.evict_for(need, protect=req.prefix_key):
+                return True
+            # last resort: the entry this request would share from is
+            # itself pinning the pool — drop it too and admit unshared
+            return self.radix.evict_for(
+                self.slots.blocks_required(req.total_budget))
+        return False
 
     def _admit(self) -> None:
-        """Prefill queued requests into free slots (FIFO, lowest slot first)."""
-        while self._can_admit_head():
-            req = self.queue.pop()
-            if self.paged:
-                slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
-                                         total_budget=req.total_budget)
-                row = self.slots.device_tables()[slot]
-                (self.slots.cache, self._last_logits, self._alive,
-                 self._remaining) = self._admit_fn(
-                    self.params, jnp.asarray(req.prompt)[None], req.frontend,
-                    self.slots.cache, row, jnp.asarray(slot, jnp.int32),
-                    self._last_logits, self._alive, self._remaining,
-                    jnp.asarray(req.max_new_tokens, jnp.int32))
-            else:
-                slot = self.slots.assign(req.rid)
-                (self.slots.cache, self._last_logits, self._alive,
-                 self._remaining) = self._admit_fn(
-                    self.params, jnp.asarray(req.prompt)[None], req.frontend,
-                    self.slots.cache, jnp.asarray(slot, jnp.int32),
-                    self._last_logits, self._alive, self._remaining,
-                    jnp.asarray(req.max_new_tokens, jnp.int32))
-            self._host_index[slot] = req.prompt_len
-            out = RequestOutput(rid=req.rid, prompt=req.prompt,
-                                prefill_step=self.stats.steps,
-                                arrival_time=req.arrival_time)
-            self._active[slot] = (req, out)
-            self.stats.prefills += 1
+        """Admit waiting requests into free slots, in the order the policy
+        picks them (FIFO preserves strict arrival order; deadline/SLO may
+        skip a blocked head — boundedly)."""
+        live_tokens: dict[str, int] = {}
+        for r, _ in self._active.values():
+            if r.job_id is not None:
+                live_tokens[r.job_id] = (live_tokens.get(r.job_id, 0)
+                                         + r.max_new_tokens)
+        now = self.clock() if self.clock is not None else 0.0
+        while self.queue:
+            idx = self.policy.pick(self.queue, self._can_admit, now=now,
+                                   live_tokens=live_tokens)
+            if idx is None:
+                break
+            req = self.queue.pop_at(idx)
+            self._admit_one(req)
+            if req.job_id is not None:
+                live_tokens[req.job_id] = (live_tokens.get(req.job_id, 0)
+                                           + req.max_new_tokens)
         self.stats.peak_active = max(self.stats.peak_active,
                                      len(self._active))
         if self.paged:
             self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
+
+    def _admit_one(self, req: Request) -> None:
+        """Prefill (or share) one picked request into a free slot."""
+        prompt_dev = jnp.asarray(req.prompt)[None]
+        budget = jnp.asarray(req.max_new_tokens, jnp.int32)
+        shared_blocks = 0
+        if not self.paged:
+            slot = self.slots.assign(req.rid)
+            (self.slots.cache, self._last_logits, self._alive,
+             self._remaining) = self._admit_fn(
+                self.params, prompt_dev, req.frontend,
+                self.slots.cache, jnp.asarray(slot, jnp.int32),
+                self._last_logits, self._alive, self._remaining, budget)
+        else:
+            entry, n_shared, exact = self._match(req)
+            if entry is not None and exact:
+                slot = self._admit_shared_exact(req, entry, n_shared, budget)
+                shared_blocks = n_shared
+            elif entry is not None and n_shared > 0:
+                slot = self._admit_shared_prefix(req, entry, n_shared,
+                                                 prompt_dev, budget)
+                shared_blocks = n_shared
+            else:
+                slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
+                                         total_budget=req.total_budget)
+                row = self.slots.device_tables()[slot]
+                if (self.radix is not None and req.prefix_key is not None
+                        and req.frontend is None):
+                    # donor path: split prefill + scatter so the radix
+                    # entry (blocks + tail/slot-row snapshot) can register
+                    self.radix.misses += 1
+                    logits, one = self._fns["prefill"](
+                        self.params, prompt_dev, req.frontend)
+                    (self.slots.cache, self._last_logits, self._alive,
+                     self._remaining) = self._fns["scatter"](
+                        logits, one, self.slots.cache, row,
+                        jnp.asarray(slot, jnp.int32), self._last_logits,
+                        self._alive, self._remaining, budget)
+                    self._register_prefix(req, slot, logits, one)
+                else:
+                    (self.slots.cache, self._last_logits, self._alive,
+                     self._remaining) = self._admit_fn(
+                        self.params, prompt_dev, req.frontend,
+                        self.slots.cache, row, jnp.asarray(slot, jnp.int32),
+                        self._last_logits, self._alive, self._remaining,
+                        budget)
+        self._host_index[slot] = req.prompt_len
+        out = RequestOutput(rid=req.rid, prompt=req.prompt,
+                            prefill_step=self.stats.steps,
+                            arrival_time=req.arrival_time,
+                            priority=req.priority, deadline=req.deadline,
+                            job_id=req.job_id,
+                            prefix_shared_blocks=shared_blocks)
+        self._active[slot] = (req, out)
+        self.stats.prefills += 1
+        self.stats.blocks_saved += shared_blocks
+
+    def _register_prefix(self, req: Request, slot: int, logits, one) -> None:
+        """Record the donor's full prompt blocks + admit snapshot."""
+        bs = self.config.kv_block_size
+        n_full = req.prompt_len // bs
+        if self.slots.paged_names:
+            block_ids = [int(b) for b in self.slots.tables[slot, :n_full]]
+        else:
+            block_ids = []          # nothing paged (e.g. rwkv6): share the
+            #                         snapshot (prefill-once), not blocks
+        tail_block = n_full if req.prompt_len % bs else None
+        tail, slot_leaves = self._fns["snapshot"](one, tail_block=tail_block)
+        if not self.slots.paged_names:
+            tail = {}
+        self.radix.register(req, block_ids, logits=logits, tail=tail,
+                            slot_leaves=slot_leaves)
+
+    def _admit_shared_exact(self, req: Request, entry, n_shared: int,
+                            budget) -> int:
+        """Radix exact hit: no model compute.  Pin the shared full blocks
+        under this slot, materialize a private copy-on-write tail from the
+        snapshot, restore cached logits / slot-resident rows."""
+        self.radix.touch(entry, exact=True)
+        slot = self.slots.assign_shared(
+            req.rid, prompt_len=req.prompt_len,
+            total_budget=req.total_budget,
+            shared_ids=list(entry.block_ids[:n_shared]))
+        tail_pid = (int(self.slots.tables[slot, n_shared])
+                    if entry.tail else 0)
+        (self.slots.cache, self._last_logits, self._alive,
+         self._remaining) = self._fns["share_admit"](
+            self.slots.cache, entry.tail, entry.slot_leaves, entry.logits,
+            jnp.asarray(tail_pid, jnp.int32), jnp.asarray(slot, jnp.int32),
+            self._last_logits, self._alive, self._remaining, budget,
+            jnp.asarray(req.prompt_len, jnp.int32))
+        self.stats.prefix_hits += 1
+        return slot
+
+    def _admit_shared_prefix(self, req: Request, entry, n_shared: int,
+                             prompt_dev, budget) -> int:
+        """Block-granular prefix hit (prompt extends / diverges from the
+        entry): prefill runs — compute is not shareable — but the matching
+        full blocks are pinned instead of allocated, and the scatter goes
+        through a write-masked row so shared blocks are never written."""
+        self.radix.touch(entry, exact=False)
+        slot = self.slots.assign_shared(
+            req.rid, prompt_len=req.prompt_len,
+            total_budget=req.total_budget,
+            shared_ids=list(entry.block_ids[:n_shared]))
+        masked = self.slots.tables[slot].copy()
+        masked[:n_shared] = 0               # shared blocks -> null (no write)
+        logits, one = self._fns["prefill"](self.params, prompt_dev,
+                                           req.frontend)
+        (self.slots.cache, self._last_logits, self._alive,
+         self._remaining) = self._fns["scatter"](
+            logits, one, self.slots.cache, jnp.asarray(masked),
+            jnp.asarray(slot, jnp.int32), self._last_logits, self._alive,
+            self._remaining, budget)
+        self.stats.prefix_partial_hits += 1
+        return slot
 
     def _finalize(self, slot: int) -> None:
         req, out = self._active[slot]
@@ -391,6 +625,7 @@ class Engine:
         self.finished[req.rid] = out
         del self._active[slot]
         self.slots.release(slot)
+        self.policy.observe_finish(out)     # SLO policies refine estimates
 
     def step(self) -> int:
         """One scheduler iteration: admit waiting requests, then run
@@ -400,6 +635,16 @@ class Engine:
         can sleep instead of spinning (see :func:`run_trace`)."""
         self._admit()
         if not self._active:
+            if self.queue:
+                # nothing live, requests waiting, nothing admissible — and
+                # with an empty engine nothing will ever change that: the
+                # admission gate depends only on engine state.  A per-job
+                # token budget smaller than a single request's decode
+                # budget is the one way to get here; fail loud over
+                # spinning forever.
+                raise RuntimeError(
+                    f"admission stalled: {len(self.queue)} waiting, 0 "
+                    f"active — check policy token budgets / pool sizing")
             return 0
         if self.config.temperature == 0:
             keys = self._zero_keys          # unused by greedy sampling
@@ -478,6 +723,9 @@ class Engine:
             self.params = params
         if rng is not None:
             self._rng = rng
+        if self.radix is not None:
+            # new weights invalidate every cached prefill (logits + KV)
+            self.radix.flush()
         self.finished.clear()
 
     def export_state(self) -> dict:
@@ -504,6 +752,7 @@ class Engine:
             slots.update(
                 tables=self.slots.tables.copy(),
                 nblocks=list(self.slots.nblocks),
+                shared={s: list(v) for s, v in self.slots.shared.items()},
                 alloc={"free": list(a.free),
                        "refcount": dict(a.refcount),
                        "quota": dict(a.quota),
@@ -517,6 +766,25 @@ class Engine:
             "stats": self.stats,
             "slots": slots,
         })
+        if self.radix is not None:
+            # entry pytrees (logits/tail/slot rows) are device arrays: they
+            # travel in the device section; the allocator pins they stand
+            # behind are already part of the exported alloc state
+            device["radix"] = {
+                key: {"logits": e.logits, "tail": e.tail,
+                      "slot_leaves": e.slot_leaves}
+                for key, e in self.radix.entries.items()}
+            host["radix"] = {
+                "entries": {key: {"tokens": e.tokens.copy(),
+                                  "block_ids": e.block_ids,
+                                  "prompt_len": e.prompt_len,
+                                  "hits": e.hits, "last_used": e.last_used}
+                            for key, e in self.radix.entries.items()},
+                "counters": {"tick": self.radix._tick,
+                             "hits": self.radix.hits,
+                             "partial_hits": self.radix.partial_hits,
+                             "misses": self.radix.misses,
+                             "evictions": self.radix.evictions}}
         return {"device": device, "host": host}
 
     def import_state(self, state: dict) -> None:
@@ -542,6 +810,8 @@ class Engine:
         if self.paged:
             self.slots.tables = sl["tables"].copy()
             self.slots.nblocks = list(sl["nblocks"])
+            self.slots.shared = {int(s): list(v)
+                                 for s, v in sl.get("shared", {}).items()}
             self.slots._dirty = True
             a = self.slots.alloc
             a.free = list(sl["alloc"]["free"])
@@ -549,6 +819,28 @@ class Engine:
             a.quota = dict(sl["alloc"]["quota"])
             a.owned = {k: list(v) for k, v in sl["alloc"]["owned"].items()}
             a.events = list(sl["alloc"]["events"])
+        if self.radix is not None:
+            from repro.serve.radix import RadixEntry
+            self.radix.entries.clear()
+            dev_radix = state["device"].get("radix", {})
+            host_radix = host.get("radix", {"entries": {}, "counters": {}})
+            for key, meta in host_radix["entries"].items():
+                d = dev_radix[key]
+                self.radix.entries[key] = RadixEntry(
+                    key=key, tokens=np.asarray(meta["tokens"], np.int32),
+                    block_ids=tuple(meta["block_ids"]),
+                    prompt_len=meta["prompt_len"],
+                    logits=jnp.asarray(d["logits"]),
+                    tail=jax.tree.map(jnp.asarray, d["tail"]),
+                    slot_leaves=jax.tree.map(jnp.asarray, d["slot_leaves"]),
+                    hits=meta["hits"], last_used=meta["last_used"])
+            c = host_radix["counters"]
+            if c:
+                self.radix._tick = c["tick"]
+                self.radix.hits = c["hits"]
+                self.radix.partial_hits = c["partial_hits"]
+                self.radix.misses = c["misses"]
+                self.radix.evictions = c["evictions"]
 
 
 def run_trace(engine: Engine, requests: list[Request],
@@ -568,7 +860,9 @@ def run_trace(engine: Engine, requests: list[Request],
     while pending or not engine.idle:
         now = engine.clock()
         while pending and pending[0].arrival_time <= now:
-            engine.submit(pending.pop(0))
+            if not engine.submit(pending[0]):
+                break                       # queue full: defer, retry after
+            pending.pop(0)                  # the engine drains a bit
         progressed = engine.step()
         if not progressed and pending:
             if realtime:
@@ -579,9 +873,10 @@ def run_trace(engine: Engine, requests: list[Request],
                 if wait > 0:
                     time.sleep(wait)
             else:
-                nxt = pending.pop(0)
+                nxt = pending[0]
                 nxt.arrival_time = engine.clock()
-                engine.submit(nxt)
+                if engine.submit(nxt):
+                    pending.pop(0)
     makespan = engine.clock()
     engine.clock = None
     outs = [engine.finished[r] for r in sorted(engine.finished)]
@@ -598,11 +893,22 @@ def run_trace(engine: Engine, requests: list[Request],
         "ttft_mean_s": float(ttft.mean()) if len(ttft) else 0.0,
         "slot_utilization": engine.stats.slot_utilization,
         "peak_active": engine.stats.peak_active,
+        "rejected_submits": engine.queue.rejected,
     }
+    with_dl = [o for o in outs if o.deadline is not None]
+    if with_dl:
+        met = sum(o.finish_time <= o.deadline for o in with_dl)
+        report["deadline_total"] = len(with_dl)
+        report["deadline_met"] = int(met)
+        report["deadline_attainment"] = met / len(with_dl)
     if engine.paged:
         total = engine.slots.alloc.num_blocks
         report["kv_blocks_total"] = total
         report["peak_kv_blocks"] = engine.stats.peak_kv_blocks
         report["kv_block_utilization"] = (
             engine.stats.peak_kv_blocks / max(total, 1))
+    if engine.radix is not None:
+        report["prefix"] = dict(engine.radix.stats,
+                                blocks_saved=engine.stats.blocks_saved,
+                                hit_admits=engine.stats.prefix_hits)
     return report

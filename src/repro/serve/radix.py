@@ -1,0 +1,188 @@
+"""Block-granular prefix-sharing index for the paged KV cache (SGLang-style
+radix sharing, specialised to the rollout-serving workload).
+
+GRPO submits every prompt ``group`` times (one request per group member),
+so the prompt's KV is byte-identical across ``group`` live requests.  This
+index makes that sharing real at block granularity, on top of
+``BlockAllocator``'s existing ``incref``/``decref``:
+
+* the **first** member of a prefix (the *donor*) prefills normally into
+  its own freshly allocated blocks; ``register`` then records, under the
+  request's ``prefix_key``, the prompt's *full* blocks (positions a decode
+  step can never write again) plus a small device snapshot — the partial
+  tail block's KV, the slot-resident cache rows (SSM/conv state,
+  cross-attention KV) and the post-prompt logits — and increfs the full
+  blocks so they outlive the donor;
+* every **later** member with the same key and prompt (``match`` →
+  ``exact``) skips prefill compute entirely: its slot pins the shared full
+  blocks (incref per sharer, several slot owners per block) and receives a
+  private **copy-on-write tail** — the first block its decode diverges
+  into is materialized from its own reservation and seeded from the
+  snapshot, so shared blocks are never written (the engine's decode
+  write-back only touches the block containing the slot's own ``index``,
+  which lies at or beyond the tail);
+* a request whose prompt merely *extends* a registered prefix
+  (block-granular match, not exact) still prefills — compute is not
+  shareable — but pins the matching full blocks instead of allocating
+  them, scattering its prefill through a write-masked table row whose
+  shared entries point at the null block (paged admission then gates on
+  **net-new** blocks only).
+
+Entries are LRU-evicted (``evict_for``) when admission runs out of
+uncommitted blocks: dropping an entry only releases the *index's* pin —
+live sharers keep theirs, so eviction is always safe.  ``flush`` drops
+everything (the engine does this on ``reset``: new params invalidate every
+cached prefill).  Greedy tokens/logprobs stay bit-identical to the
+unshared engine: shared blocks hold the donor's prefill output, which is
+THE prefill output for that prompt, and gathers are permutation-copies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.serve.blocks import BlockAllocator
+from repro.serve.request import Request
+
+
+@dataclass
+class RadixEntry:
+    """One registered prompt prefix: pinned full blocks + admit snapshot."""
+    key: Any
+    tokens: np.ndarray                 # donor's full prompt (int32, host)
+    block_ids: tuple[int, ...]         # the prompt's FULL blocks, in order
+    prompt_len: int
+    logits: Any                        # (vocab,) post-prompt logits (device)
+    tail: dict                         # paged leaves' partial tail block
+    #                                    {name: (L, bs, *rest)} — empty when
+    #                                    the prompt ends on a block boundary
+    slot_leaves: dict                  # non-paged cache rows (batch=1 pytree)
+    hits: int = 0
+    last_used: int = 0
+    meta: dict = field(default_factory=dict)
+
+
+class RadixPrefixIndex:
+    """Prefix entries keyed by ``Request.prefix_key``, pinned in a
+    :class:`~repro.serve.blocks.BlockAllocator` via incref/decref."""
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self.block_size = alloc.block_size
+        self.entries: dict[Any, RadixEntry] = {}
+        self._tick = 0
+        self.hits = 0                  # exact hits (prefill skipped)
+        self.partial_hits = 0          # block-prefix hits (blocks shared)
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ---- lookup ------------------------------------------------------------
+    def match(self, req: Request) -> tuple[Optional[RadixEntry], int, bool]:
+        """Longest block-granular prefix match for ``req``.
+
+        Returns ``(entry, n_shared, exact)``: ``n_shared`` full blocks of
+        the request's prompt are already resident (token-verified — the key
+        is a tag, the tokens are the truth), and ``exact`` means the whole
+        prompt matches so prefill can be skipped.  Shared blocks are capped
+        at the request's own full-block count: the block its decode writes
+        into is never shared.
+        """
+        if req.prefix_key is None:
+            return None, 0, False
+        entry = self.entries.get(req.prefix_key)
+        if entry is None:
+            return None, 0, False
+        prompt = req.prompt
+        exact = (entry.prompt_len == req.prompt_len
+                 and np.array_equal(entry.tokens, prompt))
+        # full blocks the request itself will never write again
+        req_full = req.prompt_len // self.block_size
+        common = min(len(entry.block_ids), req_full) * self.block_size
+        eq = entry.tokens[:common] == prompt[:common]
+        n_shared = (int(common // self.block_size) if eq.all()
+                    else int(np.argmin(eq)) // self.block_size)
+        return entry, n_shared, exact
+
+    def touch(self, entry: RadixEntry, *, exact: bool) -> None:
+        self._tick += 1
+        entry.last_used = self._tick
+        entry.hits += 1
+        if exact:
+            self.hits += 1
+        else:
+            self.partial_hits += 1
+
+    # ---- registration ------------------------------------------------------
+    def register(self, req: Request, block_ids, *, logits, tail,
+                 slot_leaves) -> RadixEntry:
+        """Pin the donor's full prompt blocks under this index and cache the
+        admit snapshot.  No-op (returns the existing entry) if the key is
+        already registered — first donor wins until flush/evict."""
+        if req.prefix_key in self.entries:
+            return self.entries[req.prefix_key]
+        for bid in block_ids:
+            self.alloc.incref(bid)
+        self._tick += 1
+        entry = RadixEntry(
+            key=req.prefix_key, tokens=np.array(req.prompt, np.int32),
+            block_ids=tuple(int(b) for b in block_ids),
+            prompt_len=req.prompt_len, logits=logits, tail=tail,
+            slot_leaves=slot_leaves, last_used=self._tick)
+        self.entries[req.prefix_key] = entry
+        return entry
+
+    # ---- eviction ----------------------------------------------------------
+    def evict(self, key: Any) -> None:
+        """Drop one entry: release the index's pin on its blocks (sharers
+        keep theirs — blocks free only when the last owner lets go)."""
+        entry = self.entries.pop(key)
+        for bid in entry.block_ids:
+            self.alloc.decref(bid)
+        self.evictions += 1
+
+    def evict_for(self, n_blocks: int, *, protect: Any = None) -> bool:
+        """LRU-evict entries until ``n_blocks`` can be reserved (or nothing
+        *useful* is left to evict).  ``protect`` names a key that must
+        survive — the entry the pending admission is about to share from.
+
+        Only entries whose eviction actually frees memory are touched: an
+        entry whose blocks are all still pinned by live sharer slots frees
+        nothing when dropped (the sharers keep their refs), and evicting
+        it would just destroy sharing for the group's remaining members —
+        so such entries are skipped rather than sacrificed pointlessly
+        (admissibility probes call this as a side effect)."""
+        while not self.alloc.can_reserve(n_blocks):
+            victims = sorted(
+                (e for k, e in self.entries.items()
+                 if k != protect
+                 and any(self.alloc.refcount.get(b, 0) == 1
+                         for b in e.block_ids)),
+                key=lambda e: e.last_used)
+            if not victims:
+                return self.alloc.can_reserve(n_blocks)
+            self.evict(victims[0].key)
+        return True
+
+    def flush(self) -> None:
+        """Drop every entry (params changed / engine reset)."""
+        n = len(self.entries)
+        for key in list(self.entries):
+            self.evict(key)
+        self.evictions -= n                  # flushes aren't pressure events
+
+    # ---- accounting --------------------------------------------------------
+    def pinned_blocks(self) -> set[int]:
+        """Distinct block ids currently pinned by the index itself."""
+        return {b for e in self.entries.values() for b in e.block_ids}
+
+    @property
+    def stats(self) -> dict:
+        return {"entries": len(self.entries), "hits": self.hits,
+                "partial_hits": self.partial_hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "pinned_blocks": len(self.pinned_blocks())}

@@ -25,12 +25,27 @@ class Request:
     generation stops at the first EOS or when the budget is exhausted,
     whichever comes first.  ``arrival_time`` is only meaningful to trace
     drivers (see ``engine.run_trace``); the engine itself is clock-free.
+
+    The admission-policy fields (``repro.serve.sched``) are all optional
+    and ignored by ``FIFOPolicy``: ``priority`` breaks deadline ties
+    (higher = more urgent), ``deadline`` is an absolute driver-clock time
+    the request should finish by (``DeadlinePolicy`` orders admission by
+    it; ``SLOPolicy`` derives one from the group's slowdown bound when
+    unset), and ``job_id`` names the submitting job for per-job token
+    budgets.  ``prefix_key`` tags requests whose prompts share a common
+    prefix (GRPO submits each prompt ``group`` times): the paged engine's
+    radix index (``repro.serve.radix``) prefills one member and pins the
+    prompt's full KV blocks under every member's slot.
     """
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_time: float = 0.0
     frontend: Optional[Any] = None       # (1, F, d) modality embeddings
+    priority: int = 0                    # higher = more urgent (sched tiebreak)
+    deadline: Optional[float] = None     # absolute driver-clock finish target
+    prefix_key: Optional[Any] = None     # hashable prompt-sharing tag
+    job_id: Optional[str] = None         # submitting job (per-job budgets)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -60,6 +75,11 @@ class RequestOutput:
     arrival_time: float = 0.0
     first_token_time: float = 0.0
     finish_time: float = 0.0
+    # admission metadata copied from the Request (trace/report material)
+    priority: int = 0
+    deadline: Optional[float] = None
+    job_id: Optional[str] = None
+    prefix_shared_blocks: int = 0        # KV blocks admitted via radix sharing
 
     @property
     def num_tokens(self) -> int:

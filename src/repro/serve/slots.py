@@ -32,8 +32,11 @@ Invariants (checked, and locked in by ``tests/test_serve_engine.py`` /
   * ``assign`` only takes free slots, ``release`` only live ones;
   * recycling happens exactly once per finished request (on EOS or budget
     exhaustion), after which the slot is immediately reusable;
-  * (paged) live slots' block tables are disjoint, released rows are
-    zeroed, and no block leaks or is double-freed across interleavings.
+  * (paged) live slots' *owned* block-table entries are disjoint — only
+    prefix-*shared* entries (``repro.serve.radix``: ref-counted pins on a
+    donor's immutable full prompt blocks) may repeat across slots —
+    released rows are zeroed, and no block leaks or is double-freed
+    across interleavings.
 """
 from __future__ import annotations
 
@@ -139,6 +142,9 @@ class PagedSlotManager:
         self.events: list[tuple] = []
         self.tables = np.zeros((num_slots, self.max_blocks), np.int32)
         self.nblocks = [0] * num_slots     # materialized blocks per slot
+        # slot -> leading table entries pinned via prefix sharing (each
+        # incref'd on behalf of this slot; decref'd on release)
+        self.shared: dict[int, list[int]] = {}
         self._tables_dev = jnp.asarray(self.tables)
         self._dirty = False
 
@@ -159,9 +165,12 @@ class PagedSlotManager:
         return blocks_for(min(total_budget, self.max_seq_len),
                           self.block_size)
 
-    def can_admit(self, total_budget: int) -> bool:
-        return bool(self.free) and self.alloc.can_reserve(
-            self.blocks_required(total_budget))
+    def can_admit(self, total_budget: int, *, shared_blocks: int = 0) -> bool:
+        """Admission gate: a free slot and enough *uncommitted* pool for the
+        request's net-new blocks (worst-case budget minus the prompt-prefix
+        blocks prefix sharing pins instead of allocating)."""
+        need = max(self.blocks_required(total_budget) - shared_blocks, 0)
+        return bool(self.free) and self.alloc.can_reserve(need)
 
     def assign(self, rid: int, *, prompt_len: int, total_budget: int) -> int:
         """Claim a slot + block reservation; materialize the prompt's blocks."""
@@ -173,6 +182,37 @@ class PagedSlotManager:
                                  f"{self.owner[slot]}")
         self.alloc.reserve(rid, self.blocks_required(total_budget))
         self.owner[slot] = rid
+        self.events.append(("assign", rid, slot))
+        if self.paged_names and prompt_len:
+            self.ensure(slot, prompt_len - 1)
+        return slot
+
+    def assign_shared(self, rid: int, *, prompt_len: int, total_budget: int,
+                      shared_ids: list[int]) -> int:
+        """Claim a slot whose leading table entries are *shared* prompt-prefix
+        blocks (radix hit): each shared block is incref'd under this slot
+        (pinned — it outlives any co-owner), only the net-new remainder of
+        the worst-case budget is reserved, and the prompt's own tail block
+        (copy-on-write at the first divergent block) plus decode growth
+        materialize from that reservation via :meth:`ensure` as usual."""
+        if not self.free:
+            raise RuntimeError("no free slot")
+        if len(shared_ids) > self.blocks_required(total_budget):
+            raise AssertionError("shared prefix longer than the budget")
+        slot = self.free.pop()
+        if self.owner[slot] is not None:
+            raise AssertionError(f"slot {slot} already owned by "
+                                 f"{self.owner[slot]}")
+        net_new = self.blocks_required(total_budget) - len(shared_ids)
+        self.alloc.reserve(rid, net_new)
+        for bid in shared_ids:
+            self.alloc.incref(bid)
+        self.owner[slot] = rid
+        if shared_ids:
+            self.shared[slot] = list(shared_ids)
+            self.tables[slot, :len(shared_ids)] = shared_ids
+            self.nblocks[slot] = len(shared_ids)
+            self._dirty = True
         self.events.append(("assign", rid, slot))
         if self.paged_names and prompt_len:
             self.ensure(slot, prompt_len - 1)
@@ -195,10 +235,13 @@ class PagedSlotManager:
             self._dirty = True
 
     def release(self, slot: int) -> None:
-        """Recycle a finished slot: free its blocks, zero its table row."""
+        """Recycle a finished slot: free its blocks (unpin shared ones),
+        zero its table row."""
         rid = self.owner[slot]
         if rid is None:
             raise AssertionError(f"slot {slot} is already free")
+        for bid in self.shared.pop(slot, []):
+            self.alloc.decref(bid)         # unpin; co-owners keep it alive
         self.alloc.free_all(rid)
         self.tables[slot, :] = 0           # dead slot writes -> null block
         self.nblocks[slot] = 0
@@ -214,18 +257,36 @@ class PagedSlotManager:
             self._dirty = False
         return self._tables_dev
 
-    def check(self) -> None:
-        """Cross-structure invariants (used by the property tests)."""
+    def check(self, extra_pins=()) -> None:
+        """Cross-structure invariants (used by the property tests).
+
+        ``extra_pins``: block ids held live by pins outside this manager —
+        the radix prefix index's own increfs — so the liveness accounting
+        stays exact when sharing is on.  A slot's *owned* (non-shared)
+        entries must still be disjoint across slots; *shared* entries may
+        legitimately repeat across slots and in ``extra_pins``."""
         self.alloc.check()
-        live_rows = [self.tables[s, :self.nblocks[s]]
-                     for s in range(self.num_slots) if self.owner[s] is not None]
-        flat = [int(b) for row in live_rows for b in row]
-        assert 0 not in flat, "live table row points at the null block"
-        assert len(set(flat)) == len(flat), "block shared across slots"
-        assert len(flat) == self.alloc.num_live, \
-            "materialized blocks out of sync with tables"
+        owned_flat, shared_flat = [], []
         for s in range(self.num_slots):
             if self.owner[s] is None:
                 assert not self.tables[s].any(), "released row not zeroed"
-            else:
-                assert not self.tables[s, self.nblocks[s]:].any()
+                assert s not in self.shared
+                continue
+            ns = len(self.shared.get(s, ()))
+            row = self.tables[s]
+            assert not row[self.nblocks[s]:].any()
+            assert [int(b) for b in row[:ns]] == self.shared.get(s, []), \
+                "shared prefix out of sync with table row"
+            owned_flat += [int(b) for b in row[ns:self.nblocks[s]]]
+            shared_flat += [int(b) for b in row[:ns]]
+        flat = owned_flat + shared_flat
+        assert 0 not in flat, "live table row points at the null block"
+        # owned entries are uniquely allocated; shared entries may repeat
+        # across slots AND coincide with the donor's still-owned entries
+        assert len(set(owned_flat)) == len(owned_flat), \
+            "owned block shared across slots"
+        live = set(flat) | set(extra_pins)
+        assert live == set(self.alloc.refcount), \
+            "materialized blocks out of sync with tables/pins"
+        for bid in shared_flat + list(extra_pins):
+            assert self.alloc.refcount.get(bid, 0) >= 1

@@ -1,0 +1,318 @@
+"""Radix prompt-prefix KV sharing (``repro.serve.radix``): engine-level
+greedy equivalence (shared == unshared == per-request ``generate``, bit
+for bit), the equal-memory concurrency win on GRPO-group traffic, and the
+allocator/slot-manager invariants under random shared admit/grow/release
+interleavings (refcounts conserved, no double free, null block untouched,
+index pins accounted).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from test_serve_engine import MAX_LEN, get_model, reference
+
+from repro.data import tokenizer as tok
+from repro.serve import (Engine, EngineConfig, PagedSlotManager, Request,
+                         blocks_for)
+
+
+def group_requests(texts, group, *, max_new=6, job="j"):
+    """GRPO-shaped trace: each prompt duplicated ``group`` times, members
+    tagged with one shared prefix key."""
+    reqs = []
+    rid = 0
+    for gi, text in enumerate(texts):
+        prompt = np.asarray(tok.encode(text, bos=True), np.int32)
+        for _ in range(group):
+            reqs.append(Request(rid=rid, prompt=prompt.copy(),
+                                max_new_tokens=max_new,
+                                prefix_key=(job, gi)))
+            rid += 1
+    return reqs
+
+
+def run_engine(m, params, reqs, **cfg):
+    eng = Engine(m, params, EngineConfig(max_seq_len=MAX_LEN,
+                                         temperature=0.0, **cfg))
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens,
+                           prefix_key=r.prefix_key))
+    return eng, eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Exact-hit sharing: bit-identical output, prefill once per group
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["internlm2-1.8b",   # dense GQA attention
+                                  "gemma3-4b"])       # sliding-window layers
+def test_shared_engine_bit_identical_to_unshared(arch):
+    """Two interleaved GRPO groups (different prompt lengths, small blocks
+    so prompts span several full blocks + a partial tail): the sharing
+    engine's greedy tokens/logprobs equal the unshared paged engine's and
+    per-request ``generate``'s, while prefilling each prompt once."""
+    m, params = get_model(arch)
+    reqs = group_requests(["123+456=", "7+8="], group=3)
+    kw = dict(num_slots=3, kv_layout="paged", kv_block_size=4)
+    _, base = run_engine(m, params, reqs, **kw)
+    eng, outs = run_engine(m, params, reqs, prefix_share=True, **kw)
+    for r, o, c in zip(reqs, outs, base):
+        ref_t, ref_l = reference(m, params, r, max_new=6)
+        assert o.tokens == c.tokens == ref_t, (arch, o.rid)
+        np.testing.assert_allclose(o.logprobs, c.logprobs, atol=0)
+        np.testing.assert_allclose(o.logprobs, ref_l, atol=1e-5)
+    assert eng.stats.prefix_hits == 4        # 2 groups x (3 members - donor)
+    assert eng.radix.misses == 2             # one prefill per group
+    assert eng.stats.blocks_saved > 0
+    # every live structure drained; index pins are the only refs left
+    eng.slots.check(extra_pins=eng.radix.pinned_blocks())
+    eng.radix.flush()
+    eng.slots.check()
+    assert eng.slots.blocks_in_use == 0
+
+
+def test_shared_blocks_pinned_under_multiple_owners():
+    """While a group is in flight, its prompt's full blocks carry one ref
+    per live member (+ the index pin) — several slot owners per block."""
+    m, params = get_model("internlm2-1.8b")
+    reqs = group_requests(["1234+5678="], group=3, max_new=8)
+    eng = Engine(m, params, EngineConfig(
+        num_slots=3, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=4, prefix_share=True))
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                               # all three admitted, 1 decode
+    entry = next(iter(eng.radix.entries.values()))
+    assert len(entry.block_ids) >= 1
+    for bid in entry.block_ids:
+        # donor's own ref + 2 sharers + the index pin
+        assert eng.slots.alloc.refcount[bid] == 4
+    eng.slots.check(extra_pins=eng.radix.pinned_blocks())
+    eng.run()
+    # members gone: only the index pin remains
+    for bid in entry.block_ids:
+        assert eng.slots.alloc.refcount[bid] == 1
+
+
+def test_shared_admits_more_groups_at_equal_memory():
+    """The acceptance criterion in miniature: at the same KV pool size,
+    prefix sharing admits strictly more concurrent GRPO-group members
+    than the unshared paged engine (prompt blocks are pinned, not
+    duplicated, so admission's net-new demand shrinks)."""
+    m, params = get_model("internlm2-1.8b")
+    reqs = group_requests(["123+456="], group=6, max_new=8)
+    total = reqs[0].total_budget
+    # pool sized for ~3 unshared members' worst case
+    blocks = 3 * blocks_for(total, 4)
+    kw = dict(num_slots=6, kv_layout="paged", kv_block_size=4,
+              num_kv_blocks=blocks)
+    unshared, _ = run_engine(m, params, reqs, **kw)
+    shared, outs = run_engine(m, params, reqs, prefix_share=True, **kw)
+    assert shared.stats.peak_active > unshared.stats.peak_active
+    for r, o in zip(reqs, outs):
+        ref_t, _ = reference(m, params, r, max_new=8)
+        assert o.tokens == ref_t
+
+
+def test_rwkv6_degenerate_sharing_is_prefill_cache():
+    """No ``cache_seq`` leaves: nothing to page, but an exact hit still
+    skips prefill via the slot-state snapshot — outputs unchanged."""
+    m, params = get_model("rwkv6-7b")
+    reqs = group_requests(["12+34="], group=3)
+    kw = dict(num_slots=2, kv_layout="paged", kv_block_size=8)
+    _, base = run_engine(m, params, reqs, **kw)
+    eng, outs = run_engine(m, params, reqs, prefix_share=True, **kw)
+    assert [o.tokens for o in outs] == [o.tokens for o in base]
+    assert eng.stats.prefix_hits == 2 and eng.stats.blocks_saved == 0
+
+
+def test_prefix_hit_extension_shares_blocks():
+    """A prompt that *extends* a registered prefix (same key, longer
+    prompt) can't skip prefill but pins the matching full blocks and
+    still decodes exactly (write-masked scatter never touches them)."""
+    m, params = get_model("internlm2-1.8b")
+    base_text, ext_text = "1234+5678=", "1234+5678=9"
+    prompt0 = np.asarray(tok.encode(base_text, bos=True), np.int32)
+    prompt1 = np.asarray(tok.encode(ext_text, bos=True), np.int32)
+    assert np.array_equal(prompt1[:len(prompt0)], prompt0)
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=4, prefix_share=True))
+    r0 = Request(rid=0, prompt=prompt0, max_new_tokens=5, prefix_key="p")
+    r1 = Request(rid=1, prompt=prompt1, max_new_tokens=5, prefix_key="p")
+    eng.submit(r0)
+    eng.submit(r1)
+    outs = eng.run()
+    assert eng.stats.prefix_partial_hits == 1
+    assert outs[1].prefix_shared_blocks > 0
+    for r, o in zip((r0, r1), outs):
+        ref_t, ref_l = reference(m, params, r, max_new=5)
+        assert o.tokens == ref_t, o.rid
+        np.testing.assert_allclose(o.logprobs, ref_l, atol=1e-5)
+    eng.slots.check(extra_pins=eng.radix.pinned_blocks())
+
+
+def test_frontend_requests_never_share():
+    """Prompt tokens alone don't identify frontend-conditioned KV (prefill
+    conditions on the embeddings), so requests carrying a frontend must
+    miss the radix index even with matching keys and tokens."""
+    import jax.numpy as jnp
+    m, _ = get_model("internlm2-1.8b")
+    from repro.models import build_model
+    vm = build_model("qwen2-vl-7b", reduced=True)
+    import jax
+    vparams = vm.init(jax.random.PRNGKey(1))
+    fr0 = jnp.zeros((1, vm.cfg.num_frontend_tokens, vm.cfg.d_model))
+    fr1 = jnp.ones((1, vm.cfg.num_frontend_tokens, vm.cfg.d_model))
+    # frontend embeddings overlay the first num_frontend_tokens prompt
+    # positions, so the padded prompt must be at least that long
+    prompt = np.asarray(tok.pad_batch(
+        [tok.encode("1+2=", bos=True)],
+        vm.cfg.num_frontend_tokens + 8)[0], np.int32)
+    eng = Engine(vm, vparams, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=4, prefix_share=True))
+    for rid, fr in enumerate((fr0, fr1)):
+        eng.submit(Request(rid=rid, prompt=prompt.copy(), max_new_tokens=4,
+                           prefix_key="k", frontend=fr))
+    outs = eng.run()
+    assert eng.stats.prefix_hits == 0 and not eng.radix.entries
+    # same tokens, different frontends -> genuinely different generations
+    from repro.rl import SamplerConfig, generate
+    for rid, fr in enumerate((fr0, fr1)):
+        ref = generate(vm, vparams, jnp.asarray(prompt)[None],
+                       jax.random.PRNGKey(0),
+                       SamplerConfig(max_new_tokens=4, temperature=0.0),
+                       frontend=fr)
+        n = int(np.asarray(ref["mask"])[0].sum())
+        assert outs[rid].tokens[:n] == \
+            np.asarray(ref["completions"])[0][:n].tolist(), rid
+
+
+def test_eviction_under_block_pressure_and_reset_flush():
+    """Index pins are evicted LRU when admission needs the blocks; reset
+    flushes everything (new params invalidate cached prefills)."""
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=4,
+        num_kv_blocks=blocks_for(MAX_LEN, 4),  # one stripe's worth
+        prefix_share=True))
+    eng.submit(Request(rid=0, prompt=np.asarray(
+        tok.encode("11+22=", bos=True), np.int32), max_new_tokens=4,
+        prefix_key="a"))
+    eng.run()
+    assert len(eng.radix) == 1
+    # a big unrelated request needs (almost) the whole pool: entry evicted
+    eng.submit(Request(rid=1, prompt=np.asarray(
+        tok.encode("3+4=", bos=True), np.int32), max_new_tokens=40,
+        prefix_key="b"))
+    eng.run()
+    assert eng.radix.evictions >= 1
+    assert "a" not in eng.radix.entries
+    eng.reset(params)
+    assert len(eng.radix) == 0
+    eng.slots.check()
+    assert eng.slots.blocks_in_use == 0
+
+
+def test_export_import_roundtrip_with_sharing_mid_flight():
+    """Checkpoint a sharing engine with live shared slots; a fresh engine
+    resumes token-for-token and keeps the invariants."""
+    m, params = get_model("internlm2-1.8b")
+    reqs = group_requests(["123+456="], group=3, max_new=8)
+    cfg = EngineConfig(num_slots=2, max_seq_len=MAX_LEN, temperature=0.0,
+                       kv_layout="paged", kv_block_size=4,
+                       prefix_share=True)
+    eng = Engine(m, params, cfg)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    eng.step()                              # live shared slots + 1 waiting
+    state = eng.export_state()
+    done_a = Engine(m, params, cfg)
+    done_a.import_state(state)
+    outs_a = done_a.run()
+    outs_b = eng.run()                      # original continues too
+    assert [o.tokens for o in outs_a] == [o.tokens for o in outs_b]
+    for r, o in zip(reqs, outs_a):
+        ref_t, _ = reference(m, params, r, max_new=8)
+        assert o.tokens == ref_t
+    done_a.slots.check(extra_pins=done_a.radix.pinned_blocks())
+
+
+# ---------------------------------------------------------------------------
+# Property: shared interleavings preserve allocator/slot invariants
+# ---------------------------------------------------------------------------
+def _drive_shared_slot_manager(ops, sm: PagedSlotManager, index_pins):
+    """Random admit/admit-shared/grow/finish/evict interleavings.
+
+    ``index_pins`` plays the radix index: it pins (increfs) the full
+    blocks of whichever live donor the op stream picks, and releases
+    (decrefs) pins at random — exactly the lifecycle the engine drives.
+    Invariants are checked after every op.
+    """
+    live, rid = [], 0
+    for kind, val in ops:
+        if kind == 0:                      # plain admit
+            plen = 1 + val % 10
+            budget = plen + 1 + val % 12
+            if sm.can_admit(budget):
+                slot = sm.assign(rid, prompt_len=plen, total_budget=budget)
+                live.append((slot, plen, budget))
+                rid += 1
+        elif kind == 1 and live:           # shared admit from a live donor
+            dslot, dplen, _ = live[val % len(live)]
+            n_full = min(dplen // sm.block_size, sm.nblocks[dslot])
+            shared = [int(b) for b in sm.tables[dslot, :n_full]]
+            plen = max(dplen, 1 + val % 10)
+            budget = plen + 1 + val % 12
+            if sm.can_admit(budget, shared_blocks=len(shared)):
+                slot = sm.assign_shared(rid, prompt_len=plen,
+                                        total_budget=budget,
+                                        shared_ids=shared)
+                live.append((slot, plen, budget))
+                rid += 1
+        elif kind == 2 and live:           # decode progress -> table growth
+            slot, plen, budget = live[val % len(live)]
+            sm.ensure(slot, min(plen + val % 8, budget - 1))
+        elif kind == 3 and live:           # pin a donor's blocks (register)
+            dslot, dplen, _ = live[val % len(live)]
+            n_full = min(dplen // sm.block_size, sm.nblocks[dslot])
+            for b in sm.tables[dslot, :n_full]:
+                sm.alloc.incref(int(b))
+                index_pins.append(int(b))
+        elif kind == 4 and index_pins:     # evict one pin
+            sm.alloc.decref(index_pins.pop(val % len(index_pins)))
+        elif kind == 5 and live:           # finish
+            slot, _, _ = live.pop(val % len(live))
+            sm.release(slot)
+        sm.check(extra_pins=index_pins)
+    for slot, _, _ in live:
+        sm.release(slot)
+    while index_pins:
+        sm.alloc.decref(index_pins.pop())
+    sm.check()
+    assert sm.blocks_in_use == 0 and sm.num_free == sm.num_slots
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 63)),
+                min_size=1, max_size=30))
+def test_shared_slot_manager_interleaving(ops):
+    m, _ = get_model("internlm2-1.8b")
+    _drive_shared_slot_manager(
+        ops, PagedSlotManager(m, 4, MAX_LEN, block_size=4, num_blocks=24),
+        [])
+
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 1023)),
+                min_size=1, max_size=100),
+       st.integers(2, 6),                  # block size
+       st.integers(8, 32))                 # pool blocks
+def test_shared_slot_manager_interleaving_sweep(ops, bs, nb):
+    m, _ = get_model("internlm2-1.8b")
+    _drive_shared_slot_manager(
+        ops, PagedSlotManager(m, 5, MAX_LEN, block_size=bs, num_blocks=nb),
+        [])

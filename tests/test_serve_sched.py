@@ -1,0 +1,288 @@
+"""Pluggable admission policies (``repro.serve.sched``): decision-logic
+unit tests, the bounded-starvation property of ``DeadlinePolicy``, and
+engine-level guarantees — every policy's greedy output is bit-identical to
+the FIFO engine (admission order changes *when* a request decodes, never
+*what* it decodes), deadline-aware head skipping actually reorders
+admission, per-job token budgets actually gate, the backpressure path
+(``RequestQueue.push`` -> ``Engine.submit`` -> ``run_trace`` deferral)
+never crashes, and the SLO contract flows from the inter-group scheduler
+into an engine policy.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from test_serve_engine import MAX_LEN, get_model, make_requests, reference
+
+from repro.data import tokenizer as tok
+from repro.serve import (DeadlinePolicy, Engine, EngineConfig, FIFOPolicy,
+                         Request, RequestQueue, SLOPolicy, make_policy,
+                         run_trace)
+
+
+def req(rid, *, max_new=4, deadline=None, priority=0, job_id=None,
+        arrival=0.0, prompt_len=4):
+    return Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                   max_new_tokens=max_new, arrival_time=arrival,
+                   deadline=deadline, priority=priority, job_id=job_id)
+
+
+# ---------------------------------------------------------------------------
+# Policy decision logic (no engine, no model)
+# ---------------------------------------------------------------------------
+def test_fifo_picks_head_only():
+    p = FIFOPolicy()
+    waiting = [req(0), req(1)]
+    assert p.pick(waiting, lambda r: True) == 0
+    # head inadmissible -> nothing, even though rid 1 would fit
+    assert p.pick(waiting, lambda r: r.rid != 0) is None
+    assert p.pick([], lambda r: True) is None
+
+
+def test_deadline_orders_by_deadline_then_priority():
+    p = DeadlinePolicy()
+    waiting = [req(0, deadline=9.0), req(1, deadline=3.0),
+               req(2), req(3, deadline=3.0, priority=5)]
+    # EDF: rid 3 wins the 3.0 tie on priority; no-deadline sorts last
+    assert waiting[p.pick(waiting, lambda r: True)].rid == 3
+    waiting = [req(0, deadline=9.0), req(1, deadline=3.0), req(2)]
+    assert waiting[p.pick(waiting, lambda r: True)].rid == 1
+
+
+def test_deadline_skips_blocked_head():
+    p = DeadlinePolicy()
+    waiting = [req(0, deadline=1.0, max_new=30), req(1, deadline=2.0)]
+    # head (earliest deadline) does not fit -> the next deadline does
+    assert waiting[p.pick(waiting, lambda r: r.max_new_tokens < 10)].rid == 1
+
+
+def test_deadline_token_budget_gates_job():
+    p = DeadlinePolicy(token_budgets={"j": 10})
+    waiting = [req(0, deadline=1.0, job_id="j", max_new=6),
+               req(1, deadline=2.0, job_id="k", max_new=6)]
+    # job j already has 8 tokens in flight: 8 + 6 > 10 -> rid 1 instead
+    i = p.pick(waiting, lambda r: True, live_tokens={"j": 8})
+    assert waiting[i].rid == 1
+    # budget frees up -> EDF order again
+    p2 = DeadlinePolicy(token_budgets={"j": 10})
+    assert waiting[p2.pick(waiting, lambda r: True,
+                           live_tokens={"j": 4})].rid == 0
+
+
+def test_slo_policy_derives_deadline_from_bound():
+    p = SLOPolicy(slowdown=2.0, time_per_token=0.5)
+    r = req(0, max_new=8, arrival=10.0)
+    # no explicit deadline: arrival + slowdown * time_per_token * budget
+    assert p.effective_deadline(r, now=0.0) == pytest.approx(10.0 + 2 * 4.0)
+    r2 = req(1, deadline=11.0)
+    assert p.effective_deadline(r2, now=0.0) == 11.0
+    # contract plumbing
+    p3 = SLOPolicy.from_contract({"jobA": 1.5}, "jobA", time_per_token=0.1)
+    assert p3.slowdown == 1.5
+
+
+def test_make_policy_validates():
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("deadline"), DeadlinePolicy)
+    assert isinstance(make_policy("slo"), SLOPolicy)
+    with pytest.raises(ValueError):
+        make_policy("lifo")
+    with pytest.raises(ValueError):
+        SLOPolicy(slowdown=0.5)
+    with pytest.raises(ValueError):
+        EngineConfig(sched="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Bounded starvation: no request is overtaken by newer arrivals more than
+# max_skips times, under random deadlines, admissibility and arrivals.
+# ---------------------------------------------------------------------------
+def _drive_starvation(ops, max_skips):
+    p = DeadlinePolicy(max_skips=max_skips)
+    waiting: list[Request] = []
+    overtakes: dict[int, int] = {}          # rid -> admissions of newer reqs
+    born: dict[int, int] = {}               # rid -> arrival order
+    rid = 0
+    for kind, val in ops:
+        if kind == 0:                        # arrival
+            dl = None if val % 3 == 0 else float(val % 17)
+            waiting.append(req(rid, deadline=dl, priority=val % 2))
+            born[rid] = rid
+            rid += 1
+        else:                                # admission attempt
+            # val encodes which requests the engine could admit this round
+            admissible = {r.rid for j, r in enumerate(waiting)
+                          if (val >> (j % 10)) & 1}
+            i = p.pick(waiting, lambda r: r.rid in admissible)
+            if i is None:
+                continue
+            chosen = waiting.pop(i)
+            for r in waiting:
+                if born[r.rid] < born[chosen.rid]:
+                    overtakes[r.rid] = overtakes.get(r.rid, 0) + 1
+    for rid_, n in overtakes.items():
+        assert n <= max_skips, f"request {rid_} overtaken {n} times"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 1023)),
+                min_size=1, max_size=60),
+       st.integers(0, 5))
+def test_deadline_policy_bounded_starvation(ops, max_skips):
+    _drive_starvation(ops, max_skips)
+
+
+@pytest.mark.slow
+@settings(max_examples=300, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 8191)),
+                min_size=1, max_size=200),
+       st.integers(0, 7))
+def test_deadline_policy_bounded_starvation_sweep(ops, max_skips):
+    _drive_starvation(ops, max_skips)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: every policy produces FIFO-identical greedy output
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv", ["contiguous", "paged"])
+@pytest.mark.parametrize("sched", ["deadline", "slo"])
+def test_policies_bit_identical_to_fifo_engine(sched, kv):
+    m, params = get_model("internlm2-1.8b")
+    kw = dict(num_slots=2, max_seq_len=MAX_LEN, temperature=0.0)
+    if kv == "paged":
+        kw.update(kv_layout="paged", kv_block_size=8)
+
+    def run(sched_name):
+        eng = Engine(m, params, EngineConfig(sched=sched_name, **kw))
+        for i, r in enumerate(make_requests(4, max_new=6)):
+            r.deadline = float(10 - i)      # reversed deadlines vs arrival
+            eng.submit(r)
+        return eng.run()
+
+    base = run("fifo")
+    outs = run(sched)
+    for r, o, c in zip(make_requests(4, max_new=6), outs, base):
+        ref_t, ref_l = reference(m, params, r, max_new=6)
+        assert o.tokens == c.tokens == ref_t, (sched, kv, o.rid)
+        np.testing.assert_allclose(o.logprobs, c.logprobs, atol=0)
+        np.testing.assert_allclose(o.logprobs, ref_l, atol=1e-5)
+
+
+def test_deadline_engine_reorders_admission():
+    """One slot, reversed deadlines: the deadline engine admits in EDF
+    order while FIFO sticks to arrival order."""
+    m, params = get_model("internlm2-1.8b")
+
+    def admit_order(sched):
+        eng = Engine(m, params, EngineConfig(
+            num_slots=1, max_seq_len=MAX_LEN, temperature=0.0, sched=sched))
+        for i, r in enumerate(make_requests(3)):
+            r.deadline = float(10 - i)
+            eng.submit(r)
+        eng.run()
+        return [rid for ev, rid, _ in eng.slots.events if ev == "assign"]
+
+    assert admit_order("fifo") == [0, 1, 2]
+    assert admit_order("deadline") == [2, 1, 0]
+
+
+def test_deadline_head_skip_on_block_pressure():
+    """Paged pool sized so a big-budget EDF head can't fit while a smaller,
+    later deadline can: the head is skipped (FIFO would stall the slot)."""
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0, sched="deadline",
+        kv_layout="paged", kv_block_size=8,
+        num_kv_blocks=7))                   # rid 0 reserves 6, leaving 1
+    prompt = np.asarray(tok.encode("5+5=", bos=True), np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=40,
+                       deadline=1.0))      # 6 blocks: takes the whole pool
+    eng.step()
+    # head needs the whole pool (occupied); rid 2 fits in what's left
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=40,
+                       deadline=2.0))
+    eng.submit(Request(rid=2, prompt=prompt, max_new_tokens=2,
+                       deadline=3.0))
+    eng.run()
+    order = [rid for ev, rid, _ in eng.slots.events if ev == "assign"]
+    assert order == [0, 2, 1]              # rid 2 overtook the blocked rid 1
+    for r, o in [(2, eng.finished[2]), (1, eng.finished[1])]:
+        assert o.finish_reason == "length"
+    eng.slots.check()
+
+
+def test_engine_stalls_loud_on_impossible_budget():
+    """A per-job token budget smaller than a single request's decode budget
+    can never admit: the engine raises instead of spinning forever."""
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params,
+                 EngineConfig(num_slots=2, max_seq_len=MAX_LEN,
+                              temperature=0.0),
+                 policy=DeadlinePolicy(token_budgets={"j": 2}))
+    eng.submit(req(0, max_new=8, job_id="j", prompt_len=6))
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: full queue defers instead of crashing
+# ---------------------------------------------------------------------------
+def test_queue_push_backpressure_signal():
+    q = RequestQueue(max_waiting=2)
+    assert q.push(req(0)) and q.push(req(1))
+    assert not q.push(req(2))              # full: refused, not raised
+    assert len(q) == 2 and q.rejected == 1
+    q.pop()
+    assert q.push(req(2))                  # drained: accepted again
+
+
+def test_engine_submit_backpressure_and_run_trace_defers():
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(
+        num_slots=1, max_seq_len=MAX_LEN, temperature=0.0, max_waiting=1))
+    reqs = make_requests(4, max_new=3)
+    assert eng.submit(reqs[0])
+    eng.step()                             # rid 0 admitted into the slot
+    assert eng.submit(reqs[1])             # queue: 1 waiting (= max)
+    assert not eng.submit(reqs[2])         # full: deferred, not raised
+    # run_trace retries deferred submissions and still finishes everything
+    eng2 = Engine(m, params, EngineConfig(
+        num_slots=1, max_seq_len=MAX_LEN, temperature=0.0, max_waiting=1))
+    trace = [Request(rid=i, prompt=r.prompt, max_new_tokens=3,
+                     arrival_time=0.0)
+             for i, r in enumerate(make_requests(4, max_new=3))]
+    report = run_trace(eng2, trace, realtime=False)
+    assert sorted(o.rid for o in report["outputs"]) == [0, 1, 2, 3]
+    assert report["rejected_submits"] > 0  # backpressure actually happened
+
+
+# ---------------------------------------------------------------------------
+# SLO contract: planner bound -> engine policy -> per-request deadlines
+# ---------------------------------------------------------------------------
+def test_slo_contract_flows_from_inter_group_scheduler():
+    from repro.core import InterGroupScheduler, NodeAllocator, RLJob
+
+    alloc = NodeAllocator(n_rollout_gpus=64, n_train_gpus=64)
+    sched = InterGroupScheduler(alloc)
+    sched.schedule(RLJob("jobA", t_roll=60, t_train=30, slo=1.8))
+    sched.schedule(RLJob("jobB", t_roll=50, t_train=25, slo=1.4))
+    contract = sched.slo_contract()
+    assert set(contract) == {"jobA", "jobB"}
+    # the exported bound is the admitted slo tightened by the margin
+    assert contract["jobA"] == pytest.approx(1.8 * sched.admission_margin)
+    G = next(iter(sched.groups.values()))
+    assert G.slowdown_bound("jobA") == pytest.approx(1.8)
+    # group-level bound = tightest co-member
+    assert G.slowdown_bound() <= min(contract.values()) / \
+        sched.admission_margin + 1e-9
+
+    policy = SLOPolicy.from_contract(contract, "jobA", time_per_token=0.01)
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params,
+                 EngineConfig(num_slots=2, max_seq_len=MAX_LEN,
+                              temperature=0.0, sched="slo"), policy=policy)
+    for r in make_requests(3):
+        eng.submit(r)
+    outs = eng.run()
+    for r, o in zip(make_requests(3), outs):
+        ref_t, _ = reference(m, params, r)
+        assert o.tokens == ref_t           # contract never changes tokens
