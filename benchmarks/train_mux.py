@@ -12,6 +12,15 @@ training, and how much of it each schedule reclaims:
   * **coexec** — ``--jobs`` independent jobs round-robin the shared
     rollout/train permit pools with warm-start context switches (this is
     the two-job co-execution of paper Fig 1-bottom, running for real).
+  * **stream** — group-level pipelining inside the job (``rl.stream``):
+    finished GRPO prompt groups flow to the reward permit pool and to
+    train micro-batches while the engine still decodes stragglers.  Run
+    twice: with instant rewards (comparable to pipeline) and in a
+    slow-verifier pair — ``off_slow_reward`` verifies each group inline
+    through an external-verifier stub whose per-group latency is
+    calibrated to ``--reward-latency-frac`` of the measured rollout
+    phase, ``stream_slow_reward`` hides the same verification work on
+    ``--reward-workers`` reward-pool workers.
 
 Reported per mode: wall time, per-step time, useful completion tokens/s,
 measured rollout/train busy time, rollout×train overlap, and the fraction
@@ -34,10 +43,27 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+
 from repro.core.simulator import simulate_profiles
 from repro.models import build_model
 from repro.rl.coexec import (GRPOJob, run_coexec, run_pipelined,
                              run_sequential)
+from repro.rl.rewards import ExternalVerifier, arithmetic_reward
+from repro.rl.stream import run_streaming
+
+
+def serial_group_verifier(fn, group: int):
+    """Inline-baseline shape of external verification: the driver submits
+    one verification call per GRPO group, serially, on the critical path —
+    the same per-group work the streaming executor hides on the reward
+    pool."""
+    def wrapped(completions, mask, answers):
+        outs = [fn(completions[i:i + group], mask[i:i + group],
+                   answers[i:i + group])
+                for i in range(0, len(answers), group)]
+        return np.concatenate(outs)
+    return wrapped
 
 
 def _mode_summary(histories, report) -> dict:
@@ -57,6 +83,7 @@ def _mode_summary(histories, report) -> dict:
         "tok_per_s": tokens / max(s["wall_s"], 1e-9),
         "total_rollout_s": s["total_rollout_s"],
         "total_train_s": s["total_train_s"],
+        "total_reward_s": s["total_reward_s"],
         "overlap_s": s["overlap_s"],
         "bubble_back_to_back_s": s["bubble_back_to_back_s"],
         "reclaimed_bubble_frac": s["reclaimed_bubble_frac"],
@@ -78,9 +105,15 @@ def main():
                     default="contiguous")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--staleness", type=int, default=1,
-                    help="pipeline on-policy staleness guard")
+                    help="pipeline/stream on-policy staleness guard")
     ap.add_argument("--jobs", type=int, default=2,
                     help="co-executing jobs in coexec mode")
+    ap.add_argument("--reward-workers", type=int, default=2,
+                    help="stream mode: reward permit-pool capacity")
+    ap.add_argument("--reward-latency-frac", type=float, default=0.25,
+                    help="slow-verifier scenario: per-group verification "
+                         "latency as a fraction of the measured rollout "
+                         "phase (calibrated from the warmup run)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=1,
                     help="run each mode this many times, keep its best "
@@ -96,8 +129,14 @@ def main():
                          "BENCH_train_mux[_quick].json at the repo root)")
     args = ap.parse_args()
     if args.quick:
-        args.steps, args.batch, args.group, args.max_new = 6, 2, 2, 8
+        # batch 4 = four GRPO groups per iteration: enough sub-phase
+        # granularity for the streaming scenarios to show their overlap
+        args.steps, args.batch, args.group, args.max_new = 6, 4, 2, 8
         args.repeats = max(args.repeats, 2)
+    # micro-batched trainer size for the slow-verifier streaming scenario:
+    # half the groups per iteration, so the trainer overlaps the decode and
+    # verification of the other half (derived from config => deterministic)
+    stream_micro = max(1, args.batch // 2)
     if args.json is None:
         name = "BENCH_train_mux_quick.json" if args.quick \
             else "BENCH_train_mux.json"
@@ -105,16 +144,26 @@ def main():
 
     model = build_model(args.arch, reduced=True)
 
-    def make_job(jid: str, seed: int) -> GRPOJob:
+    def make_job(jid: str, seed: int, reward_fn=None) -> GRPOJob:
         return GRPOJob(jid, model=model, seed=seed, steps=args.steps,
                        batch=args.batch, group=args.group,
                        max_new=args.max_new, temperature=args.temperature,
                        rollout="engine", num_slots=args.slots,
-                       engine_block_size=args.block_size, kv=args.kv)
+                       engine_block_size=args.block_size, kv=args.kv,
+                       reward_fn=reward_fn)
 
     # warmup: compile prefill/decode/train for this shape once, off the clock
-    # (the jitted train step and engine fns are shared across jobs)
-    run_sequential(make_job("warmup", args.seed), steps=2, log_every=0)
+    # (the jitted train step and engine fns are shared across jobs); the
+    # post-compile rollout duration also calibrates the slow-verifier
+    # latency below
+    _, _, r_warm = run_sequential(make_job("warmup", args.seed), steps=2,
+                                  log_every=0)
+    t_roll = r_warm.profiles["warmup"].rollout_s[-1]
+    reward_latency = args.reward_latency_frac * t_roll
+    # ... and the micro-batch train shape the streaming scenario uses
+    wj = make_job("warmup", args.seed)
+    wj.steps = 1
+    run_streaming(wj, max_staleness=1, micro_groups=stream_micro)
 
     print(f"# {args.arch}: {args.steps} steps x batch {args.batch} x group "
           f"{args.group}, {args.max_new} new tokens, engine rollout "
@@ -153,16 +202,52 @@ def main():
         co_reports.append(r)
         return _mode_summary(h, r)
 
+    def run_stream():
+        _, h, r = run_streaming(make_job("job0", args.seed),
+                                max_staleness=args.staleness,
+                                reward_workers=args.reward_workers)
+        m = _mode_summary(h, r)
+        m["staleness"] = max((rec["rollout_staleness"] for rec in h),
+                             default=0)
+        return m
+
+    def run_off_slow():
+        # inline baseline: the driver verifies each group through the slow
+        # external verifier serially, on the critical path (run_sequential
+        # calls the reward inside its train permit)
+        job = make_job("job0", args.seed, reward_fn=serial_group_verifier(
+            ExternalVerifier(arithmetic_reward, latency_s=reward_latency,
+                             jitter=0.1, seed=args.seed), args.group))
+        _, h, r = run_sequential(job)
+        return _mode_summary(h, r)
+
+    def run_stream_slow():
+        # same per-group verification work, hidden on the reward pool
+        # while the engine decodes stragglers and the micro-batched
+        # trainer steps on already-verified groups
+        job = make_job("job0", args.seed, reward_fn=ExternalVerifier(
+            arithmetic_reward, latency_s=reward_latency, jitter=0.1,
+            seed=args.seed))
+        _, h, r = run_streaming(job, max_staleness=args.staleness,
+                                reward_workers=args.reward_workers,
+                                micro_groups=stream_micro)
+        return _mode_summary(h, r)
+
     modes["off"] = best_of(run_off)
     modes["pipeline"] = best_of(run_pipe)
     modes["coexec"] = best_of(run_co)
+    modes["stream"] = best_of(run_stream)
+    modes["off_slow_reward"] = best_of(run_off_slow)
+    modes["stream_slow_reward"] = best_of(run_stream_slow)
     r_co = co_reports[-1]
 
     for name, m in modes.items():
-        print(f"{name:8s}: {m['wall_s']:6.2f}s wall "
+        print(f"{name:18s}: {m['wall_s']:6.2f}s wall "
               f"({m['step_time_s']*1e3:6.1f} ms/step), "
               f"{m['tok_per_s']:7.1f} tok/s | roll {m['total_rollout_s']:.2f}s "
-              f"train {m['total_train_s']:.2f}s overlap {m['overlap_s']:.2f}s "
+              f"train {m['total_train_s']:.2f}s "
+              f"reward {m['total_reward_s']:.2f}s "
+              f"overlap {m['overlap_s']:.2f}s "
               f"-> {m['reclaimed_bubble_frac']:.0%} of bubble reclaimed")
 
     # feed the engine-measured phase profiles back into the co-execution
@@ -180,6 +265,14 @@ def main():
     reclaimed = modes["pipeline"]["reclaimed_bubble_frac"]
     print(f"pipeline vs back-to-back: {speed_pipe:.2f}x wall, "
           f"{reclaimed:.0%} of the dependency bubble reclaimed")
+    speed_stream_slow = (modes["off_slow_reward"]["wall_s"]
+                         / max(modes["stream_slow_reward"]["wall_s"], 1e-9))
+    print(f"stream vs inline under slow rewards "
+          f"({reward_latency * 1e3:.0f} ms/group = "
+          f"{args.reward_latency_frac:.0%} of rollout): "
+          f"{speed_stream_slow:.2f}x wall, "
+          f"{modes['stream_slow_reward']['reclaimed_bubble_frac']:.0%} of "
+          f"the three-pool bubble reclaimed")
 
     if args.json:
         report = {
@@ -190,18 +283,31 @@ def main():
                 "slots": args.slots, "block_size": args.block_size,
                 "kv": args.kv, "temperature": args.temperature,
                 "staleness": args.staleness, "jobs": args.jobs,
+                "reward_workers": args.reward_workers,
+                "stream_micro_groups": stream_micro,
+                # the *rule*, not the machine-calibrated seconds — the
+                # config block must stay runner-independent for the CI
+                # baseline equality check
+                "reward_latency_frac": args.reward_latency_frac,
                 "seed": args.seed, "repeats": args.repeats,
                 "quick": args.quick,
             },
+            "calibration": {"rollout_phase_s": t_roll,
+                            "reward_latency_s": reward_latency},
             "modes": modes,
             "speedup_pipeline_vs_off": speed_pipe,
             "speedup_coexec_vs_off": (
                 # per-step time ratio: coexec runs --jobs x the work
                 modes["off"]["step_time_s"]
                 / max(modes["coexec"]["step_time_s"], 1e-9)),
+            "speedup_stream_vs_off_slow_reward": speed_stream_slow,
             "reclaimed_bubble_frac_pipeline": reclaimed,
             "reclaimed_bubble_frac_coexec":
                 modes["coexec"]["reclaimed_bubble_frac"],
+            "reclaimed_bubble_frac_stream":
+                modes["stream"]["reclaimed_bubble_frac"],
+            "reclaimed_bubble_frac_stream_slow":
+                modes["stream_slow_reward"]["reclaimed_bubble_frac"],
             "simulator_on_measured_profiles": {
                 "iter_time_s": dict(sim.iter_time),
                 "rollout_bubble": sim.rollout_bubble,

@@ -18,6 +18,7 @@ from repro.core.cluster import Node
 from repro.core.job import RLJob
 
 TRAIN_POOL = "__train__"
+REWARD_POOL = "__reward__"
 
 
 @dataclass(frozen=True)
@@ -139,6 +140,10 @@ class CoExecutionGroup:
         jids = order or list(self.jobs)
         free: dict[str, float] = {nid: 0.0 for nid in self.rollout_nodes}
         free[TRAIN_POOL] = 0.0
+        # third pool: reward verification (paper's streaming mux).  Jobs
+        # with t_reward == 0 never touch it, so classic two-pool groups
+        # simulate exactly as before.
+        free[REWARD_POOL] = 0.0
         last_user: dict[str, Optional[str]] = {k: None for k in free}
         resident: set[tuple[str, str]] = set()
         pool = len(self.train_nodes)
@@ -188,13 +193,18 @@ class CoExecutionGroup:
             job = self.jobs[j]
             if job_atomic:
                 nodes = (*self.placements[j].rollout_node_ids, TRAIN_POOL)
-                dur = (job.t_roll + job.train_time_on(pool)) * scale
+                dur = (job.t_roll + job.t_reward
+                       + job.train_time_on(pool)) * scale
                 occupy = dur
             elif kind == "roll":
                 nodes = self.placements[j].rollout_node_ids
                 dur = job.t_roll * scale
                 occupy = (dur * job.t80_frac + dur * migration_overhead_frac
                           if migration else dur)
+            elif kind == "reward":
+                nodes = (REWARD_POOL,)
+                dur = job.t_reward * scale
+                occupy = dur
             else:
                 nodes = (TRAIN_POOL,)
                 dur = job.train_time_on(pool) * scale
@@ -219,10 +229,15 @@ class CoExecutionGroup:
                 for j in jids:
                     if todo[j] <= 0:
                         continue
-                    nodes = ((*self.placements[j].rollout_node_ids, TRAIN_POOL)
-                             if job_atomic else
-                             (self.placements[j].rollout_node_ids
-                              if phase[j] == "roll" else (TRAIN_POOL,)))
+                    if job_atomic:
+                        nodes = (*self.placements[j].rollout_node_ids,
+                                 TRAIN_POOL)
+                    elif phase[j] == "roll":
+                        nodes = self.placements[j].rollout_node_ids
+                    elif phase[j] == "reward":
+                        nodes = (REWARD_POOL,)
+                    else:
+                        nodes = (TRAIN_POOL,)
                     start = max(ready[j], max(free[n] for n in nodes))
                     key = (start, ready[j])
                     if best_key is None or key < best_key:
@@ -233,6 +248,8 @@ class CoExecutionGroup:
                     todo[j] -= 1
                     completions[j].append(end)
                     phase[j] = "roll"
+                elif phase[j] == "roll" and self.jobs[j].t_reward > 0:
+                    phase[j] = "reward"
                 else:
                     phase[j] = "train"
                 t_end = max(t_end, end)
@@ -250,7 +267,8 @@ class CoExecutionGroup:
                                  TRAIN_POOL)
                         start = max(ready[j], max(free[n] for n in nodes))
                         sw = switch_cost(j, nodes)
-                        dur = (job.t_roll + job.train_time_on(pool)) * scale
+                        dur = (job.t_roll + job.t_reward
+                               + job.train_time_on(pool)) * scale
                         for n in nodes:
                             free[n] = start + sw + dur
                             busy[n] += sw + dur
@@ -275,6 +293,17 @@ class CoExecutionGroup:
                         last_user[n] = j
                         resident.add((j, n))
                     ready[j] = start + sw + dur
+                    # reward-verification phase (third pool; skipped when
+                    # the job's verifier is modeled as inline/free)
+                    if job.t_reward > 0:
+                        start = max(ready[j], free[REWARD_POOL])
+                        sw = switch_cost(j, (REWARD_POOL,))
+                        dur = job.t_reward * scale
+                        free[REWARD_POOL] = start + sw + dur
+                        busy[REWARD_POOL] += sw + dur
+                        last_user[REWARD_POOL] = j
+                        resident.add((j, REWARD_POOL))
+                        ready[j] = start + sw + dur
                     # training phase
                     start = max(ready[j], free[TRAIN_POOL])
                     sw = switch_cost(j, (TRAIN_POOL,))

@@ -12,6 +12,10 @@ class RLJob:
     # worst-case phase durations (conservative planning, paper §4.2):
     t_roll: float             # rollout phase on its rollout nodes (s)
     t_train: float            # training phase on its requested train nodes (s)
+    # reward-verification phase on the reward pool (s); 0 models the
+    # classic inline-verified loop (reward folded into training), > 0 the
+    # streaming mux's third pool where external verifiers take real time
+    t_reward: float = 0.0
     n_roll_gpus: int = 8
     n_train_gpus: int = 8
     mem_roll_gb: float = 275.0    # host footprint per rollout node (Table 2)
@@ -28,7 +32,9 @@ class RLJob:
 
     @property
     def t_solo(self) -> float:
-        return self.t_roll + self.t_train
+        """Back-to-back solo iteration: rollout, then (when modeled)
+        reward verification, then the train step."""
+        return self.t_roll + self.t_reward + self.t_train
 
     @property
     def n_roll_nodes(self) -> int:

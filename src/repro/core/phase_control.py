@@ -80,15 +80,39 @@ class PhaseProfile:
     job_id: str
     rollout_s: tuple[float, ...] = ()
     train_s: tuple[float, ...] = ()
+    # reward-verification phase durations (the third permit pool): empty
+    # for executors that verify inline on the critical path; the streaming
+    # mux (``rl.stream``) populates it with per-group verifier times.
+    reward_s: tuple[float, ...] = ()
 
     @property
     def t_roll(self) -> float:
         """Worst-case (admission-bound) rollout duration."""
         return max(self.rollout_s, default=0.0)
 
+    def _worst_iteration_total(self, xs: tuple[float, ...]) -> float:
+        """Worst per-*iteration* total of a phase that may take several
+        permits per iteration (the streaming executor holds one reward
+        permit per GRPO group and one train permit per micro-step).  The
+        per-permit durations are in execution order with a uniform count
+        per iteration, so chunking them evenly and taking the heaviest
+        chunk gives the iteration-level worst case the conservative
+        admission planner needs — a plain ``max`` over permits would
+        under-report the phase load by the groups-per-iteration factor."""
+        if not xs:
+            return 0.0
+        it = max(self.iterations, 1)
+        per = max(-(-len(xs) // it), 1)             # ceil division
+        return max(sum(xs[i:i + per])
+                   for i in range(0, len(xs), per))
+
     @property
     def t_train(self) -> float:
-        return max(self.train_s, default=0.0)
+        return self._worst_iteration_total(self.train_s)
+
+    @property
+    def t_reward(self) -> float:
+        return self._worst_iteration_total(self.reward_s)
 
     @property
     def t_roll_mean(self) -> float:
@@ -97,6 +121,10 @@ class PhaseProfile:
     @property
     def t_train_mean(self) -> float:
         return sum(self.train_s) / max(len(self.train_s), 1)
+
+    @property
+    def t_reward_mean(self) -> float:
+        return sum(self.reward_s) / max(len(self.reward_s), 1)
 
     @property
     def iterations(self) -> int:
@@ -115,7 +143,8 @@ class PhaseProfile:
             lo = min(min(self.rollout_s) / max(self.t_roll, 1e-9),
                      min(self.train_s) / max(self.t_train, 1e-9))
         kw = dict(job_id=self.job_id, t_roll=self.t_roll,
-                  t_train=self.t_train, runtime_scale=(min(lo, 1.0), 1.0))
+                  t_train=self.t_train, t_reward=self.t_reward,
+                  runtime_scale=(min(lo, 1.0), 1.0))
         kw.update(overrides)
         return RLJob(**kw)
 
@@ -223,19 +252,26 @@ class RollMuxRuntime:
         self.cache.offload(f"{job_id}/{pool}", state)
 
     def phase_profiles(self, *, rollout_pool: str = "rollout",
-                       train_pool: str = "train") -> dict[str, PhaseProfile]:
+                       train_pool: str = "train",
+                       reward_pool: str = "reward"
+                       ) -> dict[str, PhaseProfile]:
         """Distill the executed pool timelines into per-job
         :class:`PhaseProfile` records (measured durations, in execution
         order).  Timeline entries are tagged ``"job:phase"`` by both
-        :meth:`phase` and :meth:`permit`."""
+        :meth:`phase` and :meth:`permit`.  The reward pool is optional —
+        executors that verify inline never create it and the profiles
+        simply carry no reward durations."""
         roll: dict[str, list[float]] = {}
         train: dict[str, list[float]] = {}
-        for pool_name, acc in ((rollout_pool, roll), (train_pool, train)):
+        reward: dict[str, list[float]] = {}
+        for pool_name, acc in ((rollout_pool, roll), (train_pool, train),
+                               (reward_pool, reward)):
             p = self.pools.get(pool_name)
             if p is None:
                 continue
             for who, t0, t1 in p.timeline:
                 acc.setdefault(who.split(":")[0], []).append(t1 - t0)
         return {jid: PhaseProfile(jid, tuple(roll.get(jid, ())),
-                                  tuple(train.get(jid, ())))
-                for jid in sorted(set(roll) | set(train))}
+                                  tuple(train.get(jid, ())),
+                                  tuple(reward.get(jid, ())))
+                for jid in sorted(set(roll) | set(train) | set(reward))}

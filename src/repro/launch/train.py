@@ -32,6 +32,14 @@ paper's answer to the rollout<->train dependency bubble:
   the host-DRAM actor cache: while one job trains, another's rollout
   drains through the engine.  Job ``i`` uses ``seed + i``; per-job losses
   are bit-exact to running that job alone.
+* ``stream`` — group-level pipelining *inside* the job (``rl.stream``):
+  the engine streams each completed GRPO prompt group to a reward permit
+  pool (``--reward-workers`` verifiers running off the critical path —
+  see ``--reward`` / ``--reward-latency``) while it keeps decoding the
+  stragglers, and the trainer consumes rewarded groups as micro-batches
+  (``--micro-groups``; default = one bit-exact full-batch step per
+  iteration) behind the same staleness guard, extended past 1 with
+  clipped importance-ratio diagnostics in the history.
 
 All modes print/return per-step history; the mux modes additionally
 report the measured phase timelines (reclaimed dependency bubble) — see
@@ -45,6 +53,8 @@ import time
 from repro.models import build_model
 from repro.rl.coexec import (GRPOJob, MuxConfig, build_train_batch,
                              run_coexec, run_pipelined, run_sequential)
+from repro.rl.rewards import make_reward
+from repro.rl.stream import run_streaming
 
 __all__ = ["build_train_batch", "run_training"]
 
@@ -58,16 +68,24 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  kv_block_size: int = 16, sched: str = "fifo",
                  prefix_share: bool = False, slo_bound: float = 2.0,
                  mux: str = "off", mux_staleness: int = 1, jobs: int = 2,
+                 reward: str = "arith", reward_latency: float = 0.0,
+                 reward_workers: int = 2, micro_groups: int | None = None,
                  return_report: bool = False):
     """GRPO post-training through the phase-multiplexed executors.
 
     ``rollout`` picks the generation backend (``"static"`` scan or the
     continuous-batching serving ``"engine"``); ``mux`` picks the executor
-    (see module docstring).  Returns ``(state, history)`` — or, for
-    ``mux="coexec"``, ``(states, histories)`` dicts keyed by job id — plus
-    the :class:`~repro.rl.coexec.MuxReport` when ``return_report``.
+    (see module docstring); ``reward``/``reward_latency`` pick the
+    verifier (``rl.rewards.make_reward`` — a nonzero latency wraps it in
+    the slow external-verifier stub, the workload ``--mux stream``'s
+    reward pool hides off the critical path).  Returns ``(state,
+    history)`` — or, for ``mux="coexec"``, ``(states, histories)`` dicts
+    keyed by job id — plus the :class:`~repro.rl.coexec.MuxReport` when
+    ``return_report``.
     """
-    cfg = MuxConfig(mode=mux, max_staleness=mux_staleness)
+    cfg = MuxConfig(mode=mux, max_staleness=mux_staleness,
+                    reward_workers=reward_workers, micro_groups=micro_groups)
+    reward_fn = make_reward(reward, latency_s=reward_latency, seed=seed)
 
     def make_job(jid: str, job_seed: int) -> GRPOJob:
         return GRPOJob(
@@ -76,7 +94,8 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
             max_new=max_new, lr=lr, temperature=temperature, rollout=rollout,
             num_slots=num_slots, engine_block_size=engine_block_size,
             kv=kv, kv_block_size=kv_block_size, sched=sched,
-            prefix_share=prefix_share, slo_bound=slo_bound)
+            prefix_share=prefix_share, slo_bound=slo_bound,
+            reward_fn=reward_fn)
 
     if cfg.mode == "off":
         state, hist, report = run_sequential(make_job("job0", seed),
@@ -85,6 +104,11 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
         state, hist, report = run_pipelined(make_job("job0", seed),
                                             max_staleness=cfg.max_staleness,
                                             log_every=log_every)
+    elif cfg.mode == "stream":
+        state, hist, report = run_streaming(
+            make_job("job0", seed), max_staleness=cfg.max_staleness,
+            reward_workers=cfg.reward_workers,
+            micro_groups=cfg.micro_groups, log_every=log_every)
     else:                                   # "coexec"
         if jobs < 1:
             raise ValueError("coexec needs >= 1 jobs")
@@ -135,21 +159,41 @@ def _main():
                     help="radix prompt-prefix KV sharing (--kv paged): the "
                          "GRPO group's duplicated prompt prefills once and "
                          "its full blocks are pinned under all members")
-    ap.add_argument("--mux", choices=("off", "pipeline", "coexec"),
+    ap.add_argument("--mux", choices=("off", "pipeline", "coexec", "stream"),
                     default="off",
                     help="phase multiplexing: 'off' runs rollout and "
                          "training back-to-back (baseline); 'pipeline' "
                          "overlaps next-iteration rollout with the current "
                          "training step behind the --mux-staleness guard; "
                          "'coexec' round-robins --jobs jobs over the shared "
-                         "rollout/train pools with warm-start switches")
+                         "rollout/train pools with warm-start switches; "
+                         "'stream' pipelines at prompt-group granularity — "
+                         "finished groups flow to the --reward-workers "
+                         "reward pool and to train micro-batches while the "
+                         "engine still decodes the stragglers")
     ap.add_argument("--mux-staleness", type=int, default=1,
-                    help="pipeline mode: max optimizer steps the rollout "
-                         "weights may lag (0 = force sync; bit-exact to "
-                         "--mux off but with no overlap)")
+                    help="pipeline/stream modes: max optimizer iterations "
+                         "the rollout weights may lag (0 = force sync; "
+                         "bit-exact to --mux off but with no overlap)")
     ap.add_argument("--jobs", type=int, default=2,
                     help="coexec mode: number of co-executing jobs "
                          "(job i uses seed+i)")
+    ap.add_argument("--reward", default="arith",
+                    choices=("arith", "length", "format", "composite"),
+                    help="verifier (rl.rewards): exact numeric match, "
+                         "match + length penalty, regex format check, or "
+                         "a weighted composite")
+    ap.add_argument("--reward-latency", type=float, default=0.0,
+                    help="wrap the verifier in the slow external-verifier "
+                         "stub with this mean verdict latency (seconds); "
+                         "--mux stream hides it on the reward pool")
+    ap.add_argument("--reward-workers", type=int, default=2,
+                    help="stream mode: reward permit-pool capacity "
+                         "(concurrent verifier calls)")
+    ap.add_argument("--micro-groups", type=int, default=None,
+                    help="stream mode: rewarded groups per train "
+                         "micro-step (default: all groups of an iteration "
+                         "in one bit-exact full-batch step)")
     args = ap.parse_args()
     t0 = time.time()
     out = run_training(args.arch, reduced=args.reduced, steps=args.steps,
@@ -160,7 +204,10 @@ def _main():
                        sched=args.sched, prefix_share=args.prefix_share,
                        slo_bound=args.slo_bound,
                        mux=args.mux, mux_staleness=args.mux_staleness,
-                       jobs=args.jobs, return_report=True)
+                       jobs=args.jobs, reward=args.reward,
+                       reward_latency=args.reward_latency,
+                       reward_workers=args.reward_workers,
+                       micro_groups=args.micro_groups, return_report=True)
     _, hist, report = out
     wall = time.time() - t0
     if args.mux == "coexec":
@@ -170,8 +217,11 @@ def _main():
     else:
         print(f"done in {wall:.1f}s; final reward {hist[-1]['reward']:.3f}")
     s = report.summary()
+    reward_part = (f"reward busy {s['total_reward_s']:.2f}s, "
+                   if s["total_reward_s"] else "")
     print(f"mux={report.mode}: rollout busy {s['total_rollout_s']:.2f}s, "
-          f"train busy {s['total_train_s']:.2f}s, overlap {s['overlap_s']:.2f}s "
+          f"train busy {s['total_train_s']:.2f}s, {reward_part}"
+          f"overlap {s['overlap_s']:.2f}s "
           f"({s['reclaimed_bubble_frac']:.0%} of the back-to-back bubble "
           f"reclaimed)")
 

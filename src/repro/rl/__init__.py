@@ -1,14 +1,19 @@
 from repro.rl.grpo import GRPOConfig, group_advantages, policy_gradient_loss
 from repro.rl.rollout import (SamplerConfig, completions_to_text, generate,
-                              generate_continuous)
-from repro.rl.rewards import arithmetic_reward
+                              generate_continuous, generate_continuous_stream)
+from repro.rl.rewards import (CompositeReward, ExternalVerifier,
+                              arithmetic_reward, format_reward,
+                              length_penalty_reward, make_reward)
 from repro.rl.train_step import init_train_state, make_loss_fn, make_train_step
 from repro.rl.coexec import (GRPOJob, MuxConfig, MuxReport, build_train_batch,
                              run_coexec, run_pipelined, run_sequential)
+from repro.rl.stream import run_streaming
 
 __all__ = ["GRPOConfig", "group_advantages", "policy_gradient_loss",
            "SamplerConfig", "generate", "generate_continuous",
-           "completions_to_text", "arithmetic_reward", "init_train_state",
-           "make_loss_fn", "make_train_step", "GRPOJob", "MuxConfig",
-           "MuxReport", "build_train_batch", "run_coexec", "run_pipelined",
-           "run_sequential"]
+           "generate_continuous_stream", "completions_to_text",
+           "arithmetic_reward", "length_penalty_reward", "format_reward",
+           "ExternalVerifier", "CompositeReward", "make_reward",
+           "init_train_state", "make_loss_fn", "make_train_step", "GRPOJob",
+           "MuxConfig", "MuxReport", "build_train_batch", "run_coexec",
+           "run_pipelined", "run_sequential", "run_streaming"]

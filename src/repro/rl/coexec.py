@@ -7,7 +7,10 @@ their training phase through ``rl.train_step``, scheduled by
 ``core.phase_control`` run permits so the dependency bubble between the
 two phases is reclaimed instead of serialized away.
 
-Three executors, selected by ``launch/train.py --mux``:
+Four executors, selected by ``launch/train.py --mux`` (the fourth,
+:func:`repro.rl.stream.run_streaming`, lives in ``rl/stream.py`` — it
+pipelines *inside* the job at GRPO-group granularity with a third
+"reward" permit pool); the three whole-phase executors here:
 
 * :func:`run_sequential` (``--mux off``) — the standard-disaggregation
   baseline: rollout and training back-to-back in one thread.  Phases still
@@ -73,17 +76,26 @@ def build_train_batch(out, adv, prompt_len):
 @dataclass(frozen=True)
 class MuxConfig:
     """Phase-multiplexing knobs (see module docstring / ``--mux``)."""
-    mode: str = "off"                 # "off" | "pipeline" | "coexec"
-    max_staleness: int = 1            # pipeline: optimizer steps the rollout
-    #                                   weights may lag (0 = sync, bit-exact
-    #                                   to the sequential path)
+    mode: str = "off"                 # "off" | "pipeline" | "coexec" | "stream"
+    max_staleness: int = 1            # pipeline/stream: optimizer steps the
+    #                                   rollout weights may lag (0 = sync,
+    #                                   bit-exact to the sequential path)
     host_cache_gb: float = 8.0        # coexec actor-cache budget
+    reward_workers: int = 2           # stream: reward permit-pool capacity
+    micro_groups: Optional[int] = None    # stream: groups per train
+    #                                       micro-step (None = one full-batch
+    #                                       optimizer step per iteration —
+    #                                       the bit-exact default)
 
     def __post_init__(self):
-        if self.mode not in ("off", "pipeline", "coexec"):
+        if self.mode not in ("off", "pipeline", "coexec", "stream"):
             raise ValueError(f"unknown mux mode {self.mode!r}")
         if self.max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
+        if self.reward_workers < 1:
+            raise ValueError("reward_workers must be >= 1")
+        if self.micro_groups is not None and self.micro_groups < 1:
+            raise ValueError("micro_groups must be >= 1 (or None)")
 
 
 @functools.lru_cache(maxsize=32)
@@ -214,12 +226,76 @@ class GRPOJob:
         jax.block_until_ready(out["completions"])
         return b, out
 
-    # ---- training phase ----------------------------------------------------
-    def train_phase(self, state, b, out):
-        """Reward -> GRPO advantages -> one optimizer step.  Returns
-        ``(state, rec)`` with the scalar metrics the history records."""
+    def rollout_stream(self, params, k: int, on_group, on_batch=None):
+        """Streaming rollout for iteration ``k``: ``on_group(gout)`` fires
+        the moment each GRPO prompt group finishes decoding (the engine
+        keeps serving the stragglers — partial harvest, no drain).  Same
+        task batch, key stream and engine computation as
+        :meth:`rollout_step`, so the union of the streamed groups is
+        bit-identical to the batch rollout.  Returns the task batch;
+        ``on_batch(b)``, when given, receives it *before* the engine runs
+        — reward workers need the answers before the first group lands.
+
+        The static backend has no sub-phase granularity to expose: it
+        generates the whole batch, then emits the groups in row order —
+        correct, just without intra-rollout overlap."""
+        from repro.rl.rollout import generate_continuous_stream
+
+        b = self.task.sample_batch(self.batch)
+        if on_batch is not None:
+            on_batch(b)
+        prompts = jnp.asarray(np.repeat(b.prompts, self.group, axis=0))
+        self._key, k1 = jax.random.split(self._key)
+        if self.rollout == "engine":
+            B, Sp = prompts.shape
+            eng = self._engine_for(self.num_slots or B,
+                                   Sp + self.sampler.max_new_tokens)
+            for gout in generate_continuous_stream(
+                    self.model, params, prompts, k1, self.sampler,
+                    group=self.group, num_slots=self.num_slots,
+                    block_size=self.engine_block_size, kv_layout=self.kv,
+                    kv_block_size=self.kv_block_size,
+                    num_kv_blocks=self.num_kv_blocks, engine=eng,
+                    prefix_share=self.prefix_share, job_id=self.job_id):
+                on_group(gout)
+        else:
+            out = generate(self.model, params, prompts, k1, self.sampler)
+            jax.block_until_ready(out["completions"])
+            comp = np.asarray(out["completions"])
+            logp = np.asarray(out["behavior_logp"])
+            mask = np.asarray(out["mask"])
+            g = self.group
+            for gi in range(comp.shape[0] // g):
+                rows = list(range(gi * g, (gi + 1) * g))
+                on_group({"group_index": gi, "rows": rows,
+                          "completions": comp[rows],
+                          "behavior_logp": logp[rows],
+                          "mask": mask[rows]})
+        return b
+
+    # ---- reward phase ------------------------------------------------------
+    def compute_rewards(self, b, out) -> np.ndarray:
+        """Batch-at-once verification (the inline path)."""
         answers = [a for a in b.answers for _ in range(self.group)]
-        rewards = self.reward_fn(out["completions"], out["mask"], answers)
+        return self.reward_fn(out["completions"], out["mask"], answers)
+
+    def reward_group(self, b, gout) -> np.ndarray:
+        """Verify one streamed group on a reward-pool worker.  Verifiers
+        are row-wise (see ``rl.rewards``), so per-group verification
+        concatenated in row order is bit-identical to
+        :meth:`compute_rewards` on the assembled batch."""
+        answers = [b.answers[gout["group_index"]]] * len(gout["rows"])
+        return self.reward_fn(gout["completions"], gout["mask"], answers)
+
+    # ---- training phase ----------------------------------------------------
+    def train_phase(self, state, b, out, rewards: Optional[np.ndarray] = None):
+        """Reward (unless precomputed by the reward pool) -> GRPO
+        advantages -> one optimizer step.  Returns ``(state, rec)`` with
+        the scalar metrics the history records, including the clipped
+        importance-ratio diagnostics that surface off-policy drift under
+        staleness > 0."""
+        if rewards is None:
+            rewards = self.compute_rewards(b, out)
         adv = group_advantages(rewards, self.group)
         tb = build_train_batch(out, adv, b.prompts.shape[1])
         state, metrics = self._train_step(state, tb)
@@ -228,6 +304,9 @@ class GRPOJob:
                "acc": float((rewards >= 1.0).mean()),
                "loss": float(metrics["loss"]),
                "entropy": float(metrics["entropy"]),
+               "clip_frac": float(metrics["clip_frac"]),
+               "ratio_mean": float(metrics["ratio_mean"]),
+               "ratio_max": float(metrics["ratio_max"]),
                "tokens": int(np.asarray(out["mask"]).sum())}
         return state, rec
 
@@ -235,23 +314,20 @@ class GRPOJob:
 # ---------------------------------------------------------------------------
 # Reporting: measured timelines -> reclaimed bubble + PhaseProfiles
 # ---------------------------------------------------------------------------
-def _intersection_s(a: list[tuple[str, float, float]],
-                    b: list[tuple[str, float, float]]) -> float:
-    """Total time two capacity-1 pools were busy simultaneously (their
-    interval sets are each non-overlapping, so a two-pointer sweep works)."""
-    ia = sorted((t0, t1) for _, t0, t1 in a)
-    ib = sorted((t0, t1) for _, t0, t1 in b)
-    i = j = 0
+def _union_s(intervals: list[tuple[float, float]]) -> float:
+    """Total length of the union of (possibly overlapping) intervals."""
+    ivs = sorted(intervals)
     tot = 0.0
-    while i < len(ia) and j < len(ib):
-        lo = max(ia[i][0], ib[j][0])
-        hi = min(ia[i][1], ib[j][1])
-        if hi > lo:
-            tot += hi - lo
-        if ia[i][1] < ib[j][1]:
-            i += 1
+    cur_lo = cur_hi = None
+    for lo, hi in ivs:
+        if cur_hi is None or lo > cur_hi:
+            if cur_hi is not None:
+                tot += cur_hi - cur_lo
+            cur_lo, cur_hi = lo, hi
         else:
-            j += 1
+            cur_hi = max(cur_hi, hi)
+    if cur_hi is not None:
+        tot += cur_hi - cur_lo
     return tot
 
 
@@ -259,35 +335,59 @@ def _intersection_s(a: list[tuple[str, float, float]],
 class MuxReport:
     """What a mux run measured: per-pool busy timelines, the overlap they
     achieved, and the per-job :class:`PhaseProfile` records that feed the
-    co-execution simulator."""
+    co-execution simulator.
+
+    Overlap generalizes to any number of pools (rollout/train, plus the
+    streaming executor's reward pool): ``overlap_s`` is total busy time
+    minus the union of all busy intervals — every second during which two
+    or more permits were in flight at once counts once per *extra* permit.
+    With only rollout and train this reduces exactly to their pairwise
+    intersection, so the two-pool modes report the same numbers as before.
+    """
     mode: str
     wall_s: float
     timelines: dict[str, list[tuple[str, float, float]]]
     profiles: dict[str, PhaseProfile] = field(default_factory=dict)
     cache_stats: dict = field(default_factory=dict)
 
+    def _pool_busy_s(self, name: str) -> float:
+        return sum(t1 - t0 for _, t0, t1 in self.timelines.get(name, []))
+
     @property
     def total_rollout_s(self) -> float:
-        return sum(t1 - t0 for _, t0, t1 in self.timelines.get("rollout", []))
+        return self._pool_busy_s("rollout")
 
     @property
     def total_train_s(self) -> float:
-        return sum(t1 - t0 for _, t0, t1 in self.timelines.get("train", []))
+        return self._pool_busy_s("train")
+
+    @property
+    def total_reward_s(self) -> float:
+        """Reward-pool busy time (0 for executors that verify inline)."""
+        return self._pool_busy_s("reward")
+
+    @property
+    def _total_busy_s(self) -> float:
+        return sum(self._pool_busy_s(p) for p in self.timelines)
 
     @property
     def overlap_s(self) -> float:
-        """Wall time during which a rollout phase and a training phase were
-        in flight simultaneously — the reclaimed dependency bubble."""
-        return _intersection_s(self.timelines.get("rollout", []),
-                               self.timelines.get("train", []))
+        """Wall time re-claimed by concurrency: total permit-busy seconds
+        minus the union of all busy intervals (see class docstring)."""
+        all_ivs = [(t0, t1) for tl in self.timelines.values()
+                   for _, t0, t1 in tl]
+        return self._total_busy_s - _union_s(all_ivs)
 
     @property
     def bubble_back_to_back_s(self) -> float:
-        """The dependency bubble the back-to-back schedule pays: phases
-        strictly alternate, so over the run the lighter pool idles for the
-        whole duration of the other pool's phases —
-        ``min(total_rollout, total_train)`` is the reclaimable part."""
-        return min(self.total_rollout_s, self.total_train_s)
+        """The dependency bubble the fully serialized schedule pays: with
+        every phase back-to-back, wall time is the sum of all phases while
+        the ideal is the busiest pool's total — the difference
+        (``sum - max``; ``min(roll, train)`` in the two-pool case) is the
+        reclaimable part."""
+        busiest = max((self._pool_busy_s(p) for p in self.timelines),
+                      default=0.0)
+        return self._total_busy_s - busiest
 
     @property
     def reclaimed_bubble_frac(self) -> float:
@@ -300,6 +400,7 @@ class MuxReport:
             "wall_s": self.wall_s,
             "total_rollout_s": self.total_rollout_s,
             "total_train_s": self.total_train_s,
+            "total_reward_s": self.total_reward_s,
             "overlap_s": self.overlap_s,
             "bubble_back_to_back_s": self.bubble_back_to_back_s,
             "reclaimed_bubble_frac": self.reclaimed_bubble_frac,

@@ -47,12 +47,21 @@ def policy_gradient_loss(logits, labels, advantages, loss_mask,
     if behavior_logp is None:
         pg = -(logp * adv * loss_mask).sum() / denom
         clip_frac = jnp.zeros(())
+        ratio_mean = jnp.ones(())
+        ratio_max = jnp.ones(())
     else:
         ratio = jnp.exp(logp - behavior_logp)
         unclipped = ratio * adv
         clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
         pg = -(jnp.minimum(unclipped, clipped) * loss_mask).sum() / denom
         clip_frac = ((jnp.abs(ratio - 1) > clip_eps) * loss_mask).sum() / denom
+        # off-policy drift diagnostics: how far the sampled (behaviour)
+        # policy has drifted from the trained one — the quantity the
+        # staleness guard bounds and the clipping corrects.  Masked stats
+        # only (padding rows carry ratio exp(0-0)=1 and would dilute them).
+        ratio_mean = (ratio * loss_mask).sum() / denom
+        ratio_max = jnp.max(jnp.where(loss_mask > 0, ratio, 1.0))
     ent = -(jax.nn.softmax(logits) * jax.nn.log_softmax(logits)).sum(-1)
     entropy = (ent * loss_mask).sum() / denom
-    return pg, {"pg_loss": pg, "entropy": entropy, "clip_frac": clip_frac}
+    return pg, {"pg_loss": pg, "entropy": entropy, "clip_frac": clip_frac,
+                "ratio_mean": ratio_mean, "ratio_max": ratio_max}

@@ -1,9 +1,45 @@
-"""Verifiable rewards (RLVR): exact-match verification of generated answers."""
+"""Verifiable rewards (RLVR): pluggable verifiers over generated answers.
+
+Every verifier shares one signature — ``fn(completions, mask, answers) ->
+(B,) float32`` — and is **row-wise**: row ``i``'s reward depends only on
+row ``i``'s completion and answer.  That contract is what lets the
+streaming mux (``rl.stream``) verify each GRPO prompt group the moment it
+finishes decoding, on a reward-pool worker, without changing the math:
+per-group verification concatenated in row order is bit-identical to one
+batch-at-once call.
+
+Shipped verifiers:
+
+* :func:`arithmetic_reward` — exact-match numeric verification (the
+  original task reward).
+* :func:`length_penalty_reward` — exact match with a per-token length
+  penalty beyond a target budget (rewards concise answers).
+* :func:`format_reward` — regex/format checking: full-match against a
+  pattern (default: a bare integer) earns the format point independent of
+  numeric correctness.
+* :class:`ExternalVerifier` — the *slow verifier* stub: wraps any reward
+  fn behind a configurable (deterministically jittered) latency, modeling
+  an external judge / sandbox / unit-test runner whose verdict takes real
+  wall time.  This is the workload the reward permit pool exists for —
+  verification runs off the critical path while the engine decodes
+  stragglers and the trainer steps.
+* :class:`CompositeReward` — weighted sum of verifiers (still row-wise).
+
+``make_reward`` is the factory behind ``launch/train.py --reward`` /
+``--reward-latency``.
+"""
 from __future__ import annotations
+
+import re
+import threading
+import time
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.rl.rollout import completions_to_text
+
+RewardFn = Callable[..., np.ndarray]
 
 
 def arithmetic_reward(completions, mask, answers: list[str]) -> np.ndarray:
@@ -17,3 +53,112 @@ def arithmetic_reward(completions, mask, answers: list[str]) -> np.ndarray:
         elif txt and all(c in "-0123456789" for c in txt):
             out[i] = 0.1
     return out
+
+
+def length_penalty_reward(completions, mask, answers: list[str], *,
+                          target_tokens: int = 4,
+                          penalty_per_token: float = 0.05) -> np.ndarray:
+    """Exact-match reward with a length penalty: every recorded token
+    beyond ``target_tokens`` costs ``penalty_per_token`` (floored at the
+    shaping level).  Rewards answers that are both right and concise —
+    the verifier RL-with-verifiable-rewards setups use to stop length
+    inflation."""
+    base = arithmetic_reward(completions, mask, answers)
+    lengths = np.asarray(mask).sum(axis=1)
+    over = np.maximum(lengths - target_tokens, 0.0)
+    return np.maximum(base - penalty_per_token * over, 0.0).astype(np.float32)
+
+
+def format_reward(completions, mask, answers: Optional[list[str]] = None, *,
+                  pattern: str = r"-?\d+") -> np.ndarray:
+    """Regex/format checker: 1.0 when the stripped completion full-matches
+    ``pattern`` (default: a bare, possibly negative integer), else 0.0.
+    Independent of numeric correctness — the "did the model answer in the
+    required format" verifier."""
+    texts = completions_to_text(completions, mask)
+    rx = re.compile(pattern)
+    return np.asarray([1.0 if rx.fullmatch(t.strip()) else 0.0
+                       for t in texts], np.float32)
+
+
+class ExternalVerifier:
+    """Slow external-verifier stub: delegate to ``base`` after a
+    configurable latency.
+
+    ``latency_s`` is the mean verdict latency; ``jitter`` adds a
+    deterministic per-call uniform perturbation in ``[-jitter, +jitter] *
+    latency_s`` drawn from a seeded stream, so repeated runs see the same
+    latency sequence (benchmarks stay comparable) while calls still
+    interleave non-trivially across reward-pool workers.  The sleep
+    releases the GIL, which is exactly how a real external judge behaves
+    from the driver's point of view: the reward worker blocks, the engine
+    and trainer do not.
+    """
+
+    def __init__(self, base: RewardFn = arithmetic_reward, *,
+                 latency_s: float = 0.1, jitter: float = 0.0, seed: int = 0):
+        if latency_s < 0:
+            raise ValueError("latency_s must be >= 0")
+        if not 0.0 <= jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1] (fraction of latency)")
+        self.base = base
+        self.latency_s = latency_s
+        self.jitter = jitter
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.calls = 0
+
+    def __call__(self, completions, mask, answers) -> np.ndarray:
+        with self._lock:                    # deterministic draw order
+            self.calls += 1
+            delay = self.latency_s
+            if self.jitter:
+                delay *= 1.0 + float(self._rng.uniform(-self.jitter,
+                                                       self.jitter))
+        if delay > 0:
+            time.sleep(delay)
+        return self.base(completions, mask, answers)
+
+
+class CompositeReward:
+    """Weighted sum of row-wise verifiers (itself row-wise)."""
+
+    def __init__(self, parts: Sequence[tuple[RewardFn, float]]):
+        if not parts:
+            raise ValueError("CompositeReward needs at least one part")
+        self.parts = list(parts)
+
+    def __call__(self, completions, mask, answers) -> np.ndarray:
+        out = np.zeros(np.asarray(mask).shape[0], np.float32)
+        for fn, w in self.parts:
+            out += w * fn(completions, mask, answers)
+        return out
+
+
+_NAMED: dict[str, RewardFn] = {
+    "arith": arithmetic_reward,
+    "length": length_penalty_reward,
+    "format": format_reward,
+}
+
+
+def make_reward(name: str = "arith", *, latency_s: float = 0.0,
+                jitter: float = 0.0, seed: int = 0) -> RewardFn:
+    """Factory behind ``--reward`` / ``--reward-latency``.
+
+    ``name`` picks the verifier (``arith`` | ``length`` | ``format`` |
+    ``composite`` = arith + 0.25*format - length folded in); a nonzero
+    ``latency_s`` wraps it in an :class:`ExternalVerifier` so rollout
+    drivers can model slow external judgment without changing rewards."""
+    if name == "composite":
+        fn: RewardFn = CompositeReward([(arithmetic_reward, 1.0),
+                                        (format_reward, 0.25)])
+    elif name in _NAMED:
+        fn = _NAMED[name]
+    else:
+        raise ValueError(f"unknown reward {name!r} "
+                         f"(choose from {sorted(_NAMED) + ['composite']})")
+    if latency_s > 0:
+        fn = ExternalVerifier(fn, latency_s=latency_s, jitter=jitter,
+                              seed=seed)
+    return fn

@@ -67,6 +67,63 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
     }
 
 
+def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
+                    frontend, *, num_slots, block_size, kv_layout,
+                    kv_block_size, num_kv_blocks, engine, sched, policy,
+                    prefix_share, group, job_id):
+    """Shared engine setup for the batch and streaming rollout executors:
+    build a fresh engine (or validate + ``reset`` a persistent one) and
+    turn the prompt rows into the pending request deque."""
+    from collections import deque
+
+    from repro.serve import Engine, EngineConfig, Request
+
+    B, Sp = prompts_np.shape
+    T = sampler.max_new_tokens
+    if engine is None:
+        engine = Engine(model, params, EngineConfig(
+            num_slots=B if num_slots is None else num_slots,
+            max_seq_len=Sp + T,
+            eos_id=sampler.eos_id, temperature=sampler.temperature,
+            block_size=block_size, kv_layout=kv_layout,
+            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+            sched=sched, prefix_share=prefix_share),
+            rng=rng, policy=policy)
+    else:
+        cfg = engine.config
+        if cfg.max_seq_len < Sp + T:
+            raise ValueError(
+                f"persistent engine max_seq_len {cfg.max_seq_len} "
+                f"< prompt {Sp} + budget {T}")
+        # the engine's sampling behaviour is baked into its jitted fns —
+        # a sampler that disagrees would be silently ignored, so refuse
+        if (cfg.temperature, cfg.eos_id) != (sampler.temperature,
+                                             sampler.eos_id):
+            raise ValueError(
+                f"persistent engine serves temperature={cfg.temperature}, "
+                f"eos_id={cfg.eos_id} but sampler asks for "
+                f"temperature={sampler.temperature}, eos_id={sampler.eos_id}")
+        if cfg.kv_layout != kv_layout:
+            raise ValueError(
+                f"persistent engine kv_layout={cfg.kv_layout!r} != "
+                f"requested {kv_layout!r}")
+        if prefix_share and not cfg.prefix_share:
+            raise ValueError("persistent engine was built without "
+                             "prefix_share")
+        engine.reset(params, rng)
+    pending = deque()
+    for i in range(B):
+        fr = None if frontend is None else frontend[i:i + 1]
+        # one shared prefix key per GRPO prompt group: rows i*group ..
+        # (i+1)*group-1 are the same prompt repeated
+        key = ((job_id, i // group)
+               if engine.radix is not None and group else None)
+        pending.append(Request(rid=i, prompt=prompts_np[i],
+                               max_new_tokens=T, frontend=fr,
+                               prefix_key=key, job_id=job_id))
+    return engine, pending
+
+
 def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         frontend=None, *, num_slots: int | None = None,
                         block_size: int = 1, kv_layout: str = "contiguous",
@@ -113,53 +170,15 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     """
     import numpy as np
 
-    from repro.serve import Engine, EngineConfig, Request
-
     B, Sp = prompts.shape
     T = sampler.max_new_tokens
     prompts_np = np.asarray(prompts, np.int32)
-    if engine is None:
-        engine = Engine(model, params, EngineConfig(
-            num_slots=B if num_slots is None else num_slots,
-            max_seq_len=Sp + T,
-            eos_id=sampler.eos_id, temperature=sampler.temperature,
-            block_size=block_size, kv_layout=kv_layout,
-            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-            sched=sched, prefix_share=prefix_share),
-            rng=rng, policy=policy)
-    else:
-        cfg = engine.config
-        if cfg.max_seq_len < Sp + T:
-            raise ValueError(
-                f"persistent engine max_seq_len {cfg.max_seq_len} "
-                f"< prompt {Sp} + budget {T}")
-        # the engine's sampling behaviour is baked into its jitted fns —
-        # a sampler that disagrees would be silently ignored, so refuse
-        if (cfg.temperature, cfg.eos_id) != (sampler.temperature,
-                                             sampler.eos_id):
-            raise ValueError(
-                f"persistent engine serves temperature={cfg.temperature}, "
-                f"eos_id={cfg.eos_id} but sampler asks for "
-                f"temperature={sampler.temperature}, eos_id={sampler.eos_id}")
-        if cfg.kv_layout != kv_layout:
-            raise ValueError(
-                f"persistent engine kv_layout={cfg.kv_layout!r} != "
-                f"requested {kv_layout!r}")
-        if prefix_share and not cfg.prefix_share:
-            raise ValueError("persistent engine was built without "
-                             "prefix_share")
-        engine.reset(params, rng)
-    from collections import deque
-    pending = deque()
-    for i in range(B):
-        fr = None if frontend is None else frontend[i:i + 1]
-        # one shared prefix key per GRPO prompt group: rows i*group ..
-        # (i+1)*group-1 are the same prompt repeated
-        key = ((job_id, i // group)
-               if engine.radix is not None and group else None)
-        pending.append(Request(rid=i, prompt=prompts_np[i],
-                               max_new_tokens=T, frontend=fr,
-                               prefix_key=key, job_id=job_id))
+    engine, pending = _engine_session(
+        model, params, prompts_np, rng, sampler, frontend,
+        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
+        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+        engine=engine, sched=sched, policy=policy,
+        prefix_share=prefix_share, group=group, job_id=job_id)
     # backpressure-aware drive: a full queue (max_waiting) defers
     # submission until the engine drains instead of crashing
     while pending or not engine.idle:
@@ -186,6 +205,92 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         "mask": jnp.asarray(mask),
         "engine_stats": engine.stats,
     }
+
+
+def generate_continuous_stream(model, params, prompts, rng,
+                               sampler: SamplerConfig, frontend=None, *,
+                               group: int | None = None,
+                               num_slots: int | None = None,
+                               block_size: int = 1,
+                               kv_layout: str = "contiguous",
+                               kv_block_size: int = 16,
+                               num_kv_blocks: int | None = None, engine=None,
+                               sched: str = "fifo", policy=None,
+                               prefix_share: bool = False,
+                               job_id: str | None = None):
+    """Streaming rollout executor: yield completed GRPO prompt **groups**
+    the moment their last member finishes decoding, while the engine keeps
+    serving the stragglers.
+
+    Same engine computation as :func:`generate_continuous` — identical
+    tokens, behaviour logprobs and masks — but instead of one dict after a
+    full drain, this generator yields one dict per prompt group (``group``
+    consecutive rows; each row its own group when ``group`` is None/1), in
+    **completion order**, each with:
+
+    ``group_index``
+        ``rid // group`` — position of the group's prompt in the batch.
+    ``rows``
+        the global row indices (ascending) the group's arrays map to.
+    ``completions`` / ``behavior_logp`` / ``mask``
+        ``(group, T)`` arrays with exactly the padding semantics of the
+        batch executor (EOS-fill / zero-fill past each row's length), so
+        stacking every yielded group by ``rows`` reproduces
+        ``generate_continuous``'s output arrays bit for bit.
+
+    This is the engine-side half of the paper's sub-phase bubble
+    reclamation: finished groups flow to reward verification and training
+    micro-batches (``rl.stream``) while decode is still in flight — the
+    driver pulls via :meth:`Engine.harvest` (partial harvest, no drain).
+    """
+    import numpy as np
+
+    B, Sp = prompts.shape
+    T = sampler.max_new_tokens
+    g = group or 1
+    prompts_np = np.asarray(prompts, np.int32)
+    engine, pending = _engine_session(
+        model, params, prompts_np, rng, sampler, frontend,
+        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
+        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+        engine=engine, sched=sched, policy=policy,
+        prefix_share=prefix_share, group=group, job_id=job_id)
+    engine.harvest()                    # drop any stale pre-session leftovers
+    buckets: dict[int, list] = {}
+    sizes = [min(B, (gi + 1) * g) - gi * g for gi in range((B + g - 1) // g)]
+
+    def drain_finished():
+        for o in engine.harvest():
+            gi = o.rid // g
+            buckets.setdefault(gi, []).append(o)
+            if len(buckets[gi]) == sizes[gi]:
+                yield _group_dict(gi, buckets.pop(gi))
+
+    def _group_dict(gi: int, outs: list):
+        outs = sorted(outs, key=lambda o: o.rid)
+        n_rows = len(outs)
+        completions = np.full((n_rows, T), sampler.eos_id, np.int32)
+        behavior_logp = np.zeros((n_rows, T), np.float32)
+        mask = np.zeros((n_rows, T), np.float32)
+        for r, o in enumerate(outs):
+            n = o.num_tokens
+            completions[r, :n] = o.tokens
+            behavior_logp[r, :n] = o.logprobs
+            mask[r, :n] = 1.0
+        return {"group_index": gi,
+                "rows": [o.rid for o in outs],
+                "completions": completions,
+                "behavior_logp": behavior_logp,
+                "mask": mask}
+
+    # backpressure-aware drive, harvesting between scheduler ticks
+    while pending or not engine.idle:
+        while pending and engine.submit(pending[0]):
+            pending.popleft()
+        if not engine.idle:
+            engine.step()
+        yield from drain_finished()
+    yield from drain_finished()         # anything finalized by the last tick
 
 
 def completions_to_text(completions, mask) -> list[str]:

@@ -1,0 +1,256 @@
+"""Streaming phase mux (``--mux stream``): group-level rollout -> reward ->
+train pipelining behind a reward permit pool.
+
+The pipeline executor (:func:`repro.rl.coexec.run_pipelined`) reclaims the
+rollout<->train bubble at *whole-phase* granularity: rollout ``k+1``
+overlaps train ``k``, but inside an iteration the trainer still waits for
+the entire rollout batch, and rewards are verified inline on the critical
+path.  The remaining bubble lives at sub-phase granularity — and that is
+what this executor reclaims:
+
+* **Group streaming** — the engine yields each completed GRPO prompt
+  group the moment its last member finishes decoding
+  (``rl.rollout.generate_continuous_stream`` over ``Engine.harvest``), so
+  early groups flow downstream while stragglers are still decoding.
+* **Reward permit pool** — a third pool (capacity ``reward_workers``)
+  runs the verifiers (``rl.rewards``: length penalties, format checkers,
+  slow external judges) off the critical path.  A group is dispatched to
+  a reward worker as soon as it streams out of the engine; with a slow
+  verifier this is the difference between paying verification latency
+  serially per group and hiding it under decode + train.
+* **Micro-batched training** — the trainer consumes rewarded groups as
+  they accumulate.  By default it takes one optimizer step per iteration
+  over the fully assembled batch, which keeps the math *bit-exact* to the
+  pipeline/sequential path; ``micro_groups=m`` instead steps the
+  optimizer on every ``m`` rewarded groups (completion order), trading
+  exact equivalence for sub-iteration train overlap.
+* **Staleness > 1** — the on-policy guard generalizes: the rollout of
+  iteration ``k`` may start once ``trained >= k - max_staleness``.  The
+  bounded off-policy drift is corrected by the clipped importance ratio
+  and *surfaced* per step: every history record carries ``clip_frac`` /
+  ``ratio_mean`` / ``ratio_max`` diagnostics next to the realized
+  ``rollout_staleness``.
+
+Equivalence contract (locked by ``tests/test_stream.py``): with
+``max_staleness=0``, instant rewards and the default full-batch trainer,
+``run_streaming`` produces bit-identical losses and params to
+``run_pipelined(max_staleness=0)`` — and therefore to ``run_sequential``.
+The streaming machinery changes *when* things run, never what is
+computed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.core.phase_control import RollMuxRuntime
+from repro.rl.coexec import GRPOJob, _log, _report
+
+__all__ = ["run_streaming"]
+
+
+def _assemble_out(b, gouts: list[dict], group: int):
+    """Stack streamed group dicts into the batch-executor output layout.
+
+    ``gouts`` in row order reproduces ``generate_continuous``'s arrays bit
+    for bit; in completion order (micro-batching) the rows are simply
+    permuted and each group still lines up with its own advantages."""
+    import jax.numpy as jnp
+
+    rows = np.concatenate([np.asarray(g["rows"], np.int64) for g in gouts])
+    prompts_rep = np.repeat(np.asarray(b.prompts), group, axis=0)[rows]
+    completions = np.concatenate([g["completions"] for g in gouts])
+    behavior_logp = np.concatenate([g["behavior_logp"] for g in gouts])
+    mask = np.concatenate([g["mask"] for g in gouts])
+    prompts_dev = jnp.asarray(prompts_rep)
+    completions_dev = jnp.asarray(completions)
+    return {
+        "prompts": prompts_dev,
+        "completions": completions_dev,
+        "tokens": jnp.concatenate([prompts_dev, completions_dev], axis=1),
+        "behavior_logp": jnp.asarray(behavior_logp),
+        "mask": jnp.asarray(mask),
+    }
+
+
+def _merge_recs(recs: list[dict]) -> dict:
+    """Collapse the iteration's micro-step records into one history row
+    (token-weighted means for rates, sums for counts, max for ratio_max)."""
+    if len(recs) == 1:
+        return dict(recs[0])
+    toks = np.asarray([max(r["tokens"], 1) for r in recs], np.float64)
+    w = toks / toks.sum()
+    out = {}
+    for key in ("reward", "acc", "loss", "entropy", "clip_frac",
+                "ratio_mean"):
+        out[key] = float(sum(wi * r[key] for wi, r in zip(w, recs)))
+    out["ratio_max"] = float(max(r["ratio_max"] for r in recs))
+    out["tokens"] = int(sum(r["tokens"] for r in recs))
+    return out
+
+
+def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
+                  reward_workers: int = 2,
+                  micro_groups: Optional[int] = None,
+                  runtime: Optional[RollMuxRuntime] = None,
+                  log_every: int = 0):
+    """``--mux stream``: group-level rollout -> reward -> train pipelining.
+
+    Three planes run concurrently, arbitrated by the runtime's permit
+    pools:
+
+    * the **rollout thread** holds the ``rollout`` permit while the
+      engine streams completed prompt groups; each group is handed to a
+      reward worker *immediately* (the engine keeps decoding);
+    * ``reward_workers`` **reward workers** verify groups under the
+      ``reward`` permit pool (capacity = worker count) — slow verifiers
+      therefore never serialize against decode or the optimizer;
+    * the **train loop** (this thread) consumes rewarded groups under the
+      ``train`` permit: by default one optimizer step per iteration over
+      the re-assembled full batch (bit-exact to the pipeline path), or
+      every ``micro_groups`` rewarded groups in completion order.
+
+    The staleness guard is the pipeline executor's, extended past 1: the
+    rollout for iteration ``k`` may start once ``trained >= k -
+    max_staleness`` iterations have finished their optimizer steps,
+    always picking up the newest synced weights.  Each history record
+    carries the realized ``rollout_staleness`` plus the clipped
+    importance-ratio diagnostics (``clip_frac`` / ``ratio_mean`` /
+    ``ratio_max``) that make the off-policy drift auditable.
+
+    Returns ``(state, history, report)`` like the other executors; the
+    report's timelines include the third (``reward``) pool, and the
+    exported :class:`~repro.core.phase_control.PhaseProfile` records
+    carry ``reward_s`` durations for the simulator's reward phase.
+    """
+    if max_staleness < 0:
+        raise ValueError("max_staleness must be >= 0")
+    if reward_workers < 1:
+        raise ValueError("reward_workers must be >= 1")
+    if micro_groups is not None and micro_groups < 1:
+        raise ValueError("micro_groups must be >= 1 (or None)")
+    rt = runtime or RollMuxRuntime()
+    rt.pool("rollout", 1)
+    rt.pool("train", 1)
+    rt.pool("reward", reward_workers)
+    steps = job.steps
+    n_groups = job.batch                    # one GRPO group per task prompt
+    state = job.init_state()
+    cv = threading.Condition()
+    shared = {"params": state["params"], "trained": 0, "err": None}
+    batches: dict[int, object] = {}         # k -> task batch (answers)
+    versions: dict[int, int] = {}           # k -> behaviour-weight version
+    rewarded: dict[int, list] = {}          # k -> [(gout, rewards)] arrivals
+    history = []
+    pool = ThreadPoolExecutor(max_workers=reward_workers,
+                              thread_name_prefix=f"{job.job_id}-reward")
+    t0 = time.perf_counter()
+
+    def fail(e: BaseException) -> None:
+        with cv:
+            if shared["err"] is None:
+                shared["err"] = e
+            cv.notify_all()
+
+    def reward_task(k: int, gout: dict) -> None:
+        try:
+            with rt.permit("reward", f"{job.job_id}:reward",
+                           capacity=reward_workers):
+                r = job.reward_group(batches[k], gout)
+            with cv:
+                rewarded.setdefault(k, []).append((gout, r))
+                cv.notify_all()
+        except BaseException as e:          # surface into the train loop
+            fail(e)
+
+    def roll_loop():
+        try:
+            for k in range(steps):
+                with cv:
+                    while (shared["trained"] < k - max_staleness
+                           and shared["err"] is None):
+                        cv.wait()
+                    if shared["err"] is not None:
+                        return
+                    params = shared["params"]   # newest synced weights
+                    versions[k] = shared["trained"]
+
+                def publish(b, k=k):
+                    with cv:
+                        batches[k] = b
+                with rt.permit("rollout", f"{job.job_id}:roll"):
+                    job.rollout_stream(
+                        params, k,
+                        on_group=lambda g, k=k: pool.submit(reward_task,
+                                                            k, g),
+                        on_batch=publish)
+        except BaseException as e:
+            fail(e)
+
+    roll_thread = threading.Thread(target=roll_loop,
+                                   name=f"{job.job_id}-rollout")
+    try:
+        roll_thread.start()
+        for k in range(steps):
+            recs: list[dict] = []
+            consumed = 0
+            pending_gouts: list[dict] = []
+            pending_rewards: list[np.ndarray] = []
+            want = micro_groups if micro_groups is not None else n_groups
+            while consumed < n_groups:
+                with cv:
+                    while not rewarded.get(k) and shared["err"] is None:
+                        cv.wait()
+                    if shared["err"] is not None:
+                        raise shared["err"]
+                    take, rewarded[k] = rewarded[k], []
+                for gout, r in take:
+                    pending_gouts.append(gout)
+                    pending_rewards.append(r)
+                consumed += len(take)
+                while (len(pending_gouts) >= want
+                       or (consumed == n_groups and pending_gouts)):
+                    m = min(want, len(pending_gouts))
+                    gouts, rs = pending_gouts[:m], pending_rewards[:m]
+                    del pending_gouts[:m], pending_rewards[:m]
+                    if micro_groups is None:
+                        # full batch: restore row order for bit-exactness
+                        order = np.argsort([g["group_index"]
+                                            for g in gouts])
+                        gouts = [gouts[i] for i in order]
+                        rs = [rs[i] for i in order]
+                    b = batches[k]
+                    out = _assemble_out(b, gouts, job.group)
+                    rewards = np.concatenate(rs).astype(np.float32)
+                    # advantages normalize within each GRPO group, so the
+                    # micro-batch step computes exactly what the full-
+                    # batch path would on the same rows
+                    with rt.permit("train", f"{job.job_id}:train"):
+                        state, rec = job.train_phase(state, b, out,
+                                                     rewards=rewards)
+                    recs.append(rec)
+                    with cv:
+                        shared["params"] = state["params"]  # weight sync
+                        cv.notify_all()
+            with cv:
+                shared["trained"] = k + 1
+                cv.notify_all()
+                rewarded.pop(k, None)
+                batches.pop(k, None)
+            rec = {"step": k, **_merge_recs(recs),
+                   "rollout_staleness": k - versions[k],
+                   "micro_steps": len(recs)}
+            history.append(rec)
+            _log(rec, log_every)
+    except BaseException:
+        fail(RuntimeError("train loop aborted"))
+        raise
+    finally:
+        roll_thread.join()
+        pool.shutdown(wait=True)
+    return state, history, _report("stream", rt,
+                                   time.perf_counter() - t0)

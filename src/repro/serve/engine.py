@@ -123,10 +123,18 @@ class EngineStats:
     prefix_hits: int = 0              # admits that skipped prefill entirely
     prefix_partial_hits: int = 0      # admits that shared blocks but prefilled
     blocks_saved: int = 0             # KV blocks pinned instead of allocated
+    decode_time_s: float = 0.0        # wall time inside decode dispatch+sync
 
     @property
     def slot_utilization(self) -> float:
         return self.recorded_tokens / max(self.slot_steps, 1)
+
+    @property
+    def time_per_token(self) -> float:
+        """Measured service time of one decode step (all live slots decode
+        one token each in that time) — the engine-side estimate SLO
+        admission consumes (``SchedulerPolicy.observe_step``)."""
+        return self.decode_time_s / max(self.steps, 1)
 
 
 @functools.lru_cache(maxsize=32)
@@ -407,6 +415,7 @@ class Engine:
         self._host_index = [0] * N    # per-slot sequence position (host view)
         self._active: dict[int, tuple[Request, RequestOutput]] = {}
         self.finished: dict[int, RequestOutput] = {}
+        self._unharvested: list[RequestOutput] = []
         self.stats = EngineStats()
         self.clock = None             # optional wall-clock for trace drivers
 
@@ -623,9 +632,21 @@ class Engine:
         if self.clock is not None:
             out.finish_time = self.clock()
         self.finished[req.rid] = out
+        self._unharvested.append(out)
         del self._active[slot]
         self.slots.release(slot)
-        self.policy.observe_finish(out)     # SLO policies refine estimates
+        self.policy.observe_finish(out)     # fallback service-time estimate
+
+    def harvest(self) -> list[RequestOutput]:
+        """Pop the requests that finished since the last harvest, *without*
+        draining the engine: queued and live requests keep decoding.  This
+        is the partial-harvest contract the streaming mux uses to hand
+        completed GRPO prompt groups to reward verification while the
+        engine is still serving the stragglers.  Outputs also stay in
+        :attr:`finished`, so batch drivers that collect everything at the
+        end are unaffected."""
+        out, self._unharvested = self._unharvested, []
+        return out
 
     def step(self) -> int:
         """One scheduler iteration: admit waiting requests, then run
@@ -652,6 +673,7 @@ class Engine:
             self._rng, sub = jax.random.split(self._rng)
             keys = jax.random.split(sub, self.config.block_size)
         K = self.config.block_size
+        t_decode = time.perf_counter()
         if self.paged:
             # materialize blocks this decode block will write into
             # (allocation stays within each request's admit-time reservation)
@@ -673,6 +695,13 @@ class Engine:
             self._host_index[slot] += K
         toks, logps, recs, alive, remaining = jax.device_get(
             (*out, self._alive, self._remaining))
+        t_decode = time.perf_counter() - t_decode
+        self.stats.decode_time_s += t_decode
+        # engine-measured service time straight into the admission policy:
+        # K decode steps just took t_decode (every live slot advanced one
+        # token per step), so SLO deadline estimates track the hardware
+        # actually serving — no finish-time heuristics involved
+        self.policy.observe_step(t_decode, K)
         self.stats.steps += K
         self.stats.blocks += 1
         self.stats.slot_steps += K * self.config.num_slots
@@ -727,6 +756,7 @@ class Engine:
             # new weights invalidate every cached prefill (logits + KV)
             self.radix.flush()
         self.finished.clear()
+        self._unharvested.clear()
 
     def export_state(self) -> dict:
         """Checkpoint the live serving state mid-flight (drain of live
@@ -763,6 +793,7 @@ class Engine:
             "active": dict(self._active),
             "queue": list(self.queue._q),
             "finished": dict(self.finished),
+            "unharvested_rids": [o.rid for o in self._unharvested],
             "stats": self.stats,
             "slots": slots,
         })
@@ -802,6 +833,9 @@ class Engine:
         self.queue._q.clear()
         self.queue._q.extend(host["queue"])
         self.finished = dict(host["finished"])
+        self._unharvested = [self.finished[r]
+                             for r in host.get("unharvested_rids", ())
+                             if r in self.finished]
         self.stats = host["stats"]
         sl = host["slots"]
         self.slots.owner = list(sl["owner"])

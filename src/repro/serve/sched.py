@@ -64,8 +64,16 @@ class SchedulerPolicy:
         raise NotImplementedError
 
     def observe_finish(self, out) -> None:
-        """Optional hook: a request finished (SLO policies refine their
-        service-time estimate from it)."""
+        """Optional hook: a request finished (SLO policies fall back to
+        refining their service-time estimate from it when no step
+        measurements have been seen)."""
+
+    def observe_step(self, service_s: float, tokens: int) -> None:
+        """Optional hook the engine calls after every decode dispatch:
+        ``tokens`` decode steps (one token per live slot each) took
+        ``service_s`` of wall time, measured around the device call.  SLO
+        policies feed this straight into their per-token estimate — the
+        engine's own ``step()`` accounting, not a finish-time heuristic."""
 
 
 class FIFOPolicy(SchedulerPolicy):
@@ -174,9 +182,17 @@ class SLOPolicy(DeadlinePolicy):
     iteration time at most ``slowdown`` x solo).  A request without an
     explicit deadline gets ``arrival + slowdown * est_solo_latency``, with
     ``est_solo_latency = time_per_token * max_new_tokens`` (decode
-    dominates rollout serving; ``observe_finish`` refines the per-token
-    estimate online from finished requests via an EMA so the contract
-    tracks the hardware actually serving).
+    dominates rollout serving).
+
+    The per-token estimate comes from the engine's own ``step()``
+    accounting: every decode dispatch reports its measured service time
+    via :meth:`observe_step` and the estimate tracks it directly (light
+    EMA to smooth scheduler-tick jitter; the first sample — which carries
+    jit compilation — only seeds it).  ``observe_finish`` remains as a
+    fallback for drivers that never run a real engine (policy unit tests,
+    simulators): it refines from finished requests, but only until the
+    first step measurement arrives — engine-measured service time always
+    wins over the finish-interval heuristic.
     """
 
     name = "slo"
@@ -191,6 +207,7 @@ class SLOPolicy(DeadlinePolicy):
         self.slowdown = slowdown
         self.time_per_token = time_per_token
         self.ema = ema
+        self._step_samples = 0      # engine step() measurements consumed
 
     @classmethod
     def from_contract(cls, contract: Mapping[str, float], job_id: str,
@@ -205,7 +222,36 @@ class SLOPolicy(DeadlinePolicy):
         est_solo = self.time_per_token * req.max_new_tokens
         return req.arrival_time + self.slowdown * est_solo
 
+    def observe_step(self, service_s: float, tokens: int) -> None:
+        # The engine's own decode accounting: ``tokens`` decode steps took
+        # ``service_s`` measured around the device dispatch + host sync.
+        # The very first sample per engine shape carries jit compilation
+        # and is discarded; the next one initializes the estimate directly
+        # and later samples converge fast (EMA over steps, not finishes —
+        # every tick contributes, so the estimate tracks load changes
+        # within one batch of requests).
+        if tokens < 1 or service_s < 0:
+            return
+        self._step_samples += 1
+        if self._step_samples == 1:
+            return                      # compile-contaminated; discard
+        per_tok = service_s / tokens
+        if self._step_samples == 2:
+            self.time_per_token = per_tok
+        else:
+            a = max(self.ema, 0.3)      # steps are plentiful; track fast
+            self.time_per_token = ((1 - a) * self.time_per_token
+                                   + a * per_tok)
+
     def observe_finish(self, out) -> None:
+        # Fallback only: once the engine has consumed a real step()
+        # measurement (sample 2+ — sample 1 is discarded as compile
+        # noise, so it must not retire the fallback alone), the
+        # finish-interval heuristic is dropped — it under-measures
+        # whenever a request's budget fits one fused decode block and it
+        # never sees prefill-era service time at all.
+        if self._step_samples > 1:
+            return
         # Refine from *service* time (first token -> finish), never total
         # latency: latency includes queueing delay, and folding that into
         # the estimate would loosen deadlines exactly under the contention

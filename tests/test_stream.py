@@ -1,0 +1,376 @@
+"""Streaming phase mux (``rl.stream`` / ``--mux stream``) equivalence and
+contract suite.
+
+The load-bearing guarantees:
+
+  * ``stream`` with ``max_staleness=0``, instant rewards and the default
+    full-batch trainer is *bit-exact* to ``pipeline(max_staleness=0)`` —
+    and therefore to the sequential path: same per-step losses, same
+    final params/optimizer state.  Streaming changes when things run,
+    never what is computed.
+  * the group-streaming rollout (``generate_continuous_stream``) yields
+    every GRPO prompt group exactly once, with arrays that reassemble to
+    ``generate_continuous``'s output bit for bit.
+  * reward-pool permit interleaving never violates group isolation: each
+    verifier call sees exactly one group's rows, whatever order groups
+    finish or workers run in.
+  * staleness > 1 is honoured (realized lag bounded by the guard) and
+    every history record carries the clipped importance-ratio
+    diagnostics next to it.
+  * the third ("reward") permit pool is measured: timelines, PhaseProfile
+    ``reward_s`` durations, and the simulator's reward phase consume it.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.job import RLJob
+from repro.core.phase_control import PhaseProfile
+from repro.core.simulator import simulate_profiles
+from repro.models import build_model
+from repro.rl.coexec import GRPOJob, run_pipelined, run_sequential
+from repro.rl.rewards import (CompositeReward, ExternalVerifier,
+                              format_reward, length_penalty_reward,
+                              make_reward)
+from repro.rl.rollout import (SamplerConfig, generate_continuous,
+                              generate_continuous_stream)
+from repro.rl.stream import run_streaming
+
+_MODELS = {}
+
+
+def get_model(arch="internlm2-1.8b"):
+    if arch not in _MODELS:
+        _MODELS[arch] = build_model(arch, reduced=True)
+    return _MODELS[arch]
+
+
+def toy_reward(completions, mask, answers):
+    """Deterministic reward with intra-group variance (random-init models
+    rarely earn the arithmetic reward, which would zero all advantages)."""
+    c = np.asarray(completions, np.int64)
+    m = np.asarray(mask)
+    return ((c * m).sum(axis=1) % 5).astype(np.float32)
+
+
+KW = dict(steps=3, batch=2, group=2, max_new=4, temperature=1.0)
+
+
+def make_job(jid="job0", seed=0, **over):
+    kw = {**KW, **over}
+    reward_fn = kw.pop("reward_fn", toy_reward)
+    return GRPOJob(jid, model=get_model(), seed=seed, reward_fn=reward_fn,
+                   **kw)
+
+
+def losses(history):
+    return [r["loss"] for r in history]
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: streaming changes the schedule, not the math
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rollout", ["static", "engine"])
+def test_stream_sync_instant_rewards_bit_exact_to_pipeline(rollout):
+    s_pipe, h_pipe, _ = run_pipelined(make_job(rollout=rollout),
+                                      max_staleness=0)
+    s_str, h_str, r_str = run_streaming(make_job(rollout=rollout),
+                                        max_staleness=0)
+    assert losses(h_pipe) == losses(h_str)
+    assert [r["reward"] for r in h_pipe] == [r["reward"] for r in h_str]
+    assert all(r["rollout_staleness"] == 0 for r in h_str)
+    assert_trees_equal(s_pipe["params"], s_str["params"])
+    assert_trees_equal(s_pipe["opt"], s_str["opt"])
+    # ... and the sequential path closes the triangle
+    s_off, h_off, _ = run_sequential(make_job(rollout=rollout))
+    assert losses(h_off) == losses(h_str)
+    assert_trees_equal(s_off["params"], s_str["params"])
+    # the reward pool really ran: one permit per group per iteration
+    assert len(r_str.timelines["reward"]) == KW["steps"] * KW["batch"]
+
+
+def test_stream_slow_jittered_rewards_same_math():
+    """Latency and permit interleaving must not leak into the numbers:
+    a slow, jittered external verifier produces the same losses as the
+    instant path (the verifier wraps the same row-wise reward)."""
+    slow = ExternalVerifier(toy_reward, latency_s=0.02, jitter=0.5, seed=3)
+    s_ref, h_ref, _ = run_streaming(make_job(rollout="engine"),
+                                    max_staleness=0)
+    s_slow, h_slow, rep = run_streaming(
+        make_job(rollout="engine", reward_fn=slow), max_staleness=0,
+        reward_workers=3)
+    assert losses(h_ref) == losses(h_slow)
+    assert_trees_equal(s_ref["params"], s_slow["params"])
+    assert slow.calls == KW["steps"] * KW["batch"]
+    # verification time really landed on the third pool
+    prof = rep.profiles["job0"]
+    assert len(prof.reward_s) == KW["steps"] * KW["batch"]
+    assert rep.total_reward_s >= 0.02 * slow.calls * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Group streaming: incremental yield reassembles the batch output
+# ---------------------------------------------------------------------------
+def test_generate_continuous_stream_matches_batch_executor():
+    model = get_model()
+    params = model.init(jax.random.PRNGKey(0))
+    sampler = SamplerConfig(max_new_tokens=6, temperature=0.0)
+    rng = jax.random.PRNGKey(1)
+    # varying prompts => varying EOS timing => completion order != rid order
+    from repro.data import ArithmeticTask
+    b = ArithmeticTask(seed=5).sample_batch(3)
+    prompts = np.repeat(b.prompts, 2, axis=0)           # 3 groups of 2
+    ref = generate_continuous(model, params, prompts, rng, sampler,
+                              num_slots=2)
+    gouts = list(generate_continuous_stream(model, params, prompts, rng,
+                                            sampler, group=2, num_slots=2))
+    assert sorted(g["group_index"] for g in gouts) == [0, 1, 2]
+    B, T = ref["completions"].shape
+    comp = np.zeros((B, T), np.int32)
+    logp = np.zeros((B, T), np.float32)
+    mask = np.zeros((B, T), np.float32)
+    for g in gouts:
+        comp[g["rows"]] = g["completions"]
+        logp[g["rows"]] = g["behavior_logp"]
+        mask[g["rows"]] = g["mask"]
+    np.testing.assert_array_equal(comp, np.asarray(ref["completions"]))
+    np.testing.assert_array_equal(logp, np.asarray(ref["behavior_logp"]))
+    np.testing.assert_array_equal(mask, np.asarray(ref["mask"]))
+
+
+def test_engine_harvest_is_incremental_and_non_draining():
+    from repro.data import tokenizer as tok
+    from repro.serve import Engine, EngineConfig, Request
+
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=24,
+                                         temperature=0.0))
+    prompt = np.asarray(tok.encode("5+5=", bos=True), np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8))
+    seen = []
+    while not eng.idle:
+        eng.step()
+        seen.extend(o.rid for o in eng.harvest())
+    assert seen == [0, 1]                   # short request harvested first,
+    #                                         while rid 1 was still decoding
+    assert sorted(eng.finished) == [0, 1]   # finished stays for batch users
+    assert eng.harvest() == []              # nothing new since last harvest
+
+
+# ---------------------------------------------------------------------------
+# Reward pool: permit interleaving never violates group isolation
+# ---------------------------------------------------------------------------
+def test_reward_pool_group_isolation_under_interleaving():
+    calls = []
+    lock = threading.Lock()
+
+    def recording_reward(completions, mask, answers):
+        with lock:
+            calls.append((np.asarray(completions).copy(), list(answers)))
+        return toy_reward(completions, mask, answers)
+
+    jittered = ExternalVerifier(recording_reward, latency_s=0.01,
+                                jitter=0.9, seed=7)
+    job = make_job(rollout="engine", batch=3, reward_fn=jittered)
+    # forced sync so the sequential run below sees the same completions;
+    # the jittered latencies still interleave the three reward workers
+    _, hist, _ = run_streaming(job, max_staleness=0, reward_workers=3)
+    assert len(calls) == KW["steps"] * 3
+    g = KW["group"]
+    for comp, answers in calls:
+        # exactly one group's rows per verifier call...
+        assert comp.shape[0] == g
+        # ...all duplicating the same prompt's answer
+        assert len(set(answers)) == 1
+    # and the recorded rewards match an isolated sequential run
+    job2 = make_job(rollout="engine", batch=3)
+    _, hist2, _ = run_sequential(job2)
+    assert [r["reward"] for r in hist] == [r["reward"] for r in hist2]
+
+
+# ---------------------------------------------------------------------------
+# Staleness > 1 + importance-ratio diagnostics
+# ---------------------------------------------------------------------------
+def test_stream_staleness_guard_bounds_lag_and_records_diagnostics():
+    _, hist, _ = run_streaming(make_job(steps=6, rollout="engine"),
+                               max_staleness=2)
+    stale = [r["rollout_staleness"] for r in hist]
+    assert all(0 <= s <= 2 for s in stale)
+    for rec in hist:
+        for key in ("clip_frac", "ratio_mean", "ratio_max", "micro_steps"):
+            assert key in rec
+        assert np.isfinite(rec["loss"])
+        assert np.isfinite(rec["ratio_mean"])
+        assert rec["ratio_max"] >= 0.0
+        assert 0.0 <= rec["clip_frac"] <= 1.0
+
+
+def test_stream_micro_batched_trainer_steps_per_group():
+    job = make_job(rollout="engine", batch=4)
+    _, hist, _ = run_streaming(job, max_staleness=1, micro_groups=2)
+    assert all(r["micro_steps"] == 2 for r in hist)     # 4 groups / 2
+    assert all(np.isfinite(r["loss"]) for r in hist)
+
+
+# ---------------------------------------------------------------------------
+# Third pool in PhaseProfile and the simulator
+# ---------------------------------------------------------------------------
+def test_phase_profile_reward_pool_flows_to_simulator():
+    _, _, rep = run_streaming(make_job(rollout="engine",
+                                       reward_fn=ExternalVerifier(
+                                           toy_reward, latency_s=0.01)),
+                              max_staleness=1)
+    prof = rep.profiles["job0"]
+    assert prof.t_reward > 0
+    job = prof.to_job()
+    assert job.t_reward == prof.t_reward
+    assert job.t_solo == pytest.approx(job.t_roll + job.t_reward
+                                       + job.t_train)
+    res = simulate_profiles([prof])
+    assert res.iter_time["job0"] > 0
+    # a second, reward-free profile must keep simulating exactly as before
+    p2 = PhaseProfile("p2", (1.0, 1.0), (0.5, 0.5))
+    assert p2.to_job().t_reward == 0.0
+
+
+def test_phase_profile_aggregates_multi_permit_phases_per_iteration():
+    """The streaming executor takes one reward permit per group and one
+    train permit per micro-step; the profile's worst-case durations must
+    report the heaviest *iteration's* total, not the longest single
+    permit — otherwise conservative admission under-reserves the pool."""
+    # 2 iterations, 2 reward permits each: iteration totals 0.3 and 0.7
+    p = PhaseProfile("j", rollout_s=(1.0, 1.0), train_s=(0.5, 0.5),
+                     reward_s=(0.1, 0.2, 0.3, 0.4))
+    assert p.iterations == 2
+    assert p.t_reward == pytest.approx(0.7)
+    assert p.to_job().t_reward == pytest.approx(0.7)
+    # micro-batched training: 2 train permits per iteration
+    pm = PhaseProfile("j", rollout_s=(1.0, 1.0),
+                      train_s=(0.2, 0.3, 0.4, 0.1))
+    assert pm.t_train == pytest.approx(0.5)
+    # one permit per iteration keeps the old max-permit semantics
+    p1 = PhaseProfile("j", rollout_s=(1.0, 2.0), train_s=(0.5, 0.8))
+    assert p1.t_train == pytest.approx(0.8)
+    assert p1.t_roll == pytest.approx(2.0)
+
+
+def test_simulator_reward_phase_serializes_solo_job():
+    """With one job and reward modeled, the strict round-robin iteration
+    is the serial sum of the three phases (no co-member to overlap)."""
+    from repro.core.group import CoExecutionGroup, Placement
+    from repro.core.cluster import H20, Node
+
+    g = CoExecutionGroup("g", [Node("r0", H20)], [Node("t0", H20)])
+    g.add_job(RLJob("j", t_roll=2.0, t_train=1.0, t_reward=0.5),
+              Placement(("r0",)))
+    res = g.simulate(n_cycles=8, discard=2)
+    assert res.iter_time["j"] == pytest.approx(3.5, rel=1e-6)
+    # two jobs: reward pool overlaps with the other job's phases
+    g.add_job(RLJob("j2", t_roll=2.0, t_train=1.0, t_reward=0.5),
+              Placement(("r0",)))
+    res2 = g.simulate(n_cycles=10, discard=2, work_conserving=True)
+    assert set(res2.iter_time) == {"j", "j2"}
+
+
+# ---------------------------------------------------------------------------
+# Verifier zoo
+# ---------------------------------------------------------------------------
+def test_reward_verifiers_are_row_wise_and_sane():
+    from repro.data import tokenizer as tok
+
+    texts = ["12", "-7", "12x", ""]
+    T = 6
+    comp = np.full((4, T), tok.EOS, np.int32)
+    mask = np.zeros((4, T), np.float32)
+    for i, t in enumerate(texts):
+        ids = tok.encode(t)
+        comp[i, :len(ids)] = ids
+        # engine semantics: the EOS that stops the row is still recorded
+        mask[i, :min(len(ids) + 1, T)] = 1.0
+    answers = ["12", "0", "12", "3"]
+    fmt = format_reward(comp, mask, answers)
+    assert fmt.tolist() == [1.0, 1.0, 0.0, 0.0]
+    lp = length_penalty_reward(comp, mask, answers, target_tokens=1,
+                               penalty_per_token=0.2)
+    assert lp.shape == (4,)
+    assert lp[0] <= 1.0                     # penalty applied beyond target
+    comp_r = CompositeReward([(format_reward, 0.5)])(comp, mask, answers)
+    np.testing.assert_allclose(comp_r, 0.5 * fmt)
+    # row-wise contract: per-group slices concatenate to the batch result
+    full = length_penalty_reward(comp, mask, answers)
+    split = np.concatenate([
+        length_penalty_reward(comp[:2], mask[:2], answers[:2]),
+        length_penalty_reward(comp[2:], mask[2:], answers[2:])])
+    np.testing.assert_array_equal(full, split)
+
+
+def test_make_reward_factory():
+    fn = make_reward("arith")
+    assert fn.__name__ == "arithmetic_reward"
+    slow = make_reward("format", latency_s=0.01)
+    assert isinstance(slow, ExternalVerifier)
+    with pytest.raises(ValueError):
+        make_reward("nope")
+
+
+# ---------------------------------------------------------------------------
+# Engine-measured service time feeds SLO estimates (bugfix satellite)
+# ---------------------------------------------------------------------------
+def test_slo_estimate_fed_by_engine_step_accounting():
+    from repro.data import tokenizer as tok
+    from repro.serve import Engine, EngineConfig, Request
+    from repro.serve.sched import SLOPolicy
+
+    m = get_model()
+    params = m.init(jax.random.PRNGKey(0))
+    policy = SLOPolicy(slowdown=2.0, time_per_token=123.0)  # absurd prior
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=24,
+                                         temperature=0.0), policy=policy)
+    prompt = np.asarray(tok.encode("5+5=", bos=True), np.int32)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=6))
+    eng.run()
+    # the estimate now comes from measured decode service time, not the
+    # absurd prior and not the finish-interval EMA
+    assert policy._step_samples >= 2
+    assert policy.time_per_token < 123.0
+    assert policy.time_per_token == pytest.approx(
+        eng.stats.time_per_token, rel=5.0)  # same order of magnitude
+    # finish-heuristic refinement is retired once step measurements exist
+    before = policy.time_per_token
+    out = eng.finished[0]
+    out.first_token_time, out.finish_time = 1.0, 500.0
+    policy.observe_finish(out)
+    assert policy.time_per_token == before
+    assert eng.stats.decode_time_s > 0
+
+
+def test_slo_finish_fallback_survives_single_discarded_step_sample():
+    """The first step sample is discarded as compile noise; with exactly
+    one dispatch ever seen, the finish-interval fallback must still
+    refine the estimate (a lone discarded sample must not retire it)."""
+    from repro.serve.request import RequestOutput
+    from repro.serve.sched import SLOPolicy
+
+    policy = SLOPolicy(slowdown=2.0, time_per_token=10.0)
+    policy.observe_step(99.0, 4)        # compile-contaminated, discarded
+    assert policy.time_per_token == 10.0
+    out = RequestOutput(rid=0, prompt=np.zeros(2, np.int32),
+                        tokens=[1, 2, 3], logprobs=[0.0] * 3)
+    out.first_token_time, out.finish_time = 1.0, 1.2
+    policy.observe_finish(out)
+    assert policy.time_per_token < 10.0     # fallback still active
+    policy.observe_step(0.4, 4)             # real sample: direct estimate
+    assert policy.time_per_token == pytest.approx(0.1)
+    before = policy.time_per_token
+    policy.observe_finish(out)              # now retired
+    assert policy.time_per_token == before
