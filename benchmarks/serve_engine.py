@@ -60,7 +60,8 @@ from repro.core.distributions import sample_response_fractions
 from repro.data import tokenizer as tok
 from repro.models import build_model
 from repro.rl import SamplerConfig, generate
-from repro.serve import Engine, EngineConfig, Request, blocks_for, run_trace
+from repro.serve import (DisaggConfig, DisaggRouter, Engine, EngineConfig,
+                         Request, blocks_for, run_trace)
 
 PROMPT_BUCKETS = (8, 16)
 NO_EOS = -1           # lengths come from budgets; see module docstring
@@ -299,6 +300,105 @@ def run_prefix_scenario(model, params, rng, *, n_groups: int, group: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# Scenario: disaggregated prefill/decode router, pool-ratio sweep
+# ---------------------------------------------------------------------------
+def run_disagg_scenario(model, params, rng, *, n: int, rate: float,
+                        cap: int, slots: int, block_size: int,
+                        kv_block_size: int):
+    """The same trace through a monolithic paged engine and through the
+    prefill/decode router at *equal total pools*: every split keeps
+    ``prefill_slots + decode_slots == slots`` and splits the block pool in
+    the same proportion, so any throughput difference is pure routing +
+    KV-handle transfer cost, and the ratio sweep shows the independent
+    pool-sizing knob doing its job (decode-heavy splits win this decode-
+    dominated trace).  Deadlines are self-calibrated from the monolithic
+    run so attainment is comparable across runners.  Tracked:
+    ``tok_per_s_ratio_vs_monolithic`` (the CI floor: disaggregation must
+    keep >= 0.9x monolithic throughput at equal resources) and
+    ``transfer_efficiency`` (1 - transfer-time share of serving time).
+    """
+    reqs = make_trace(rng, n, rate, cap)
+    max_len = max(PROMPT_BUCKETS) + cap
+    total_blocks = slots * blocks_for(max_len, kv_block_size)
+    prompt_blocks = blocks_for(max(PROMPT_BUCKETS), kv_block_size)
+
+    def mono():
+        return Engine(model, params, EngineConfig(
+            num_slots=slots, max_seq_len=max_len, temperature=0.0,
+            eos_id=NO_EOS, block_size=block_size, kv_layout="paged",
+            kv_block_size=kv_block_size, num_kv_blocks=total_blocks))
+
+    def router(pf_slots: int):
+        # split the block pool in slot proportion, but keep each side
+        # large enough to make progress: prefill holds a whole prompt
+        # (plus one pinned handle), decode a whole worst-case request
+        pf_blocks = max(round(total_blocks * pf_slots / slots),
+                        2 * prompt_blocks)
+        pf_blocks = min(pf_blocks,
+                        total_blocks - blocks_for(max_len, kv_block_size))
+        return DisaggRouter(model, params, DisaggConfig(
+            prefill_slots=pf_slots, decode_slots=slots - pf_slots,
+            max_seq_len=max_len, temperature=0.0, eos_id=NO_EOS,
+            block_size=block_size, kv_layout="paged",
+            kv_block_size=kv_block_size, prefill_kv_blocks=pf_blocks,
+            decode_kv_blocks=total_blocks - pf_blocks))
+
+    ratios = sorted({1, slots // 2, slots - 1})
+    # calibrate deadlines off the monolithic engine (also its warmup)
+    calib = run_trace(mono(), [Request(rid=r.rid, prompt=r.prompt,
+                                       max_new_tokens=r.max_new_tokens,
+                                       arrival_time=r.arrival_time)
+                               for r in reqs])
+    per_tok = slots / max(calib["tok_per_s"], 1e-9)
+    for r in reqs:
+        r.deadline = (r.arrival_time
+                      + 6.0 * per_tok * (r.max_new_tokens + r.prompt_len))
+    for pf in ratios:                      # warmup: each decode-pool shape
+        warm = router(pf)
+        for b in PROMPT_BUCKETS:
+            warm.submit(Request(rid=-b, prompt=np.full(b, tok.PAD, np.int32),
+                                max_new_tokens=1))
+        warm.run()
+
+    mono_res = run_trace(mono(), reqs)
+    out = {"config": {"n": n, "slots": slots, "total_kv_blocks": total_blocks,
+                      "kv_block_size": kv_block_size, "ratios": ratios},
+           "monolithic": {
+               "tok_per_s": mono_res["tok_per_s"],
+               "ttft_mean_s": mono_res["ttft_mean_s"],
+               "latency_p95_s": mono_res["latency_p95_s"],
+               "deadline_attainment": mono_res.get("deadline_attainment",
+                                                   1.0)},
+           "splits": []}
+    best = None
+    for pf in ratios:
+        rt = router(pf)
+        res = run_trace(rt, reqs)
+        split = {
+            "ratio": f"{pf}:{slots - pf}",
+            "prefill_slots": pf, "decode_slots": slots - pf,
+            "prefill_kv_blocks": rt.prefill.slots.alloc.num_blocks,
+            "decode_kv_blocks": rt.decode.slots.alloc.num_blocks,
+            "tok_per_s": res["tok_per_s"],
+            "ttft_mean_s": res["ttft_mean_s"],
+            "latency_p95_s": res["latency_p95_s"],
+            "deadline_attainment": res.get("deadline_attainment", 1.0),
+            "transfers": rt.stats.transfers,
+            "transfer_time_s": rt.stats.transfer_time_s,
+            "transfer_overhead_frac": rt.stats.transfer_overhead_frac,
+            "peak_kv_blocks_decode": res["peak_kv_blocks"],
+        }
+        out["splits"].append(split)
+        if best is None or split["tok_per_s"] > best["tok_per_s"]:
+            best = split
+    out["best_ratio"] = best["ratio"]
+    out["tok_per_s_ratio_vs_monolithic"] = (
+        best["tok_per_s"] / max(mono_res["tok_per_s"], 1e-9))
+    out["transfer_efficiency"] = 1.0 - best["transfer_overhead_frac"]
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -416,6 +516,13 @@ def main():
             model, params, np.random.default_rng(args.seed + 2),
             n_groups=max(args.n_requests // 4, 4), group=4, rate=args.rate,
             block_size=max(args.kv_block_size // 2, 4))
+    dis_res = None
+    if has_paged_kv:
+        dis_res = run_disagg_scenario(
+            model, params, np.random.default_rng(args.seed + 3),
+            n=args.n_requests, rate=args.rate, cap=args.max_new,
+            slots=args.slots, block_size=args.block_size,
+            kv_block_size=args.kv_block_size)
 
     speedup = eng_res["tok_per_s"] / max(sta_res["tok_per_s"], 1e-9)
     print(f"# {args.arch}: {args.n_requests} reqs, {args.slots} slots, "
@@ -456,6 +563,14 @@ def main():
               f"({pfx_res['blocks_saved_ratio']:.0%} of prompt-block "
               f"traffic), {pfx_res['shared']['prefix']['hits']} prefills "
               f"skipped")
+    if dis_res is not None:
+        print(f"disagg at equal total pools: best split "
+              f"{dis_res['best_ratio']} = "
+              f"{dis_res['tok_per_s_ratio_vs_monolithic']:.2f}x monolithic "
+              f"tok/s, transfer efficiency "
+              f"{dis_res['transfer_efficiency']:.0%} | per-ratio tok/s: "
+              + ", ".join(f"{s['ratio']}={s['tok_per_s']:.0f}"
+                          for s in dis_res["splits"]))
 
     if args.json:
         report = {
@@ -482,6 +597,8 @@ def main():
         report["priority"] = pri_res
         if pfx_res is not None:
             report["prefix"] = pfx_res
+        if dis_res is not None:
+            report["disagg"] = dis_res
         path = os.path.abspath(args.json)
         with open(path, "w") as f:
             json.dump(report, f, indent=2)

@@ -84,11 +84,24 @@ class PhaseProfile:
     # for executors that verify inline on the critical path; the streaming
     # mux (``rl.stream``) populates it with per-group verifier times.
     reward_s: tuple[float, ...] = ()
+    # KV transfer durations (disaggregated prefill->decode hand-over,
+    # ``serve.router.DisaggRouter`` under a runtime): empty for monolithic
+    # engines.  Transfers sit on the rollout critical path — a handle must
+    # be adopted before its decode starts — so ``to_job`` folds the
+    # worst-case transfer load into ``t_roll``.
+    transfer_s: tuple[float, ...] = ()
 
     @property
     def t_roll(self) -> float:
         """Worst-case (admission-bound) rollout duration."""
         return max(self.rollout_s, default=0.0)
+
+    @property
+    def t_transfer(self) -> float:
+        """Worst per-iteration KV-transfer total (many permits per
+        iteration — one per adopted handle — hence the chunked max, same
+        accounting as reward/train)."""
+        return self._worst_iteration_total(self.transfer_s)
 
     def _worst_iteration_total(self, xs: tuple[float, ...]) -> float:
         """Worst per-*iteration* total of a phase that may take several
@@ -142,7 +155,8 @@ class PhaseProfile:
         if self.rollout_s and self.train_s:
             lo = min(min(self.rollout_s) / max(self.t_roll, 1e-9),
                      min(self.train_s) / max(self.t_train, 1e-9))
-        kw = dict(job_id=self.job_id, t_roll=self.t_roll,
+        kw = dict(job_id=self.job_id,
+                  t_roll=self.t_roll + self.t_transfer,
                   t_train=self.t_train, t_reward=self.t_reward,
                   runtime_scale=(min(lo, 1.0), 1.0))
         kw.update(overrides)
@@ -253,19 +267,25 @@ class RollMuxRuntime:
 
     def phase_profiles(self, *, rollout_pool: str = "rollout",
                        train_pool: str = "train",
-                       reward_pool: str = "reward"
+                       reward_pool: str = "reward",
+                       transfer_pool: str = "transfer"
                        ) -> dict[str, PhaseProfile]:
         """Distill the executed pool timelines into per-job
         :class:`PhaseProfile` records (measured durations, in execution
         order).  Timeline entries are tagged ``"job:phase"`` by both
-        :meth:`phase` and :meth:`permit`.  The reward pool is optional —
-        executors that verify inline never create it and the profiles
-        simply carry no reward durations."""
+        :meth:`phase` and :meth:`permit`.  The reward and transfer pools
+        are optional — executors that verify inline / serve monolithically
+        never create them and the profiles simply carry no such
+        durations (the transfer pool is populated by a
+        ``serve.router.DisaggRouter`` given this runtime: each
+        prefill→decode KV hand-over takes a permit there)."""
         roll: dict[str, list[float]] = {}
         train: dict[str, list[float]] = {}
         reward: dict[str, list[float]] = {}
+        transfer: dict[str, list[float]] = {}
         for pool_name, acc in ((rollout_pool, roll), (train_pool, train),
-                               (reward_pool, reward)):
+                               (reward_pool, reward),
+                               (transfer_pool, transfer)):
             p = self.pools.get(pool_name)
             if p is None:
                 continue
@@ -273,5 +293,7 @@ class RollMuxRuntime:
                 acc.setdefault(who.split(":")[0], []).append(t1 - t0)
         return {jid: PhaseProfile(jid, tuple(roll.get(jid, ())),
                                   tuple(train.get(jid, ())),
-                                  tuple(reward.get(jid, ())))
-                for jid in sorted(set(roll) | set(train) | set(reward))}
+                                  tuple(reward.get(jid, ())),
+                                  tuple(transfer.get(jid, ())))
+                for jid in sorted(set(roll) | set(train) | set(reward)
+                                  | set(transfer))}

@@ -71,12 +71,15 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                      num_kv_blocks: int | None = None,
                      sched: str = "fifo", policy=None,
                      prefix_share: bool = False, group: int | None = None,
-                     model=None, params=None):
+                     disagg=None, model=None, params=None):
     """Continuous batching: requests stream through the slot-pool engine
     (``kv="paged"`` serves from the shared block-pool KV layout;
     ``sched`` picks the admission policy and ``prefix_share`` enables
     radix prompt-prefix sharing — with ``group``, every ``group``
-    consecutive prompts are treated as one shared-prefix group)."""
+    consecutive prompts are treated as one shared-prefix group).
+    ``disagg`` routes through split prefill/decode pools instead of one
+    engine — ``True`` or a dict of ``DisaggConfig`` overrides (see
+    ``rl.generate_continuous``); output is identical under greedy."""
     if model is None:
         model = build_model(arch, reduced=reduced)
     key = jax.random.PRNGKey(seed)
@@ -91,19 +94,25 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                               kv_block_size=kv_block_size,
                               num_kv_blocks=num_kv_blocks, sched=sched,
                               policy=policy, prefix_share=prefix_share,
-                              group=group)
+                              group=group, disagg=disagg)
     dt = time.perf_counter() - t0
     n_tok = int(out["mask"].sum())
     stats = out["engine_stats"]
-    return {"texts": completions_to_text(out["completions"], out["mask"]),
-            "wall_s": dt, "tokens": n_tok,
-            "tok_per_s": n_tok / max(dt, 1e-9),
-            "slot_utilization": stats.slot_utilization,
-            "prefills": stats.prefills, "decode_steps": stats.steps,
-            "peak_active": stats.peak_active,
-            "peak_kv_blocks": stats.peak_kv_blocks,
-            "prefix_hits": stats.prefix_hits,
-            "blocks_saved": stats.blocks_saved}
+    report = {"texts": completions_to_text(out["completions"], out["mask"]),
+              "wall_s": dt, "tokens": n_tok,
+              "tok_per_s": n_tok / max(dt, 1e-9),
+              "slot_utilization": stats.slot_utilization,
+              "prefills": stats.prefills, "decode_steps": stats.steps,
+              "peak_active": stats.peak_active,
+              "peak_kv_blocks": stats.peak_kv_blocks,
+              "prefix_hits": stats.prefix_hits,
+              "blocks_saved": stats.blocks_saved}
+    if disagg:
+        report["transfers"] = stats.transfers
+        report["transfer_time_s"] = stats.transfer_time_s
+        report["transferred_blocks"] = stats.transferred_blocks
+        report["transfer_overhead_frac"] = stats.transfer_overhead_frac
+    return report
 
 
 def _main():
@@ -138,9 +147,34 @@ def _main():
                     help="shared-prefix group size for --prefix-share "
                          "(each prompt is duplicated group times, the "
                          "GRPO rollout shape)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: route prompts through a "
+                         "dedicated prefill engine, hand the finished KV "
+                         "over to the decode engine by block-granular "
+                         "transfer handle (output identical under greedy)")
+    ap.add_argument("--prefill-slots", type=int, default=None,
+                    help="prefill-side slot pool (--disagg; default: "
+                         "slots/4, min 1)")
+    ap.add_argument("--decode-slots", type=int, default=None,
+                    help="decode-side slot pool (--disagg; default: "
+                         "slots - prefill slots)")
+    ap.add_argument("--prefill-kv-blocks", type=int, default=None,
+                    help="prefill-side paged pool size (--disagg --kv "
+                         "paged; default: sized to its slot pool)")
+    ap.add_argument("--decode-kv-blocks", type=int, default=None,
+                    help="decode-side paged pool size (--disagg --kv "
+                         "paged; default: --num-kv-blocks)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
+    disagg = None
+    if args.disagg:
+        disagg = {k: v for k, v in
+                  (("prefill_slots", args.prefill_slots),
+                   ("decode_slots", args.decode_slots),
+                   ("prefill_kv_blocks", args.prefill_kv_blocks),
+                   ("decode_kv_blocks", args.decode_kv_blocks))
+                  if v is not None} or True
     prompts = [f"{i}+{i+1}=" for i in range(args.batch)]
     if args.group:
         prompts = [p for p in prompts for _ in range(args.group)]
@@ -152,12 +186,15 @@ def _main():
                                num_kv_blocks=args.num_kv_blocks,
                                sched=args.sched,
                                prefix_share=args.prefix_share,
-                               group=args.group)
+                               group=args.group, disagg=disagg)
         extra = (f", slot util {res['slot_utilization']:.0%}, "
                  f"{res['decode_steps']} decode steps")
         if args.prefix_share:
             extra += (f", {res['prefix_hits']} prefix hits "
                       f"({res['blocks_saved']} blocks saved)")
+        if args.disagg:
+            extra += (f", {res['transfers']} KV transfers "
+                      f"({res['transfer_overhead_frac']:.1%} overhead)")
     else:
         res = serve_batch(args.arch, prompts, max_new=args.max_new)
         extra = ""

@@ -70,17 +70,40 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
 def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
                     frontend, *, num_slots, block_size, kv_layout,
                     kv_block_size, num_kv_blocks, engine, sched, policy,
-                    prefix_share, group, job_id):
+                    prefix_share, group, job_id, disagg=None):
     """Shared engine setup for the batch and streaming rollout executors:
     build a fresh engine (or validate + ``reset`` a persistent one) and
-    turn the prompt rows into the pending request deque."""
+    turn the prompt rows into the pending request deque.  ``disagg``
+    selects the disaggregated prefill/decode router instead of the
+    monolithic engine (see :func:`generate_continuous`)."""
     from collections import deque
 
-    from repro.serve import Engine, EngineConfig, Request
+    from repro.serve import (DisaggConfig, DisaggRouter, Engine,
+                             EngineConfig, Request)
 
     B, Sp = prompts_np.shape
     T = sampler.max_new_tokens
-    if engine is None:
+    if engine is None and disagg:
+        n = B if num_slots is None else num_slots
+        if isinstance(disagg, DisaggConfig):
+            cfg = disagg
+        else:
+            # True -> split the monolithic pool 1:3 prefill:decode; a dict
+            # overrides any DisaggConfig field (pool sizes, max_waiting...)
+            opts = {} if disagg is True else dict(disagg)
+            pf = opts.pop("prefill_slots", max(1, n // 4))
+            cfg = DisaggConfig(
+                prefill_slots=pf,
+                decode_slots=opts.pop("decode_slots", max(1, n - pf)),
+                max_seq_len=Sp + T, eos_id=sampler.eos_id,
+                temperature=sampler.temperature, block_size=block_size,
+                kv_layout=kv_layout, kv_block_size=kv_block_size,
+                decode_kv_blocks=opts.pop("decode_kv_blocks",
+                                          num_kv_blocks),
+                sched=sched, prefix_share=prefix_share, **opts)
+        engine = DisaggRouter(model, params, cfg, rng=rng, policy=policy,
+                              job_id=job_id)
+    elif engine is None:
         engine = Engine(model, params, EngineConfig(
             num_slots=B if num_slots is None else num_slots,
             max_seq_len=Sp + T,
@@ -131,7 +154,7 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         num_kv_blocks: int | None = None, engine=None,
                         sched: str = "fifo", policy=None,
                         prefix_share: bool = False, group: int | None = None,
-                        job_id: str | None = None):
+                        job_id: str | None = None, disagg=None):
     """Rollout-phase executor backed by the continuous-batching engine.
 
     Drop-in alternative to :func:`generate`: same inputs, same output dict
@@ -167,6 +190,16 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     ``prefix_key`` so the group prefills once and its prompt blocks are
     pinned, not copied.  ``job_id`` tags requests for per-job token
     budgets in deadline/SLO policies.
+
+    ``disagg`` serves through disaggregated prefill/decode pools
+    (``repro.serve.router.DisaggRouter``) instead of one monolithic
+    engine — same outputs, bit for bit under greedy decoding.  Pass
+    ``True`` (splits ``num_slots`` 1:3 prefill:decode), a dict of
+    ``DisaggConfig`` overrides (``prefill_slots``, ``decode_slots``,
+    ``prefill_kv_blocks``, ``decode_kv_blocks``, ...), or a full
+    ``DisaggConfig``.  A persistent ``engine`` may itself be a
+    ``DisaggRouter`` — ``reset`` drops un-adopted transfer handles and
+    asserts both pools leak-free.
     """
     import numpy as np
 
@@ -178,7 +211,8 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
         kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
         engine=engine, sched=sched, policy=policy,
-        prefix_share=prefix_share, group=group, job_id=job_id)
+        prefix_share=prefix_share, group=group, job_id=job_id,
+        disagg=disagg)
     # backpressure-aware drive: a full queue (max_waiting) defers
     # submission until the engine drains instead of crashing
     while pending or not engine.idle:
@@ -217,7 +251,7 @@ def generate_continuous_stream(model, params, prompts, rng,
                                num_kv_blocks: int | None = None, engine=None,
                                sched: str = "fifo", policy=None,
                                prefix_share: bool = False,
-                               job_id: str | None = None):
+                               job_id: str | None = None, disagg=None):
     """Streaming rollout executor: yield completed GRPO prompt **groups**
     the moment their last member finishes decoding, while the engine keeps
     serving the stragglers.
@@ -254,7 +288,8 @@ def generate_continuous_stream(model, params, prompts, rng,
         num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
         kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
         engine=engine, sched=sched, policy=policy,
-        prefix_share=prefix_share, group=group, job_id=job_id)
+        prefix_share=prefix_share, group=group, job_id=job_id,
+        disagg=disagg)
     engine.harvest()                    # drop any stale pre-session leftovers
     buckets: dict[int, list] = {}
     sizes = [min(B, (gi + 1) * g) - gi * g for gi in range((B + g - 1) // g)]

@@ -25,10 +25,12 @@ model and exactness guarantees, ``repro.serve.slots`` for the layout
 invariants.
 """
 from repro.serve.blocks import BlockAllocator, blocks_for
+from repro.serve.disagg import KVTransferHandle, PrefillEngine
 from repro.serve.engine import Engine, EngineConfig, EngineStats, run_trace
 from repro.serve.queue import RequestQueue
 from repro.serve.radix import RadixEntry, RadixPrefixIndex
 from repro.serve.request import Request, RequestOutput
+from repro.serve.router import DisaggConfig, DisaggRouter, RouterStats
 from repro.serve.sched import (DeadlinePolicy, FIFOPolicy, SchedulerPolicy,
                                SLOPolicy, make_policy)
 from repro.serve.slots import PagedSlotManager, SlotManager
@@ -37,4 +39,6 @@ __all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
            "EngineStats", "run_trace", "RequestQueue", "Request",
            "RequestOutput", "PagedSlotManager", "SlotManager",
            "RadixEntry", "RadixPrefixIndex", "SchedulerPolicy",
-           "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy"]
+           "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy",
+           "KVTransferHandle", "PrefillEngine", "DisaggConfig",
+           "DisaggRouter", "RouterStats"]

@@ -125,6 +125,22 @@ class BlockAllocator:
         del self.quota[owner]
         self.events.append(("free", owner, None))
 
+    def assert_clean(self, context: str = "") -> None:
+        """Assert the pool is fully returned: every block free, zero
+        dangling refcounts, no outstanding reservations.  This is the
+        leak check engines run after ``reset`` (idle + flushed radix +
+        released transfer handles ⇒ nothing may hold a block) — raising
+        here turns a slow cross-iteration leak into an immediate, located
+        failure."""
+        self.check()
+        if self.refcount or self.quota or self.num_free != self.num_blocks:
+            where = f" after {context}" if context else ""
+            raise RuntimeError(
+                f"KV block leak{where}: {len(self.refcount)} block(s) still "
+                f"referenced {sorted(self.refcount)!r}, outstanding "
+                f"reservations {dict(self.quota)!r}, "
+                f"free {self.num_free}/{self.num_blocks}")
+
     # ---- invariant check (cheap; called by property tests) -----------------
     def check(self) -> None:
         assert 0 not in self.refcount and 0 not in self.free

@@ -1,0 +1,370 @@
+"""Disaggregated prefill: a dedicated prefill engine that hands finished
+prompts to a decode engine as ref-counted KV transfer handles.
+
+The paper's premise is phase disaggregation onto purpose-built pools;
+this module applies it *within* the serving path (the vLLM/SGLang
+production shape): prompt prefill is compute-bound and burst-shaped,
+decode is memory-bandwidth-bound and steady, so each gets its own engine
+with an independently sized slot + block pool.  In-process to start —
+the router (:mod:`repro.serve.router`) moves handles between two pools
+on one device — but the handle protocol is exactly what a multi-host
+split needs: everything the decode side requires travels in the handle.
+
+The zero-copy trick rides the paged layout's ref-counting
+(:class:`~repro.serve.blocks.BlockAllocator`):
+
+* the prefill engine admits a request (admission policy still applies),
+  prefills into a transient slot of its *own* pool, and snapshots the
+  admit state exactly like radix registration does — partial tail block
+  + slot-resident rows + post-prompt logits;
+* the prompt's **full** blocks are then pinned (``incref``) under a
+  :class:`KVTransferHandle` and the donor slot is released immediately —
+  the slot (and the tail block, whose content lives in the snapshot) is
+  recycled for the next prefill while the full blocks stay resident in
+  the prefill pool, un-copied, until the decode engine adopts or drops
+  the handle.  Un-adopted handles are therefore the prefill pool's
+  natural backpressure: admission gates on uncommitted blocks, so a slow
+  decode side throttles prefill by occupancy, not by a side channel;
+* adoption (:meth:`PrefillEngine.export_cache` +
+  ``Engine.admit_prefilled``) gathers the pinned blocks through a padded
+  table row — a permutation copy, the same ``gather_blocks`` decode
+  itself uses — splices the tail snapshot back in, and scatters the
+  result into a fresh slot of the *decode* pool; the handle's pins are
+  then dropped.  Greedy tokens/logprobs are bit-identical to the
+  monolithic engine: every array the decode side starts from is the
+  prefill output moved by pure copies, and the decode computation is the
+  same jitted code.
+
+With ``prefix_share`` the prefill engine keeps a radix index over its
+own pool: the first member of a GRPO group prefills and registers, every
+later member becomes a handle *without any model compute* (exact hits
+only — partial-prefix sharing stays a monolithic-engine feature).  The
+contiguous layout disaggregates too, with the handle carrying the whole
+batch=1 prefill cache (there is no block pool to pin, so "transfer" is
+an array hand-over; slots bound how many un-adopted handles may be
+resident).  Families with no paged leaves (rwkv6) degenerate the same
+way: state rides entirely in the slot-leaf snapshot.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import gather_blocks
+from repro.serve.engine import (EngineConfig, EngineStats, _engine_fns,
+                                _paged_engine_fns)
+from repro.serve.queue import RequestQueue
+from repro.serve.radix import RadixPrefixIndex
+from repro.serve.request import Request
+from repro.serve.sched import make_policy
+from repro.serve.slots import PagedSlotManager
+
+
+class KVTransferHandle:
+    """Everything the decode engine needs to adopt one finished prompt.
+
+    Paged: ``block_ids`` are the prompt's full blocks, resident in the
+    *prefill* pool and pinned (one ``incref`` each) on behalf of this
+    handle; ``tail``/``slot_leaves``/``logits`` are the same device
+    snapshot a radix entry carries.  Contiguous: ``one`` is the whole
+    batch=1 prefill cache and ``block_ids`` is empty.
+
+    :meth:`release` drops the pins exactly once — it is idempotent, so a
+    handle dropped mid-flight (decode side gone, reset, rebalance) can be
+    released by whoever notices without double-decref risk.  The block
+    conservation invariant (``free + live == num_blocks``, no dangling
+    refcounts) must hold again once every handle is released; the prefill
+    engine's ``reset`` asserts it.
+    """
+
+    __slots__ = ("req", "logits", "block_ids", "tail", "slot_leaves",
+                 "one", "source", "prefill_time_s", "from_prefix_hit",
+                 "released")
+
+    def __init__(self, req: Request, logits, block_ids, tail, slot_leaves,
+                 *, source, one=None, prefill_time_s: float = 0.0,
+                 from_prefix_hit: bool = False):
+        self.req = req
+        self.logits = logits
+        self.block_ids = tuple(int(b) for b in block_ids)
+        self.tail = tail
+        self.slot_leaves = slot_leaves
+        self.one = one                      # contiguous: full batch=1 cache
+        self.source = source                # the PrefillEngine holding pins
+        self.prefill_time_s = prefill_time_s
+        self.from_prefix_hit = from_prefix_hit
+        self.released = False
+
+    def release(self) -> None:
+        """Drop this handle's pins in the prefill pool (idempotent)."""
+        if self.released:
+            return
+        self.released = True
+        self.source._release_handle(self)
+        # drop the array refs so the snapshot memory can be collected
+        self.one = None
+        self.tail = {}
+        self.slot_leaves = {}
+
+
+@functools.lru_cache(maxsize=32)
+def _transfer_fns(model, max_seq_len: int, kv_block_size: int):
+    """Jitted handle-adoption gather, shared per serving shape.
+
+    ``fetch`` materializes a batch=1 prefill-shaped cache view from the
+    prefill pool: gather the pinned full blocks through a null-padded
+    table row into a contiguous sequence, then splice the tail snapshot
+    over the first partial block.  Positions beyond the prompt gather
+    whatever the null block holds — junk by design, exactly like a dead
+    slot's writes: decode never reads a position before writing it, so
+    the adopted slot is value-identical to a monolithic prefill
+    everywhere it matters.  Pure copies, no arithmetic — bit-exact.
+    """
+    def fetch_fn(src_leaves, table_row, tails, n_full):
+        out = {}
+        for name, pool in src_leaves.items():
+            # (L, max_blocks * block_size, *rest) contiguous sequence view
+            seq = gather_blocks(pool, table_row, axis=1)
+            if name in tails:
+                seq = jax.lax.dynamic_update_slice_in_dim(
+                    seq, tails[name].astype(seq.dtype),
+                    n_full * kv_block_size, axis=1)
+            out[name] = seq[:, None]        # re-grow the batch=1 axis
+        return out
+
+    return {"fetch": jax.jit(fetch_fn)}
+
+
+class PrefillEngine:
+    """Prompt-only engine: admits requests under a scheduler policy,
+    prefills them into its own pool, and emits :class:`KVTransferHandle`\\ s.
+
+    ``config.num_slots`` bounds prefills per scheduler tick (paged — the
+    donor slot is transient) or resident un-adopted handles (contiguous —
+    each handle holds a full cache stripe).  ``config.num_kv_blocks``
+    sizes the paged pool that un-adopted handles and the radix index
+    occupy: the independent knob the router's pool-ratio sweep turns.
+    """
+
+    def __init__(self, model, params, config: EngineConfig, policy=None):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.queue = RequestQueue(config.max_waiting)
+        self.policy = policy if policy is not None else \
+            make_policy(config.sched)
+        self.paged = config.kv_layout == "paged"
+        if self.paged:
+            self.slots = PagedSlotManager(
+                model, config.num_slots, config.max_seq_len,
+                block_size=config.kv_block_size,
+                num_blocks=config.num_kv_blocks)
+            self._fns = _paged_engine_fns(
+                model, config.max_seq_len, config.kv_block_size,
+                config.temperature, config.eos_id)
+            self._xfer = _transfer_fns(model, config.max_seq_len,
+                                       config.kv_block_size)
+            N = config.num_slots
+            # dummy per-slot rows the shared scatter fn updates; the
+            # prefill engine never decodes, so they are write-only
+            self._last_logits = jnp.zeros((N, model.cfg.vocab_size),
+                                          jnp.float32)
+            self._alive = jnp.zeros((N,), bool)
+            self._remaining = jnp.zeros((N,), jnp.int32)
+        else:
+            # contiguous: prefill produces a self-contained batch=1 cache,
+            # so there is no donor pool — capacity is resident handles
+            self.slots = None
+            self._fns = _engine_fns(
+                model, config.max_seq_len, config.temperature, config.eos_id)
+        self.radix = (RadixPrefixIndex(self.slots.alloc)
+                      if config.prefix_share else None)
+        self.ready: list[KVTransferHandle] = []
+        self.resident = 0                   # handles created, not released
+        self.stats = EngineStats()
+        self.clock = None
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Enqueue; ``False`` = queue full (backpressure, same contract as
+        ``Engine.submit``).  Only prompt-side limits are validated here —
+        the router checks the decode side before delegating."""
+        if req.prompt_len > self.config.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} exceeds "
+                f"prefill max_seq_len {self.config.max_seq_len}")
+        if self.paged:
+            need = self.slots.blocks_required(req.prompt_len)
+            if need > self.slots.alloc.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: prompt needs {need} KV blocks but "
+                    f"the prefill pool has {self.slots.alloc.num_blocks}")
+        return self.queue.push(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue
+
+    # ---- admission ---------------------------------------------------------
+    def _match(self, req: Request):
+        if self.radix is None or req.frontend is not None:
+            return None, 0, False
+        return self.radix.match(req)
+
+    def _can_admit(self, req: Request) -> bool:
+        """Prefill-side admission gate: enough uncommitted blocks for the
+        *prompt* (the decode budget is the decode pool's problem).  Exact
+        radix hits cost no compute and no new blocks, so they are always
+        admissible.  Under pressure — pinned handles waiting for adoption
+        plus radix entries — the index LRU-evicts before giving up."""
+        entry, _, exact = self._match(req)
+        if entry is not None and exact:
+            return True
+        if not self.paged:
+            return self.resident < self.config.num_slots
+        if not self.slots.num_free:
+            return False
+        need = self.slots.blocks_required(req.prompt_len)
+        if self.slots.can_admit(req.prompt_len):
+            return True
+        if self.radix is not None and len(self.radix):
+            return self.radix.evict_for(need, protect=req.prefix_key)
+        return False
+
+    def step(self) -> int:
+        """One prefill tick: admit and prefill up to ``num_slots`` picked
+        requests, appending a handle per prompt to :attr:`ready`.  Returns
+        the number of handles produced (0 = nothing admissible)."""
+        made = 0
+        now = self.clock() if self.clock is not None else 0.0
+        while self.queue and made < self.config.num_slots:
+            idx = self.policy.pick(self.queue, self._can_admit, now=now,
+                                   live_tokens={})
+            if idx is None:
+                break
+            req = self.queue.pop_at(idx)
+            self.ready.append(self._prefill_one(req))
+            made += 1
+        return made
+
+    def pop_ready(self) -> list[KVTransferHandle]:
+        out, self.ready = self.ready, []
+        return out
+
+    def _prefill_one(self, req: Request) -> KVTransferHandle:
+        t0 = time.perf_counter()
+        entry, _, exact = self._match(req)
+        if entry is not None and exact:
+            # zero-compute handle straight from the radix entry: pin the
+            # entry's blocks under the handle (the index keeps its own pin)
+            self.radix.touch(entry, exact=True)
+            for bid in entry.block_ids:
+                self.slots.alloc.incref(bid)
+            self.stats.prefix_hits += 1
+            self.stats.blocks_saved += len(entry.block_ids)
+            handle = KVTransferHandle(
+                req, entry.logits, entry.block_ids, dict(entry.tail),
+                dict(entry.slot_leaves), source=self,
+                prefill_time_s=time.perf_counter() - t0,
+                from_prefix_hit=True)
+        elif not self.paged:
+            prompt_dev = jnp.asarray(req.prompt)[None]
+            logits, one = self._fns["prefill"](self.params, prompt_dev,
+                                               req.frontend)
+            handle = KVTransferHandle(req, logits, (), {}, {}, source=self,
+                                      one=one,
+                                      prefill_time_s=time.perf_counter() - t0)
+        else:
+            handle = self._prefill_paged(req, t0)
+        self.resident += 1
+        self.stats.prefills += 1
+        if self.paged:
+            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+                                            self.slots.blocks_in_use)
+        return handle
+
+    def _prefill_paged(self, req: Request, t0: float) -> KVTransferHandle:
+        """Donor path: prefill into a transient slot, snapshot, pin the full
+        blocks under the handle, and recycle the slot without copying."""
+        prompt_dev = jnp.asarray(req.prompt)[None]
+        slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
+                                 total_budget=req.prompt_len)
+        row = self.slots.device_tables()[slot]
+        logits, one = self._fns["prefill"](self.params, prompt_dev,
+                                           req.frontend)
+        (self.slots.cache, self._last_logits, self._alive,
+         self._remaining) = self._fns["scatter"](
+            logits, one, self.slots.cache, row, jnp.asarray(slot, jnp.int32),
+            self._last_logits, self._alive, self._remaining,
+            jnp.asarray(0, jnp.int32))
+        bs = self.config.kv_block_size
+        n_full = (req.prompt_len // bs) if self.slots.paged_names else 0
+        tail_block = n_full if req.prompt_len % bs else None
+        tail, slot_leaves = self._fns["snapshot"](one, tail_block=tail_block)
+        if not self.slots.paged_names:
+            tail = {}
+        if (self.radix is not None and req.prefix_key is not None
+                and req.frontend is None):
+            self.radix.misses += 1
+            self.radix.register(
+                req, [int(b) for b in self.slots.tables[slot, :n_full]],
+                logits=logits, tail=tail, slot_leaves=slot_leaves)
+        pinned = self.slots.pin_prefix(slot, n_full)
+        self.slots.release(slot)        # tail block freed: it lives in `tail`
+        return KVTransferHandle(req, logits, pinned, tail, slot_leaves,
+                                source=self,
+                                prefill_time_s=time.perf_counter() - t0)
+
+    # ---- adoption / release ------------------------------------------------
+    def export_cache(self, handle: KVTransferHandle) -> dict:
+        """Materialize the batch=1 cache pytree the decode engine's scatter
+        consumes — the transfer itself.  Paged: gather the pinned blocks
+        from this pool + splice the tail snapshot (a jitted permutation
+        copy).  Contiguous: the handle already carries the cache."""
+        if handle.released:
+            raise RuntimeError(
+                f"handle for rid {handle.req.rid} was already released")
+        if not self.paged:
+            return handle.one
+        one = dict(handle.slot_leaves)
+        one["index"] = jnp.asarray(handle.req.prompt_len, jnp.int32)
+        if self.slots.paged_names:
+            row = np.zeros((self.slots.max_blocks,), np.int32)
+            row[:len(handle.block_ids)] = handle.block_ids
+            src = {name: self.slots.cache[name]
+                   for name in self.slots.paged_names}
+            n_full = handle.req.prompt_len // self.config.kv_block_size
+            one.update(self._xfer["fetch"](
+                src, jnp.asarray(row), handle.tail,
+                jnp.asarray(n_full, jnp.int32)))
+        return one
+
+    def _release_handle(self, handle: KVTransferHandle) -> None:
+        for bid in handle.block_ids:
+            self.slots.alloc.decref(bid)
+        self.resident -= 1
+
+    # ---- suspend / resume --------------------------------------------------
+    def reset(self, params=None) -> None:
+        """Swap weights between batches.  Requires the queue drained and
+        every handle released (adopted or dropped); asserts the block pool
+        is leak-free afterwards — the same conservation invariant
+        ``Engine.reset`` enforces, extended over handle pins."""
+        if self.queue or self.ready:
+            raise RuntimeError("reset() on a live prefill engine; drain or "
+                               "drop pending handles first")
+        if self.resident:
+            raise RuntimeError(
+                f"reset() with {self.resident} un-released transfer "
+                f"handle(s) still pinning the prefill pool")
+        if params is not None:
+            self.params = params
+        if self.radix is not None:
+            self.radix.flush()
+        self.policy.on_reset()
+        if self.paged:
+            self.slots.alloc.assert_clean(context="PrefillEngine.reset")

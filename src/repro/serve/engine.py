@@ -124,6 +124,8 @@ class EngineStats:
     prefix_partial_hits: int = 0      # admits that shared blocks but prefilled
     blocks_saved: int = 0             # KV blocks pinned instead of allocated
     decode_time_s: float = 0.0        # wall time inside decode dispatch+sync
+    adoptions: int = 0                # admits fed by a KV transfer handle
+    #                                   (disaggregated prefill, serve.disagg)
 
     @property
     def slot_utilization(self) -> float:
@@ -148,15 +150,24 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
                                       frontend=frontend)
         return logits[0], cache
 
+    def scatter_fn(logits, one, pool, slot, last_logits, alive, remaining,
+                   budget):
+        """Splice a prefilled batch=1 cache into slot ``slot`` plus the
+        logits/alive/budget row updates — the insert half of ``admit``,
+        standalone so a disaggregated prefill result (KV transfer handle)
+        can be adopted without re-running the model."""
+        return (insert_cache(pool, one, slot),
+                last_logits.at[slot].set(logits),
+                alive.at[slot].set(True),
+                remaining.at[slot].set(budget))
+
     def admit_fn(params, prompt, frontend, pool, slot, last_logits, alive,
                  remaining, budget):
         """Prefill one request and splice it into slot ``slot`` — a single
         dispatch covering cache insert + logits/alive/budget row updates."""
         logits, one = prefill_fn(params, prompt, frontend)
-        return (insert_cache(pool, one, slot),
-                last_logits.at[slot].set(logits),
-                alive.at[slot].set(True),
-                remaining.at[slot].set(budget))
+        return scatter_fn(logits, one, pool, slot, last_logits, alive,
+                          remaining, budget)
 
     cache_axes = {k: _batch_axis(k) for k in model.cache_logical_specs()}
 
@@ -196,7 +207,8 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
             step, (last_logits, cache, alive, remaining), keys)
         return carry, out                   # out: (toks, logps, recs) (K,N)
 
-    return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn)}
+    return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn),
+            "prefill": jax.jit(prefill_fn), "scatter": jax.jit(scatter_fn)}
 
 
 @functools.lru_cache(maxsize=32)
@@ -624,6 +636,62 @@ class Engine:
         self.stats.prefix_partial_hits += 1
         return slot
 
+    # ---- disaggregated-prefill adoption ------------------------------------
+    def can_admit_prefilled(self, req: Request) -> bool:
+        """Adoption gate for a KV transfer handle (``serve.disagg``): a free
+        slot, and (paged) enough uncommitted blocks for the request's
+        worst-case decode budget.  No radix involvement — the handle's
+        prompt KV arrives prefilled; sharing happened on the prefill side."""
+        if not self.slots.num_free:
+            return False
+        if not self.paged:
+            return True
+        return self.slots.can_admit(req.total_budget)
+
+    def admit_prefilled(self, req: Request, logits, one) -> int:
+        """Adopt an externally prefilled request into a fresh slot.
+
+        ``one`` is a batch=1 cache pytree holding exactly the prompt's
+        prefill state (``index`` = prompt length) and ``logits`` the
+        post-prompt logits — a ``prefill_fn`` result, whether produced
+        in-process or materialized from a
+        :class:`~repro.serve.disagg.KVTransferHandle`.  The splice is the
+        same jitted ``scatter`` the monolithic admit path uses, so decode
+        from an adopted slot is bit-identical to a monolithic admit.
+        Returns the slot.  Callers must gate on
+        :meth:`can_admit_prefilled` — like ``SlotManager.assign``, this
+        raises rather than queues when the pool is full."""
+        budget = jnp.asarray(req.max_new_tokens, jnp.int32)
+        if not self.paged:
+            slot = self.slots.assign(req.rid)
+            (self.slots.cache, self._last_logits, self._alive,
+             self._remaining) = self._fns["scatter"](
+                logits, one, self.slots.cache, jnp.asarray(slot, jnp.int32),
+                self._last_logits, self._alive, self._remaining, budget)
+        else:
+            slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
+                                     total_budget=req.total_budget)
+            row = self.slots.device_tables()[slot]
+            (self.slots.cache, self._last_logits, self._alive,
+             self._remaining) = self._fns["scatter"](
+                logits, one, self.slots.cache, row,
+                jnp.asarray(slot, jnp.int32), self._last_logits,
+                self._alive, self._remaining, budget)
+            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+                                            self.slots.blocks_in_use)
+        self._host_index[slot] = req.prompt_len
+        out = RequestOutput(rid=req.rid, prompt=req.prompt,
+                            prefill_step=self.stats.steps,
+                            arrival_time=req.arrival_time,
+                            priority=req.priority, deadline=req.deadline,
+                            job_id=req.job_id)
+        self._active[slot] = (req, out)
+        self.stats.prefills += 1
+        self.stats.adoptions += 1
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     len(self._active))
+        return slot
+
     def _finalize(self, slot: int) -> None:
         req, out = self._active[slot]
         out.finish_reason = ("eos" if out.tokens and
@@ -755,6 +823,16 @@ class Engine:
         if self.radix is not None:
             # new weights invalidate every cached prefill (logits + KV)
             self.radix.flush()
+        # the policy keeps its measured service-time state (the jit cache
+        # is kept, so the compile-discard must NOT re-trigger) but drops
+        # per-request bookkeeping: rids repeat across GRPO iterations, and
+        # stale arrival seqs / skip counts would poison the next batch
+        self.policy.on_reset()
+        if self.paged:
+            # an idle engine with a flushed radix must hold zero blocks —
+            # any dangling refcount here is a leak that would compound
+            # across iterations of a persistent engine
+            self.slots.alloc.assert_clean(context="Engine.reset")
         self.finished.clear()
         self._unharvested.clear()
 

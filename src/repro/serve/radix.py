@@ -168,12 +168,18 @@ class RadixPrefixIndex:
             self.evict(victims[0].key)
         return True
 
-    def flush(self) -> None:
-        """Drop every entry (params changed / engine reset)."""
+    def flush(self) -> int:
+        """Drop every entry (params changed / engine reset); returns how
+        many were flushed.  Every index pin must be gone afterwards — an
+        entry surviving here would leak its blocks across engine resets,
+        which is exactly what ``BlockAllocator.assert_clean`` (called by
+        ``Engine.reset`` right after this) would then trip on."""
         n = len(self.entries)
         for key in list(self.entries):
             self.evict(key)
         self.evictions -= n                  # flushes aren't pressure events
+        assert not self.entries, "flush left radix entries behind"
+        return n
 
     # ---- accounting --------------------------------------------------------
     def pinned_blocks(self) -> set[int]:

@@ -1,0 +1,323 @@
+"""Prefill/decode disaggregation router.
+
+:class:`DisaggRouter` composes a :class:`~repro.serve.disagg.PrefillEngine`
+and a decode :class:`~repro.serve.engine.Engine` over *independently sized*
+slot + block pools (:class:`DisaggConfig`) and moves
+:class:`~repro.serve.disagg.KVTransferHandle`\\ s between them:
+
+::
+
+    submit ──> [queue] ──policy──> PrefillEngine ──handle──> (transfer
+               ^                    pool P slots,             queue)
+               |                    P blocks                     |
+               └── backpressure ◄── pinned blocks                v
+                                                   Engine.admit_prefilled
+                                                    decode pool D slots,
+                                                    D blocks ──> finished
+
+Each scheduler tick runs prefill admission (the configured policy picks
+from the shared waiting queue), adopts as many ready handles as the
+decode pool can admit (FIFO in completion order — admission order never
+changes *what* a request decodes, only when, so output stays bit-exact
+for every policy), then one decode tick.  Un-adopted handles pin prefill
+blocks, which throttles prefill admission when decode falls behind — the
+two pool sizes are the only knobs, exactly the heterogeneous-pool shape
+the paper gives rollout vs training.
+
+The router duck-types the ``Engine`` surface that ``run_trace``,
+``generate_continuous`` and the streaming executor drive (``submit`` /
+``step`` / ``idle`` / ``harvest`` / ``finished`` / ``stats`` / ``reset``),
+so every existing driver works unchanged with ``disagg=...``.
+
+The KV transfer is **planner-visible**: pass a
+:class:`~repro.core.phase_control.RollMuxRuntime` and each adoption runs
+under a ``runtime.permit("transfer", "<job>:transfer")`` scope, so the
+co-execution DES sees transfer occupancy as a phase timeline alongside
+rollout/train/reward (``phase_profiles(transfer_pool="transfer")`` folds
+it into the job's rollout-side critical path).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.data import tokenizer as tok
+from repro.serve.disagg import KVTransferHandle, PrefillEngine
+from repro.serve.engine import Engine, EngineConfig
+
+
+@dataclass(frozen=True)
+class DisaggConfig:
+    """Two-pool serving shape: one ``max_seq_len``/layout/sampler contract,
+    independently sized prefill and decode pools.
+
+    ``prefill_slots`` bounds prefills per tick (paged) or resident
+    un-adopted handles (contiguous); ``prefill_kv_blocks`` sizes the pool
+    those handles pin.  ``decode_slots``/``decode_kv_blocks`` size the
+    decode engine exactly like a monolithic ``EngineConfig`` would.  The
+    admission policy (``sched``) runs on the prefill side — that is where
+    requests wait; ``prefix_share`` builds the radix index over the
+    prefill pool (exact hits only: later GRPO group members become
+    zero-compute handles)."""
+    prefill_slots: int = 2
+    decode_slots: int = 8
+    max_seq_len: int = 256
+    eos_id: int = tok.EOS
+    temperature: float = 0.0
+    block_size: int = 1
+    max_waiting: Optional[int] = None
+    kv_layout: str = "contiguous"
+    kv_block_size: int = 16
+    prefill_kv_blocks: Optional[int] = None
+    decode_kv_blocks: Optional[int] = None
+    sched: str = "fifo"
+    prefix_share: bool = False
+
+    def prefill_config(self) -> EngineConfig:
+        return EngineConfig(
+            num_slots=self.prefill_slots, max_seq_len=self.max_seq_len,
+            eos_id=self.eos_id, temperature=self.temperature,
+            block_size=self.block_size, max_waiting=self.max_waiting,
+            kv_layout=self.kv_layout, kv_block_size=self.kv_block_size,
+            num_kv_blocks=self.prefill_kv_blocks, sched=self.sched,
+            prefix_share=self.prefix_share)
+
+    def decode_config(self) -> EngineConfig:
+        # the decode engine is fed adopted handles, never a policy-ordered
+        # queue, and adopted prompts bypass prefix lookup by construction
+        return EngineConfig(
+            num_slots=self.decode_slots, max_seq_len=self.max_seq_len,
+            eos_id=self.eos_id, temperature=self.temperature,
+            block_size=self.block_size, kv_layout=self.kv_layout,
+            kv_block_size=self.kv_block_size,
+            num_kv_blocks=self.decode_kv_blocks, sched="fifo",
+            prefix_share=False)
+
+
+class RouterStats:
+    """Transfer counters + delegation to the two engines' stats, presenting
+    the single-engine surface trace drivers read."""
+
+    def __init__(self, router: "DisaggRouter"):
+        self._router = router
+        self.transfers = 0
+        self.transfer_time_s = 0.0
+        self.transferred_blocks = 0
+
+    @property
+    def transfer_overhead_frac(self) -> float:
+        """Transfer wall time as a fraction of transfer + decode time —
+        guarded against the zero-decode-steps trace (nothing served)."""
+        busy = self.transfer_time_s + self._router.decode.stats.decode_time_s
+        if busy <= 0.0:
+            return 0.0
+        return self.transfer_time_s / busy
+
+    # -- decode-side delegation (what run_trace reads) ----------------------
+    @property
+    def steps(self):
+        return self._router.decode.stats.steps
+
+    @property
+    def decode_time_s(self):
+        return self._router.decode.stats.decode_time_s
+
+    @property
+    def time_per_token(self):
+        return self._router.decode.stats.time_per_token
+
+    @property
+    def slot_utilization(self):
+        return self._router.decode.stats.slot_utilization
+
+    @property
+    def peak_active(self):
+        return self._router.decode.stats.peak_active
+
+    @property
+    def peak_kv_blocks(self):
+        return self._router.decode.stats.peak_kv_blocks
+
+    @property
+    def recorded_tokens(self):
+        return self._router.decode.stats.recorded_tokens
+
+    # -- prefill-side delegation --------------------------------------------
+    @property
+    def prefills(self):
+        return self._router.prefill.stats.prefills
+
+    @property
+    def prefix_hits(self):
+        return self._router.prefill.stats.prefix_hits
+
+    @property
+    def blocks_saved(self):
+        return self._router.prefill.stats.blocks_saved
+
+
+class DisaggRouter:
+    """Drive one request stream through disaggregated prefill/decode pools.
+
+    ``runtime``/``job_id`` make each KV transfer a planner-visible phase
+    (see module docstring); both default to the in-process fast path with
+    a local :attr:`transfer_timeline` either way.
+    """
+
+    def __init__(self, model, params, config: DisaggConfig, rng=None,
+                 policy=None, runtime=None, job_id: Optional[str] = None):
+        self.model = model
+        self.config = config
+        self.prefill = PrefillEngine(model, params, config.prefill_config(),
+                                     policy=policy)
+        self.decode = Engine(model, params, config.decode_config(), rng=rng)
+        self.pending_transfer: deque[KVTransferHandle] = deque()
+        self.runtime = runtime
+        self.job_id = job_id
+        self.stats = RouterStats(self)
+        self.transfer_timeline: list[tuple[str, float, float]] = []
+        self._clock = None
+
+    # ---- Engine surface ----------------------------------------------------
+    @property
+    def clock(self):
+        return self._clock
+
+    @clock.setter
+    def clock(self, fn):
+        self._clock = fn
+        self.prefill.clock = fn
+        self.decode.clock = fn
+
+    @property
+    def params(self):
+        return self.decode.params
+
+    @property
+    def paged(self) -> bool:
+        return self.decode.paged
+
+    @property
+    def slots(self):
+        return self.decode.slots
+
+    @property
+    def radix(self):
+        return self.prefill.radix
+
+    @property
+    def queue(self):
+        return self.prefill.queue
+
+    @property
+    def finished(self):
+        return self.decode.finished
+
+    @property
+    def num_active(self) -> int:
+        return self.decode.num_active + len(self.pending_transfer)
+
+    @property
+    def idle(self) -> bool:
+        return (not self.prefill.queue and not self.pending_transfer
+                and self.decode.idle)
+
+    def harvest(self):
+        return self.decode.harvest()
+
+    def submit(self, req) -> bool:
+        """Validate against *both* pools, then enqueue on the prefill side.
+        A request too big for either pool can never be served and raises;
+        a full queue returns ``False`` (backpressure)."""
+        if req.total_budget > self.config.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + budget "
+                f"{req.max_new_tokens} exceeds max_seq_len "
+                f"{self.config.max_seq_len}")
+        if self.decode.paged:
+            need = self.decode.slots.blocks_required(req.total_budget)
+            if need > self.decode.slots.alloc.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks but the "
+                    f"decode pool has {self.decode.slots.alloc.num_blocks}")
+        return self.prefill.submit(req)
+
+    # ---- scheduler ---------------------------------------------------------
+    def step(self) -> int:
+        """One router tick: prefill admission, handle adoption, decode.
+        Returns decode steps executed, or 1 when only prefill/transfer
+        progressed — ``0`` keeps the ``Engine.step`` "no work" contract
+        trace drivers sleep on."""
+        prefilled = self.prefill.step()
+        self.pending_transfer.extend(self.prefill.pop_ready())
+        moved = 0
+        while (self.pending_transfer
+               and self.decode.can_admit_prefilled(
+                   self.pending_transfer[0].req)):
+            self._transfer(self.pending_transfer.popleft())
+            moved += 1
+        k = self.decode.step()
+        if not (prefilled or moved or k):
+            if self.pending_transfer and self.decode.idle:
+                h = self.pending_transfer[0]
+                raise RuntimeError(
+                    f"transfer stalled: handle for rid {h.req.rid} "
+                    f"(budget {h.req.total_budget}) does not fit the idle "
+                    f"decode pool — check decode slot/block sizing")
+            if self.prefill.queue and self.decode.idle:
+                raise RuntimeError(
+                    f"admission stalled: {len(self.prefill.queue)} waiting, "
+                    f"0 active — check prefill pool sizing")
+            return 0
+        return k if k else 1
+
+    def _transfer(self, handle: KVTransferHandle) -> None:
+        who = f"{self.job_id or handle.req.job_id or 'serve'}:transfer"
+        ctx = (self.runtime.permit("transfer", who)
+               if self.runtime is not None else contextlib.nullcontext())
+        t0 = time.perf_counter()
+        with ctx:
+            one = self.prefill.export_cache(handle)
+            self.decode.admit_prefilled(handle.req, handle.logits, one)
+        n_blocks = len(handle.block_ids)
+        handle.release()
+        dt = time.perf_counter() - t0
+        now = self._clock() if self._clock is not None else t0 + dt
+        self.transfer_timeline.append((who, now - dt, now))
+        self.stats.transfers += 1
+        self.stats.transfer_time_s += dt
+        self.stats.transferred_blocks += n_blocks
+
+    def run(self, *, max_ticks: Optional[int] = None):
+        """Drive until queue, transfer queue and decode pool are empty."""
+        ticks = 0
+        while not self.idle:
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            self.step()
+            ticks += 1
+        return [self.finished[r] for r in sorted(self.finished)]
+
+    # ---- suspend / resume --------------------------------------------------
+    def drop_pending(self) -> int:
+        """Release every handle still waiting for adoption (mid-flight
+        drop).  The block conservation invariant must hold again
+        afterwards — ``reset`` asserts it."""
+        n = len(self.pending_transfer)
+        while self.pending_transfer:
+            self.pending_transfer.popleft().release()
+        return n
+
+    def reset(self, params=None, rng=None) -> None:
+        """Prepare both engines for the next batch (persistent-router reuse
+        across GRPO iterations).  In-flight transfer handles are dropped —
+        their pins released — and both pools are asserted leak-free."""
+        if self.prefill.queue or not self.decode.idle:
+            raise RuntimeError("reset() on a live router; drain first")
+        self.pending_transfer.extend(self.prefill.pop_ready())
+        self.drop_pending()
+        self.prefill.reset(params)
+        self.decode.reset(params, rng)

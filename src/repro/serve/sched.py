@@ -75,6 +75,14 @@ class SchedulerPolicy:
         policies feed this straight into their per-token estimate — the
         engine's own ``step()`` accounting, not a finish-time heuristic."""
 
+    def on_reset(self) -> None:
+        """Optional hook ``Engine.reset`` calls between request batches.
+        Policies drop *per-request* bookkeeping here (rids repeat across
+        GRPO iterations on a persistent engine) but must keep measured
+        *hardware* state: the engine keeps its jit cache across resets, so
+        anything calibrated against compilation — the SLO policy's
+        first-sample discard — must not re-trigger."""
+
 
 class FIFOPolicy(SchedulerPolicy):
     """Strict arrival order; the head is never skipped (PR 3 semantics)."""
@@ -148,7 +156,15 @@ class DeadlinePolicy(SchedulerPolicy):
             # deadlines and would hog every slot while still-feasible work
             # misses too.  Expired requests are served, but last
             # (best-effort), which keeps attainment from collapsing.
-            return (dl < now, dl, -r.priority, self._seq[r.rid])
+            # EXCEPT once a request has hit max_skips: demoting a starving
+            # request for being expired would re-open the starvation window
+            # the barrier exists to close — it blocks younger work (below)
+            # yet would itself wait behind *all* other work, wedging the
+            # queue under expired-heavy overload.  A starving request keeps
+            # its EDF position regardless of expiry.
+            starving = self._skips.get(r.rid, 0) >= self.max_skips
+            return (dl < now and not starving, dl, -r.priority,
+                    self._seq[r.rid])
 
         order = sorted(range(len(waiting)), key=key)
         # starvation barrier: once any request has been overtaken max_skips
@@ -172,6 +188,15 @@ class DeadlinePolicy(SchedulerPolicy):
                     self._skips[r.rid] = self._skips.get(r.rid, 0) + 1
             return i
         return None
+
+    def on_reset(self) -> None:
+        """Drop per-request state between batches.  ``_note`` prunes rids
+        that leave the queue, but on a persistent engine the *last* batch's
+        rids repeat in the next one (GRPO rows are always 0..B-1): a stale
+        entry would hand a fresh request an ancient arrival seq — and any
+        stale skip count could make it an instant barrier."""
+        self._seq.clear()
+        self._skips.clear()
 
 
 class SLOPolicy(DeadlinePolicy):
@@ -222,6 +247,16 @@ class SLOPolicy(DeadlinePolicy):
         est_solo = self.time_per_token * req.max_new_tokens
         return req.arrival_time + self.slowdown * est_solo
 
+    def on_reset(self) -> None:
+        # Per-request bookkeeping goes (rids repeat across batches); the
+        # measured service-time state — ``time_per_token`` and the
+        # ``_step_samples`` counter — stays.  ``Engine.reset`` keeps the
+        # jit cache, so the next batch's first decode step is NOT
+        # compile-contaminated: re-triggering the first-sample discard
+        # would throw away a clean measurement and leave low-sample
+        # estimates skewed toward whatever the previous batch ended on.
+        super().on_reset()
+
     def observe_step(self, service_s: float, tokens: int) -> None:
         # The engine's own decode accounting: ``tokens`` decode steps took
         # ``service_s`` measured around the device dispatch + host sync.
@@ -230,6 +265,9 @@ class SLOPolicy(DeadlinePolicy):
         # and later samples converge fast (EMA over steps, not finishes —
         # every tick contributes, so the estimate tracks load changes
         # within one batch of requests).
+        # ``tokens < 1`` guards the zero-decode-steps path (a tick that
+        # admitted but ran no decode): dividing by it would poison the
+        # estimate with inf/NaN, which every later EMA step inherits.
         if tokens < 1 or service_s < 0:
             return
         self._step_samples += 1

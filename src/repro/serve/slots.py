@@ -234,6 +234,24 @@ class PagedSlotManager:
             self.nblocks[slot] += 1
             self._dirty = True
 
+    def pin_prefix(self, slot: int, n: int) -> list[int]:
+        """Incref the slot's first ``n`` table entries — full, immutable
+        prompt blocks — on behalf of an external pin holder (a KV transfer
+        handle, mirroring the radix index's own pins) and return their
+        ids.  The pins survive :meth:`release` of the slot: the blocks
+        stay resident, un-copied, until the holder decrefs them."""
+        rid = self.owner[slot]
+        if rid is None:
+            raise AssertionError(f"pin_prefix on free slot {slot}")
+        if n > self.nblocks[slot]:
+            raise AssertionError(
+                f"pin_prefix: {n} blocks requested but slot {slot} has "
+                f"only {self.nblocks[slot]} materialized")
+        ids = [int(b) for b in self.tables[slot, :n]]
+        for bid in ids:
+            self.alloc.incref(bid)
+        return ids
+
     def release(self, slot: int) -> None:
         """Recycle a finished slot: free its blocks (unpin shared ones),
         zero its table row."""

@@ -1,0 +1,333 @@
+"""Disaggregated prefill/decode serving (``repro.serve.disagg`` +
+``repro.serve.router``): bit-exactness against the monolithic engine
+across every policy × layout × sharing combination, KV-handle refcount
+conservation under random interleavings and mid-flight drops, reset-cycle
+leak invariants (for the router *and* the monolithic prefix-share engine),
+planner visibility of the transfer phase, and the ``disagg=`` wiring in
+``rl.generate_continuous``.
+
+The router's core guarantee mirrors the scheduler one: disaggregation
+changes *where* a prompt's KV lives and *when* its decode starts, never
+*what* it decodes — greedy tokens and behaviour logprobs are bit-identical
+to the monolithic engine for the same requests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from test_serve_engine import MAX_LEN, get_model, make_requests, reference
+
+from repro.rl import SamplerConfig, generate_continuous
+from repro.serve import (DisaggConfig, DisaggRouter, Engine, EngineConfig,
+                         KVTransferHandle, Request)
+
+
+def _mono_outputs(m, params, reqs, *, kv, sched="fifo", prefix_share=False):
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0, kv_layout=kv,
+        kv_block_size=4, sched=sched, prefix_share=prefix_share))
+    for r in reqs:
+        eng.submit(r)
+    return {o.rid: o for o in eng.run()}
+
+
+def _disagg_outputs(m, params, reqs, *, kv, sched="fifo",
+                    prefix_share=False, prefill_slots=1, decode_slots=2,
+                    **cfg_kw):
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=prefill_slots, decode_slots=decode_slots,
+        max_seq_len=MAX_LEN, temperature=0.0, kv_layout=kv,
+        kv_block_size=4, sched=sched, prefix_share=prefix_share, **cfg_kw))
+    for r in reqs:
+        router.submit(r)
+    return {o.rid: o for o in router.run()}, router
+
+
+def _assert_same(mono, dis):
+    assert sorted(mono) == sorted(dis)
+    for rid in mono:
+        assert dis[rid].tokens == mono[rid].tokens, rid
+        np.testing.assert_array_equal(dis[rid].logprobs,
+                                      mono[rid].logprobs)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: every policy × layout × sharing combination
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sched", ["fifo", "deadline", "slo"])
+@pytest.mark.parametrize("kv,prefix_share", [
+    ("contiguous", False), ("paged", False), ("paged", True)])
+def test_disagg_matches_monolithic(kv, prefix_share, sched):
+    m, params = get_model("internlm2-1.8b")
+    reqs = make_requests(4, max_new=6)
+    if sched != "fifo":
+        for i, r in enumerate(reqs):
+            r.deadline = 10.0 - i          # reverse-EDF: forces reordering
+    if prefix_share:
+        for r in reqs[2:]:                 # two exact-duplicate prompts
+            r.prompt = np.array(reqs[0].prompt)
+            r.prefix_key = "g0"
+        reqs[0].prefix_key = "g0"
+    mono = _mono_outputs(m, params, reqs, kv=kv, sched=sched,
+                         prefix_share=prefix_share)
+    dis, router = _disagg_outputs(m, params, reqs, kv=kv, sched=sched,
+                                  prefix_share=prefix_share)
+    _assert_same(mono, dis)
+    assert router.stats.transfers == len(reqs)
+    if prefix_share:
+        assert router.stats.prefix_hits >= 1   # later members: zero compute
+    # reference cross-check: disagg == per-request generate, not just == mono
+    ref_t, ref_l = reference(m, params, reqs[0], max_new=6)
+    assert dis[0].tokens == ref_t
+    np.testing.assert_allclose(dis[0].logprobs, ref_l, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b",   # dense GQA attention
+                                  "rwkv6-7b",          # no paged leaves
+                                  "gemma3-4b"])        # sliding-window mix
+def test_disagg_matches_monolithic_across_caches(arch):
+    """The handle protocol must survive every cache family: attention
+    (paged K/V leaves), rwkv6 (state rides entirely in the slot-leaf
+    snapshot) and gemma3 (paged + sliding-window layers)."""
+    m, params = get_model(arch)
+    reqs = make_requests(3, max_new=5)
+    mono = _mono_outputs(m, params, reqs, kv="paged")
+    dis, _ = _disagg_outputs(m, params, reqs, kv="paged")
+    _assert_same(mono, dis)
+
+
+def test_disagg_pool_sizing_independent():
+    """Prefill and decode pools size independently: a 1-slot prefill side
+    with a tiny block pool still serves (handles pin, slot recycles), and
+    the decode pool bounds concurrency exactly like a monolithic engine."""
+    m, params = get_model("internlm2-1.8b")
+    reqs = make_requests(4, max_new=5)
+    mono = _mono_outputs(m, params, reqs, kv="paged")
+    dis, router = _disagg_outputs(
+        m, params, reqs, kv="paged", prefill_slots=1, decode_slots=2,
+        prefill_kv_blocks=6, decode_kv_blocks=40)
+    _assert_same(mono, dis)
+    assert router.prefill.slots.alloc.num_blocks == 6
+    assert router.decode.slots.alloc.num_blocks == 40
+    router.reset()                          # both pools leak-free
+
+
+def test_disagg_rejects_oversized_for_either_pool():
+    m, params = get_model("internlm2-1.8b")
+    _, router = _disagg_outputs(m, params, [], kv="paged",
+                                decode_kv_blocks=4)
+    with pytest.raises(ValueError):         # decode pool can never fit it
+        router.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                              max_new_tokens=30))
+    with pytest.raises(ValueError):         # over max_seq_len entirely
+        router.submit(Request(rid=1, prompt=np.zeros(MAX_LEN, np.int32),
+                              max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# generate_continuous wiring (the rl.rollout + launch surface)
+# ---------------------------------------------------------------------------
+def test_generate_continuous_disagg_flag_bit_exact():
+    m, params = get_model("internlm2-1.8b")
+    prompts = jnp.asarray(np.array([[1, 5, 7, 9], [1, 8, 3, 3],
+                                    [1, 2, 2, 5], [1, 7, 7, 7]], np.int32))
+    sampler = SamplerConfig(max_new_tokens=6, temperature=0.0)
+    key = jax.random.PRNGKey(0)
+    mono = generate_continuous(m, params, prompts, key, sampler,
+                               num_slots=2, kv_layout="paged",
+                               kv_block_size=4)
+    # decode pool sized like the monolithic slot pool -> bit-exact (the
+    # decode computation is the same jitted code over the same batch shape)
+    dis = generate_continuous(m, params, prompts, key, sampler,
+                              num_slots=2, kv_layout="paged",
+                              kv_block_size=4,
+                              disagg={"prefill_slots": 1,
+                                      "decode_slots": 2})
+    np.testing.assert_array_equal(mono["completions"], dis["completions"])
+    np.testing.assert_array_equal(mono["behavior_logp"],
+                                  dis["behavior_logp"])
+    assert dis["engine_stats"].transfers == prompts.shape[0]
+    # disagg=True picks a 1:3-ish split -> different decode batch shape,
+    # so logprobs agree to kernel-fusion tolerance, tokens exactly
+    auto = generate_continuous(m, params, prompts, key, sampler,
+                               num_slots=2, kv_layout="paged",
+                               kv_block_size=4, disagg=True)
+    np.testing.assert_array_equal(mono["completions"], auto["completions"])
+    np.testing.assert_allclose(mono["behavior_logp"],
+                               auto["behavior_logp"], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Handle refcount conservation: random interleavings + mid-flight drops
+# ---------------------------------------------------------------------------
+def _conservation(alloc):
+    assert alloc.num_free + alloc.num_live == alloc.num_blocks
+    for bid, rc in alloc.refcount.items():
+        assert rc > 0, f"dangling refcount on block {bid}"
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=4, max_size=24),
+       st.integers(0, 2 ** 16 - 1))
+def test_handle_refcounts_under_random_interleaving(ops, seed):
+    """Random interleaving of {submit, prefill tick, adopt, drop, decode
+    tick}: block conservation (free + live == num_blocks, no dangling
+    refcounts) holds at *every* step, and after the final drain + reset
+    both pools are exactly clean."""
+    m, params = get_model("internlm2-1.8b")
+    rng = np.random.RandomState(seed)
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=2, decode_slots=2, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4,
+        prefix_share=True))
+    next_rid = 0
+    for op in ops:
+        if op == 0 and next_rid < 6:                       # submit
+            plen = int(rng.randint(3, 9))
+            router.submit(Request(
+                rid=next_rid, prompt=rng.randint(1, 50, plen).astype(
+                    np.int32), max_new_tokens=int(rng.randint(1, 5)),
+                prefix_key=f"g{next_rid % 2}"))
+            next_rid += 1
+        elif op == 1:                                      # prefill only
+            router.prefill.step()
+            router.pending_transfer.extend(router.prefill.pop_ready())
+        elif op == 2 and router.pending_transfer:          # drop mid-flight
+            router.pending_transfer.popleft().release()
+        else:                                              # full tick
+            if not router.idle:
+                router.step()
+        _conservation(router.prefill.slots.alloc)
+        _conservation(router.decode.slots.alloc)
+    while router.pending_transfer or not router.decode.idle \
+            or router.prefill.queue:
+        if not router.idle:
+            router.step()
+        else:
+            break
+    router.reset()
+    router.prefill.slots.alloc.assert_clean()
+    router.decode.slots.alloc.assert_clean()
+
+
+def test_handle_release_is_idempotent():
+    m, params = get_model("internlm2-1.8b")
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=1, decode_slots=1, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4))
+    router.submit(make_requests(1)[0])
+    router.prefill.step()
+    (h,) = router.prefill.pop_ready()
+    assert isinstance(h, KVTransferHandle) and h.block_ids
+    h.release()
+    h.release()                             # second release must be a no-op
+    router.prefill.slots.alloc.assert_clean()
+    with pytest.raises(RuntimeError):       # adopted-after-release is loud
+        router.prefill.export_cache(h)
+
+
+def test_dropped_handle_restores_conservation_and_reset_is_clean():
+    """The ISSUE's mid-flight-drop invariant: prefill N, adopt some, drop
+    the rest — the prefill pool must return to exactly-clean on reset."""
+    m, params = get_model("internlm2-1.8b")
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=2, decode_slots=2, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4))
+    for r in make_requests(4, max_new=4):
+        router.submit(r)
+    router.prefill.step()                   # 2 handles pinned, un-adopted
+    router.pending_transfer.extend(router.prefill.pop_ready())
+    assert router.prefill.slots.alloc.num_live > 0
+    dropped = router.drop_pending()
+    assert dropped == 2
+    router.run()                            # remaining two serve normally
+    router.reset()
+    router.prefill.slots.alloc.assert_clean()
+    router.decode.slots.alloc.assert_clean()
+
+
+def test_prefill_reset_refuses_live_handles():
+    m, params = get_model("internlm2-1.8b")
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=1, decode_slots=1, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4))
+    router.submit(make_requests(1)[0])
+    router.prefill.step()
+    (h,) = router.prefill.pop_ready()
+    with pytest.raises(RuntimeError):
+        router.prefill.reset()
+    h.release()
+    router.prefill.reset()                  # now clean
+
+
+# ---------------------------------------------------------------------------
+# Reset-cycle leak invariants (satellite: monolithic prefix-share too)
+# ---------------------------------------------------------------------------
+def test_monolithic_prefix_share_reset_cycles_leak_free():
+    """``Engine.reset`` with ``prefix_share`` must fully release the radix
+    pins: across repeated run/reset cycles the block pool returns to
+    exactly ``free + live == num_blocks`` with zero dangling refcounts."""
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0,
+        kv_layout="paged", kv_block_size=4, prefix_share=True))
+    base = make_requests(2, max_new=4)
+    for cycle in range(3):
+        for i, proto in enumerate(base * 2):   # duplicates -> radix hits
+            eng.submit(Request(rid=i, prompt=np.array(proto.prompt),
+                               max_new_tokens=4,
+                               prefix_key=f"c{cycle}-g{i % 2}"))
+        eng.run()
+        eng.reset()                         # asserts pool cleanliness itself
+        alloc = eng.slots.alloc
+        assert alloc.num_free == alloc.num_blocks
+        assert not alloc.refcount and not alloc.quota
+        assert len(eng.radix) == 0
+
+
+def test_router_reset_cycles_leak_free_with_prefix_share():
+    m, params = get_model("internlm2-1.8b")
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=1, decode_slots=2, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4,
+        prefix_share=True))
+    base = make_requests(2, max_new=4)
+    for cycle in range(3):
+        for i, proto in enumerate(base * 2):
+            router.submit(Request(rid=i, prompt=np.array(proto.prompt),
+                                  max_new_tokens=4,
+                                  prefix_key=f"c{cycle}-g{i % 2}"))
+        outs = router.run()
+        assert len(outs) == 4
+        router.reset()
+        router.prefill.slots.alloc.assert_clean()
+        router.decode.slots.alloc.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# Planner visibility: transfers are a phase on the co-execution timeline
+# ---------------------------------------------------------------------------
+def test_transfer_phase_lands_on_runtime_timeline():
+    from repro.core.phase_control import RollMuxRuntime
+
+    m, params = get_model("internlm2-1.8b")
+    rt = RollMuxRuntime(host_cache_gb=0.5)
+    router = DisaggRouter(m, params, DisaggConfig(
+        prefill_slots=1, decode_slots=2, max_seq_len=MAX_LEN,
+        temperature=0.0, kv_layout="paged", kv_block_size=4),
+        runtime=rt, job_id="jobA")
+    reqs = make_requests(3, max_new=4)
+    for r in reqs:
+        router.submit(r)
+    router.run()
+    pool = rt.pools["transfer"]
+    assert len(pool.timeline) == len(reqs)
+    assert all(who == "jobA:transfer" for who, _, _ in pool.timeline)
+    prof = rt.phase_profiles()["jobA"]
+    assert len(prof.transfer_s) == len(reqs)
+    assert prof.t_transfer > 0.0
+    # the transfer load is folded into the job's rollout-side critical path
+    assert prof.to_job().t_roll == pytest.approx(
+        prof.t_roll + prof.t_transfer)

@@ -286,3 +286,134 @@ def test_slo_contract_flows_from_inter_group_scheduler():
     for r, o in zip(make_requests(3), outs):
         ref_t, _ = reference(m, params, r)
         assert o.tokens == ref_t           # contract never changes tokens
+
+
+# ---------------------------------------------------------------------------
+# Expired-starving interaction (regression): expiry must not demote a
+# request that already hit its skip bound, and an expired barrier still
+# blocks younger work — otherwise expired-heavy overload re-opens the
+# starvation window the barrier exists to close.
+# ---------------------------------------------------------------------------
+def test_expired_starving_request_keeps_edf_position():
+    """A request at its skip bound with an *expired* deadline must keep its
+    EDF position.  The barrier usually leaves it as the only candidate, but
+    an older not-starving request can coexist with it (e.g. a rid readmitted
+    with stale bookkeeping on a persistent engine): demoting the starving
+    request for being expired would then let that older work jump it every
+    tick — the wedge the demotion carve-out closes."""
+    p = DeadlinePolicy(max_skips=2)
+    a = req(0, deadline=50.0)               # older, not urgent, admissible
+    b = req(1, deadline=5.0)                # overtaken max_skips times
+    waiting = [a, b]
+    p._note(waiting)
+    p._skips[1] = 2                          # b hit its bound -> barrier
+    # b's deadline has expired (now > 5).  Best-effort-last demotion would
+    # sort a first and pick it — the regression.  Starving b must win EDF.
+    i = p.pick(waiting, lambda r: True, now=10.0)
+    assert waiting[i].rid == 1
+
+
+def test_expired_barrier_still_blocks_younger():
+    p = DeadlinePolicy(max_skips=0)          # any refusal makes a barrier
+    a = req(0, deadline=5.0, max_new=30)
+    # a refused (too big), nothing else -> a is now a barrier
+    assert p.pick([a], lambda r: r.max_new_tokens < 10, now=0.0) is None
+    b = req(1, deadline=6.0)
+    # a's deadline expires; the younger admissible b must still wait
+    assert p.pick([a, b], lambda r: r.max_new_tokens < 10, now=20.0) is None
+    # a becomes admissible -> served first despite being expired
+    waiting = [a, b]
+    i = p.pick(waiting, lambda r: True, now=20.0)
+    assert waiting[i].rid == 0
+
+
+def _drive_starvation_with_clock(ops, max_skips):
+    """Bounded-starvation sweep with an advancing clock and short deadlines,
+    so a large fraction of the queue is *expired* at every decision — the
+    regime the expired-demotion bug wedged."""
+    p = DeadlinePolicy(max_skips=max_skips)
+    waiting: list[Request] = []
+    overtakes: dict[int, int] = {}
+    born: dict[int, int] = {}
+    rid, now = 0, 0.0
+    for kind, val in ops:
+        now += (val % 5)                     # clock advances past deadlines
+        if kind == 0:
+            waiting.append(req(rid, deadline=now + float(val % 4)))
+            born[rid] = rid
+            rid += 1
+        else:
+            admissible = {r.rid for j, r in enumerate(waiting)
+                          if (val >> (j % 10)) & 1}
+            i = p.pick(waiting, lambda r: r.rid in admissible, now=now)
+            if i is None:
+                continue
+            chosen = waiting.pop(i)
+            for r in waiting:
+                if born[r.rid] < born[chosen.rid]:
+                    overtakes[r.rid] = overtakes.get(r.rid, 0) + 1
+    for rid_, n in overtakes.items():
+        assert n <= max_skips, f"request {rid_} overtaken {n} times"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 1023)),
+                min_size=1, max_size=60),
+       st.integers(0, 5))
+def test_bounded_starvation_holds_with_expired_deadlines(ops, max_skips):
+    _drive_starvation_with_clock(ops, max_skips)
+
+
+# ---------------------------------------------------------------------------
+# on_reset: per-request state drops, measured hardware state survives
+# ---------------------------------------------------------------------------
+def test_deadline_on_reset_clears_per_request_state():
+    p = DeadlinePolicy(max_skips=0)
+    a = req(0, deadline=5.0, max_new=30)
+    assert p.pick([a], lambda r: r.max_new_tokens < 10) is None
+    assert p._skips.get(0, 0) >= 0 and 0 in p._seq
+    p.on_reset()
+    assert not p._seq and not p._skips
+    # next batch reuses rid 0: without the reset it would inherit the old
+    # arrival seq (and any barrier status) — now it is simply fresh
+    fresh = req(0, deadline=1.0)
+    assert p.pick([fresh], lambda r: True) == 0
+
+
+def test_slo_on_reset_keeps_service_estimate_and_discard_state():
+    p = SLOPolicy(time_per_token=0.5)
+    p.observe_step(9.0, 1)                   # sample 1: compile, discarded
+    p.observe_step(0.2, 2)                   # sample 2: initializes estimate
+    assert p.time_per_token == pytest.approx(0.1)
+    assert p._step_samples == 2
+    p.on_reset()
+    # the jit cache survives Engine.reset, so the calibration must too:
+    # a re-triggered first-sample discard would throw away a clean step
+    assert p.time_per_token == pytest.approx(0.1)
+    assert p._step_samples == 2
+    p.observe_step(0.3, 3)                   # post-reset step: EMA, no discard
+    assert p.time_per_token == pytest.approx(0.7 * 0.1 + 0.3 * 0.1)
+    assert not p._seq and not p._skips
+
+
+def test_slo_observe_step_guards_zero_tokens():
+    p = SLOPolicy(time_per_token=0.5)
+    p.observe_step(1.0, 0)                   # admitted-only tick: no decode
+    p.observe_step(-1.0, 4)                  # clock glitch
+    assert p._step_samples == 0              # neither consumed a sample
+    assert p.time_per_token == 0.5
+    p.observe_step(9.0, 1)
+    p.observe_step(0.2, 2)
+    assert p.time_per_token == pytest.approx(0.1)   # still NaN/inf-free
+
+
+def test_engine_reset_calls_policy_on_reset():
+    m, params = get_model("internlm2-1.8b")
+    eng = Engine(m, params, EngineConfig(num_slots=2, max_seq_len=MAX_LEN,
+                                         temperature=0.0, sched="deadline"))
+    for r in make_requests(2):
+        eng.submit(r)
+    eng.run()
+    assert eng.policy._seq or eng.policy._next_seq > 0
+    eng.reset()
+    assert not eng.policy._seq and not eng.policy._skips
