@@ -3,8 +3,11 @@ flash_attention (training), decode_attention (rollout, HBM-bound),
 rwkv6_scan (SSM archs). Each has a pure-jnp oracle in ref.py and a jit'd
 wrapper in ops.py; validation runs in interpret mode on CPU."""
 from repro.kernels.ops import (decode_attention_op, flash_attention_op,
-                               mamba2_scan_op, paged_decode_attention_op,
-                               rwkv6_scan_op)
+                               greedy_sample_op, mamba2_scan_op,
+                               paged_decode_attention_op, resolve_interpret,
+                               rwkv6_scan_op, set_interpret, topk_mask_op)
 
-__all__ = ["decode_attention_op", "flash_attention_op", "mamba2_scan_op",
-           "paged_decode_attention_op", "rwkv6_scan_op"]
+__all__ = ["decode_attention_op", "flash_attention_op", "greedy_sample_op",
+           "mamba2_scan_op", "paged_decode_attention_op",
+           "resolve_interpret", "rwkv6_scan_op", "set_interpret",
+           "topk_mask_op"]

@@ -1,46 +1,101 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret=True`` (default in this CPU container) runs the kernel bodies in
-the Pallas interpreter for validation; on real TPUs pass interpret=False.
-Model code opts in via ``use_kernels``; the dry-run uses the pure-JAX paths
-so roofline numbers come from XLA HLO.
+Interpret-mode selection is resolved **lazily, per call** — never frozen at
+import time.  The old module-level ``ON_TPU``/``DEFAULT_INTERPRET``
+constants silently kept whatever backend was active when this module was
+first imported, so flipping backends (or the engine's ``--kernel-backend``
+flag) after import could run the wrong path.  Resolution order:
+
+1. an explicit :func:`set_interpret` override (process-wide),
+2. the ``REPRO_PALLAS_INTERPRET`` env var (``1/true``, ``0/false`` or
+   ``auto``),
+3. whether JAX's default backend is a TPU *right now*.
+
+``ON_TPU`` and ``DEFAULT_INTERPRET`` remain importable for compatibility
+but are computed on attribute access (module ``__getattr__``), so they can
+no longer go stale.
 """
 from __future__ import annotations
+
+import os
+from typing import Optional
 
 import jax
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import (decode_attention,
                                             paged_decode_attention)
+from repro.kernels.sampling import greedy_sample, topk_mask
 from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels.mamba2_scan import mamba2_scan
 
-ON_TPU = jax.default_backend() == "tpu"
-DEFAULT_INTERPRET = not ON_TPU
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_interpret_override: Optional[bool] = None
+
+
+def set_interpret(value: Optional[bool]) -> None:
+    """Force interpret mode on (True) / off (False); ``None`` restores the
+    automatic env/backend resolution."""
+    global _interpret_override
+    _interpret_override = value
+
+
+def resolve_interpret() -> bool:
+    """Decide interpret mode at call time: override > env var > backend."""
+    if _interpret_override is not None:
+        return _interpret_override
+    env = os.environ.get(_ENV_VAR, "auto").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def __getattr__(name: str):
+    # live values for the legacy import-time constants
+    if name == "ON_TPU":
+        return jax.default_backend() == "tpu"
+    if name == "DEFAULT_INTERPRET":
+        return resolve_interpret()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def flash_attention_op(q, k, v, *, causal=True, window=None,
                        block_q=128, block_k=128):
     return flash_attention(q, k, v, causal=causal, window=window,
                            block_q=block_q, block_k=block_k,
-                           interpret=DEFAULT_INTERPRET)
+                           interpret=resolve_interpret())
 
 
-def decode_attention_op(q, k, v, length, *, block_k=512):
-    return decode_attention(q, k, v, length, block_k=block_k,
-                            interpret=DEFAULT_INTERPRET)
+def decode_attention_op(q, k, v, length, *, window=None, block_k=512):
+    return decode_attention(q, k, v, length, window=window, block_k=block_k,
+                            interpret=resolve_interpret())
 
 
-def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths):
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths, *,
+                              window=None, k_scale=None, v_scale=None):
     return paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
-                                  interpret=DEFAULT_INTERPRET)
+                                  window=window, k_scale=k_scale,
+                                  v_scale=v_scale,
+                                  interpret=resolve_interpret())
+
+
+def greedy_sample_op(logits, *, block_v=1024):
+    return greedy_sample(logits, block_v=block_v,
+                         interpret=resolve_interpret())
+
+
+def topk_mask_op(logits, k, *, block_v=1024):
+    return topk_mask(logits, k, block_v=block_v,
+                     interpret=resolve_interpret())
 
 
 def rwkv6_scan_op(r, k, v, log_w, u, *, chunk=64):
     return rwkv6_scan(r, k, v, log_w, u, chunk=chunk,
-                      interpret=DEFAULT_INTERPRET)
+                      interpret=resolve_interpret())
 
 
 def mamba2_scan_op(r, k, v, log_w, *, chunk=64):
     return mamba2_scan(r, k, v, log_w, chunk=chunk,
-                       interpret=DEFAULT_INTERPRET)
+                       interpret=resolve_interpret())

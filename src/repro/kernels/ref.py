@@ -28,8 +28,10 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
     return o.reshape(B, S, H, D).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v, length, *, scale=None):
-    """One-token GQA decode. q: (B,H,D); k/v: (B,S,Hkv,D); length: int32.
+def decode_attention_ref(q, k, v, length, *, window=None, scale=None):
+    """One-token GQA decode. q: (B,H,D); k/v: (B,S,Hkv,D); length: int32
+    scalar or (B,) per-row live prefix; window: optional sliding-window
+    size (the query sits at position length-1).
 
     Attends over cache positions [0, length). Returns (B,H,D)."""
     B, H, D = q.shape
@@ -39,27 +41,55 @@ def decode_attention_ref(q, k, v, length, *, scale=None):
     qg = q.reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    valid = jnp.arange(S) < length
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+    pos = jnp.arange(S)
+    valid = pos[None, :] < lengths[:, None]            # (B, S)
+    if window is not None:
+        valid &= (lengths[:, None] - 1 - pos[None, :]) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
     return o.reshape(B, H, D).astype(q.dtype)
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               window=None, k_scale=None, v_scale=None,
                                scale=None):
     """Block-table decode oracle: gather each row's physical blocks into a
     contiguous cache, then run :func:`decode_attention_ref` per row.
 
     q: (B,H,D); k_pool/v_pool: (NB,bs,Hkv,D); block_tables: (B,MB) int32;
-    lengths: (B,). Returns (B,H,D)."""
+    lengths: (B,).  ``k_scale``/``v_scale`` ((NB,bs) float32) dequantize
+    int8 pools before the gather.  Returns (B,H,D)."""
     from repro.models.attention import gather_blocks
+    if k_scale is not None:
+        k_pool = k_pool.astype(jnp.float32) * k_scale[..., None, None]
+        v_pool = v_pool.astype(jnp.float32) * v_scale[..., None, None]
     k = jax.vmap(lambda t: gather_blocks(k_pool, t, axis=0))(block_tables)
     v = jax.vmap(lambda t: gather_blocks(v_pool, t, axis=0))(block_tables)
     return jax.vmap(
         lambda qb, kb, vb, n: decode_attention_ref(
-            qb[None], kb[None], vb[None], n, scale=scale)[0]
-    )(q, k, v, lengths)
+            qb[None], kb[None], vb[None], n, window=window, scale=scale)[0]
+    )(q.astype(jnp.float32), k, v, lengths).astype(q.dtype)
+
+
+def greedy_sample_ref(logits):
+    """Fused greedy epilogue oracle: (tokens, logprobs) per row.
+
+    tokens: first-occurrence argmax; logprobs: log_softmax at the token."""
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp = jnp.take_along_axis(logp, tokens[:, None], axis=-1)[:, 0]
+    return tokens, lp
+
+
+def topk_mask_ref(logits, k: int):
+    """Top-k mask oracle: entries below the k-th largest per row become
+    NEG_INF; ties at the threshold all survive (like the kernel)."""
+    thresh = jnp.sort(logits.astype(jnp.float32), axis=-1)[:, -k]
+    return jnp.where(logits >= thresh[:, None],
+                     logits.astype(jnp.float32), NEG_INF)
 
 
 def rwkv6_scan_ref(r, k, v, log_w, u):

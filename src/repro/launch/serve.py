@@ -71,7 +71,8 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                      num_kv_blocks: int | None = None,
                      sched: str = "fifo", policy=None,
                      prefix_share: bool = False, group: int | None = None,
-                     disagg=None, model=None, params=None):
+                     disagg=None, kernel_backend: str = "jnp",
+                     kv_dtype: str | None = None, model=None, params=None):
     """Continuous batching: requests stream through the slot-pool engine
     (``kv="paged"`` serves from the shared block-pool KV layout;
     ``sched`` picks the admission policy and ``prefix_share`` enables
@@ -94,7 +95,9 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
                               kv_block_size=kv_block_size,
                               num_kv_blocks=num_kv_blocks, sched=sched,
                               policy=policy, prefix_share=prefix_share,
-                              group=group, disagg=disagg)
+                              group=group, disagg=disagg,
+                              kernel_backend=kernel_backend,
+                              kv_dtype=kv_dtype)
     dt = time.perf_counter() - t0
     n_tok = int(out["mask"].sum())
     stats = out["engine_stats"]
@@ -164,6 +167,16 @@ def _main():
     ap.add_argument("--decode-kv-blocks", type=int, default=None,
                     help="decode-side paged pool size (--disagg --kv "
                          "paged; default: --num-kv-blocks)")
+    ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
+                    default="jnp",
+                    help="decode-step backend (continuous engine only): "
+                         "jnp = vmapped model step; pallas = batched "
+                         "decode-attention kernels + fused greedy sampling "
+                         "(token-identical; recurrent archs fall back)")
+    ap.add_argument("--kv-dtype", choices=("auto", "int8"), default=None,
+                    help="paged KV storage dtype (--kv paged): int8 "
+                         "quantizes blocks with per-position scales, "
+                         "~halving KV memory per request")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
@@ -186,7 +199,9 @@ def _main():
                                num_kv_blocks=args.num_kv_blocks,
                                sched=args.sched,
                                prefix_share=args.prefix_share,
-                               group=args.group, disagg=disagg)
+                               group=args.group, disagg=disagg,
+                               kernel_backend=args.kernel_backend,
+                               kv_dtype=args.kv_dtype)
         extra = (f", slot util {res['slot_utilization']:.0%}, "
                  f"{res['decode_steps']} decode steps")
         if args.prefix_share:

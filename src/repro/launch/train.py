@@ -66,7 +66,9 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  temperature: float = 1.0, num_slots: int | None = None,
                  engine_block_size: int = 1, kv: str = "contiguous",
                  kv_block_size: int = 16, sched: str = "fifo",
-                 prefix_share: bool = False, slo_bound: float = 2.0,
+                 prefix_share: bool = False,
+                 kernel_backend: str = "jnp", kv_dtype: str | None = None,
+                 slo_bound: float = 2.0,
                  mux: str = "off", mux_staleness: int = 1, jobs: int = 2,
                  reward: str = "arith", reward_latency: float = 0.0,
                  reward_workers: int = 2, micro_groups: int | None = None,
@@ -94,7 +96,8 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
             max_new=max_new, lr=lr, temperature=temperature, rollout=rollout,
             num_slots=num_slots, engine_block_size=engine_block_size,
             kv=kv, kv_block_size=kv_block_size, sched=sched,
-            prefix_share=prefix_share, slo_bound=slo_bound,
+            prefix_share=prefix_share, kernel_backend=kernel_backend,
+            kv_dtype=kv_dtype, slo_bound=slo_bound,
             reward_fn=reward_fn)
 
     if cfg.mode == "off":
@@ -159,6 +162,16 @@ def _main():
                     help="radix prompt-prefix KV sharing (--kv paged): the "
                          "GRPO group's duplicated prompt prefills once and "
                          "its full blocks are pinned under all members")
+    ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
+                    default="jnp",
+                    help="engine decode backend (--rollout engine): jnp = "
+                         "vmapped model step; pallas = batched "
+                         "decode-attention kernels + fused greedy sampling "
+                         "(token-identical; recurrent archs fall back)")
+    ap.add_argument("--kv-dtype", choices=("auto", "int8"), default=None,
+                    help="engine paged KV storage dtype (--kv paged): int8 "
+                         "quantizes blocks with per-position scales, "
+                         "~halving rollout KV memory per request")
     ap.add_argument("--mux", choices=("off", "pipeline", "coexec", "stream"),
                     default="off",
                     help="phase multiplexing: 'off' runs rollout and "
@@ -202,6 +215,8 @@ def _main():
                        rollout=args.rollout, num_slots=args.slots,
                        kv=args.kv, kv_block_size=args.kv_block_size,
                        sched=args.sched, prefix_share=args.prefix_share,
+                       kernel_backend=args.kernel_backend,
+                       kv_dtype=args.kv_dtype,
                        slo_bound=args.slo_bound,
                        mux=args.mux, mux_staleness=args.mux_staleness,
                        jobs=args.jobs, reward=args.reward,

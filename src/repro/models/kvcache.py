@@ -103,23 +103,72 @@ def paged_names(cfg: ModelConfig) -> tuple[str, ...]:
                         if ax and "cache_seq" in ax))
 
 
+SCALE_SUFFIX = "_scale"
+
+
+def scale_names(cfg: ModelConfig) -> tuple[str, ...]:
+    """Companion per-position scale leaves an int8 paged cache carries,
+    one per paged leaf (``k`` -> ``k_scale``, ...)."""
+    return tuple(n + SCALE_SUFFIX for n in paged_names(cfg))
+
+
+def quantize_kv(x, pos_ndim: int):
+    """Symmetric per-token-position int8 quantization.
+
+    ``x``: float array whose leading ``pos_ndim`` axes identify a token
+    position (``(L, NB, bs)`` for a whole pool, ``(bs,)`` for one block's
+    positions); the feature axes beyond that share one scale, so a single
+    position can be requantized without touching its neighbours — exactly
+    what incremental decode writes need.  Returns ``(int8 values, float32
+    scales of shape x.shape[:pos_ndim])``; an all-zero position gets scale
+    1.0 so dequantization stays the identity on zeros.
+    """
+    xf = x.astype(jnp.float32)
+    red = tuple(range(pos_ndim, x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=red) if red else jnp.abs(xf)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.round(xf / scale.reshape(scale.shape + (1,) * len(red)))
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_kv`: broadcast each position's scale over
+    its feature axes."""
+    s = scale.reshape(scale.shape + (1,) * (q.ndim - scale.ndim))
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
 def init_paged_cache(cfg: ModelConfig, num_slots: int, max_len: int, *,
-                     block_size: int, num_blocks: int) -> dict:
+                     block_size: int, num_blocks: int,
+                     kv_dtype: str | None = None) -> dict:
     """Zeroed paged decode cache: ``cache_seq`` leaves become block pools
     ``(L, num_blocks + 1, block_size, ...)`` shared across slots (entry 0 is
     the null block), everything else keeps the per-slot layout. ``index``
-    is widened to a per-slot vector, as the serving engine expects."""
+    is widened to a per-slot vector, as the serving engine expects.
+
+    ``kv_dtype="int8"`` stores each paged pool as int8 plus a per-position
+    ``<name>_scale`` pool ``(L, num_blocks + 1, block_size)`` float32 —
+    roughly half the KV bytes of a bf16 pool at a per-position accuracy
+    budget of ~1/254 relative error."""
+    if kv_dtype not in (None, "auto", "int8"):
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+    int8 = kv_dtype == "int8"
     shapes = jax.eval_shape(lambda: init_cache(cfg, num_slots, max_len))
     paged = set(paged_names(cfg))
+    if int8 and not paged:
+        raise ValueError(
+            f"kv_dtype='int8' needs paged KV leaves; family {cfg.family!r} "
+            "has none to quantize")
     out = {}
     for name, sd in shapes.items():
         if name == "index":
             out[name] = jnp.zeros((num_slots,), jnp.int32)
         elif name in paged:
             # (L, B, S, *rest) -> (L, num_blocks + 1, block_size, *rest)
-            out[name] = jnp.zeros(
-                (sd.shape[0], num_blocks + 1, block_size) + sd.shape[3:],
-                sd.dtype)
+            pool = (sd.shape[0], num_blocks + 1, block_size) + sd.shape[3:]
+            out[name] = jnp.zeros(pool, jnp.int8 if int8 else sd.dtype)
+            if int8:
+                out[name + SCALE_SUFFIX] = jnp.ones(pool[:3], jnp.float32)
         else:
             out[name] = jnp.zeros(sd.shape, sd.dtype)
     return out

@@ -11,7 +11,9 @@ from repro.configs.base import ModelConfig, get_config
 from repro.configs.shapes import InputShape
 from repro.models import kvcache
 from repro.models.stacks import stack_forward, stack_init, stack_specs
-from repro.models.stacks_infer import stack_decode_step, stack_prefill
+from repro.models.stacks_infer import (kernel_supported, stack_decode_step,
+                                       stack_kernel_decode_step,
+                                       stack_prefill)
 
 
 @dataclass(frozen=True)
@@ -37,13 +39,18 @@ class Model:
         return kvcache.init_cache(self.cfg, batch, max_len, ring=ring)
 
     def init_paged_cache(self, num_slots: int, max_len: int, *,
-                         block_size: int, num_blocks: int) -> dict:
+                         block_size: int, num_blocks: int,
+                         kv_dtype: str | None = None) -> dict:
         return kvcache.init_paged_cache(self.cfg, num_slots, max_len,
                                         block_size=block_size,
-                                        num_blocks=num_blocks)
+                                        num_blocks=num_blocks,
+                                        kv_dtype=kv_dtype)
 
     def paged_cache_names(self) -> tuple[str, ...]:
         return kvcache.paged_names(self.cfg)
+
+    def scale_cache_names(self) -> tuple[str, ...]:
+        return kvcache.scale_names(self.cfg)
 
     def cache_logical_specs(self) -> dict:
         return kvcache.cache_specs(self.cfg)
@@ -53,6 +60,18 @@ class Model:
 
     def decode_step(self, params, token, cache, *, ring: bool = False):
         return stack_decode_step(params, self.cfg, token, cache, ring=ring)
+
+    def kernel_supported(self) -> bool:
+        """Whether the Pallas batched decode step serves this architecture."""
+        return kernel_supported(self.cfg)
+
+    def kernel_decode_step(self, params, token, cache, *, tables=None,
+                           interpret: bool = True):
+        """Batched one-token decode over a whole slot pool through the
+        Pallas decode-attention kernels (``stacks_infer.
+        stack_kernel_decode_step``); ``tables`` selects the paged layout."""
+        return stack_kernel_decode_step(params, self.cfg, token, cache,
+                                        tables=tables, interpret=interpret)
 
     # ---- abstract inputs for lowering ---------------------------------------
     def input_specs(self, shape: InputShape) -> dict:

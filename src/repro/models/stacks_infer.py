@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
+from repro.models import kvcache
 from repro.models import mamba2 as mb
 from repro.models import moe as moe_lib
 from repro.models import rwkv6 as rw
@@ -347,6 +348,145 @@ def stack_decode_step(p, cfg: ModelConfig, token, cache, *, ring: bool = False):
     else:
         raise ValueError(fam)
 
+    cache["index"] = index + 1
+    logits = _unembed(p, cfg, x)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, whole slot pool, Pallas attention)
+# ---------------------------------------------------------------------------
+def kernel_supported(cfg: ModelConfig) -> bool:
+    """Whether :func:`stack_kernel_decode_step` can serve this config.
+
+    Only GQA transformer stacks qualify: SSM/recurrent families carry no
+    sequence-shaped KV for the decode kernel to page, and MLA decodes in
+    the compressed-KV space (a different kernel entirely)."""
+    return cfg.family in ("dense", "vlm", "moe") and cfg.attention != "mla"
+
+
+def stack_kernel_decode_step(p, cfg: ModelConfig, token, cache, *,
+                             tables=None, interpret: bool = True):
+    """Batched one-token decode through the Pallas decode-attention kernels.
+
+    The engine-layout counterpart of :func:`stack_decode_step`: instead of
+    vmapping a batch=1 model step over slots, one call consumes the whole
+    slot pool with a per-slot ``index`` vector and runs
+    ``kernels.decode_attention`` (contiguous slot stripes, ``tables=None``)
+    or ``kernels.paged_decode_attention`` (block-table pools) per layer.
+    In the paged case the block table is scalar-prefetched into the kernel,
+    so no gathered contiguous view of the pool is ever materialized.
+
+    token: ``(N, 1)`` int32.  cache: the serving-cache layout —
+
+    * contiguous: ``k``/``v`` ``(L, N, S, Hkv, hd)`` slot stripes,
+      ``index`` ``(N,)``;
+    * paged (``tables`` ``(N, MB)`` int32): ``k``/``v`` pools
+      ``(L, NB+1, bs, Hkv, hd)`` (block 0 = null), optionally int8 with
+      per-position ``k_scale``/``v_scale`` pools ``(L, NB+1, bs)``
+      (quantize-on-write, dequantized inside the kernel's block loop).
+
+    Dead slots (table rows all 0 / ``index`` past the stripe) write into
+    the null block or fall off the stripe — don't-care positions attention
+    masks out, same as the vmapped jnp path.  Returns
+    ``(logits (N, V) f32, cache')``.
+    """
+    if not kernel_supported(cfg):
+        raise ValueError(
+            f"kernel decode step supports dense/vlm/moe GQA stacks only, "
+            f"not family={cfg.family!r} attention={cfg.attention!r}")
+    from repro.kernels.decode_attention import (decode_attention,
+                                                paged_decode_attention)
+
+    index = cache["index"]                              # (N,)
+    N = token.shape[0]
+    rows = jnp.arange(N)
+    x = jnp.take(p["embed"], token, axis=0)             # (N, 1, d)
+    if cfg.family == "dense" and cfg.local_global_ratio:
+        x = x * (cfg.d_model ** 0.5)
+    pos = index[:, None]                                # (N, 1) rope position
+    mrope_pos = None
+    if cfg.mrope:   # per-slot single-position ids (cf. stack_decode_step)
+        F = cfg.num_frontend_tokens
+        side = max(int(F ** 0.5), 1)
+        is_img = index < F
+        h = jnp.where(is_img, index // side, index)
+        w = jnp.where(is_img, index % side, index)
+        tt = jnp.where(is_img, 0, index - F + 1)
+        mrope_pos = jnp.stack([tt, h, w])[:, :, None].astype(jnp.int32)
+
+    quant = "k" + kvcache.SCALE_SUFFIX in cache
+    if tables is not None:
+        bs = cache["k"].shape[2]
+        MB = tables.shape[1]
+        blk = jnp.minimum(index // bs, MB - 1)
+        pid = tables[rows, blk]            # 0 (null block) when dead/overrun
+        off = index % bs
+
+    def body(x, xs):
+        lp, k_l, v_l, ks_l, vs_l, theta, window = xs
+        h = _norm(lp["ln1"], x, cfg)
+        q, k_new, v_new = attn.gqa_project_qkv(lp["attn"], cfg, h, pos,
+                                               rope_theta=theta,
+                                               mrope_positions=mrope_pos)
+        kr, vr = k_new[:, 0], v_new[:, 0]               # (N, Hkv, hd)
+        if tables is None:
+            # out-of-stripe writes (dead slots decoding past max_len) drop
+            k_l = k_l.at[rows, index].set(kr.astype(k_l.dtype))
+            v_l = v_l.at[rows, index].set(vr.astype(v_l.dtype))
+            o = decode_attention(q[:, 0], k_l, v_l, index + 1,
+                                 window=window, interpret=interpret)
+        else:
+            if quant:
+                kq, ks = kvcache.quantize_kv(kr, 1)
+                vq, vs = kvcache.quantize_kv(vr, 1)
+                k_l = k_l.at[pid, off].set(kq)
+                v_l = v_l.at[pid, off].set(vq)
+                ks_l = ks_l.at[pid, off].set(ks)
+                vs_l = vs_l.at[pid, off].set(vs)
+            else:
+                k_l = k_l.at[pid, off].set(kr.astype(k_l.dtype))
+                v_l = v_l.at[pid, off].set(vr.astype(v_l.dtype))
+            o = paged_decode_attention(q[:, 0], k_l, v_l, tables, index + 1,
+                                       window=window, k_scale=ks_l,
+                                       v_scale=vs_l, interpret=interpret)
+        a = jnp.einsum("bshe,hed->bsd", o[:, None], lp["attn"]["wo"])
+        x = x + a.astype(x.dtype)
+        h = _norm(lp["ln2"], x, cfg)
+        if "moe" in lp:
+            f, _ = moe_lib.moe_apply(lp["moe"], cfg, h)
+        else:
+            f = mlp_apply(lp["mlp"], h)
+        return x + f, (k_l, v_l, ks_l, vs_l)
+
+    theta_l, window_l = _layer_theta_window(cfg)
+    c0, c1 = cache["k"], cache["v"]
+    s0 = cache.get("k" + kvcache.SCALE_SUFFIX)
+    s1 = cache.get("v" + kvcache.SCALE_SUFFIX)
+
+    def _sl(t, lo, hi):
+        return None if t is None else t[lo:hi]
+
+    n_moe = cfg.num_layers - cfg.first_dense_layers if cfg.is_moe else 0
+    n_dense = cfg.num_layers - n_moe
+    if cfg.is_moe and cfg.first_dense_layers:
+        xs_d = (p["dense_layers"], c0[:n_dense], c1[:n_dense],
+                _sl(s0, 0, n_dense), _sl(s1, 0, n_dense),
+                theta_l[:n_dense], window_l[:n_dense])
+        xs_m = (p["layers"], c0[n_dense:], c1[n_dense:],
+                _sl(s0, n_dense, cfg.num_layers),
+                _sl(s1, n_dense, cfg.num_layers),
+                theta_l[n_dense:], window_l[n_dense:])
+        x, kv_d = jax.lax.scan(body, x, xs_d)
+        x, kv_m = jax.lax.scan(body, x, xs_m)
+        kv = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), kv_d, kv_m)
+    else:
+        xs = (p["layers"], c0, c1, s0, s1, theta_l, window_l)
+        x, kv = jax.lax.scan(body, x, xs)
+    cache["k"], cache["v"] = kv[0], kv[1]
+    if quant:
+        cache["k" + kvcache.SCALE_SUFFIX] = kv[2]
+        cache["v" + kvcache.SCALE_SUFFIX] = kv[3]
     cache["index"] = index + 1
     logits = _unembed(p, cfg, x)
     return logits[:, 0], cache

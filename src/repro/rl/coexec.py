@@ -128,6 +128,8 @@ class GRPOJob:
                  engine_block_size: int = 1, kv: str = "contiguous",
                  kv_block_size: int = 16, num_kv_blocks: Optional[int] = None,
                  sched: str = "fifo", prefix_share: bool = False,
+                 kernel_backend: str = "jnp",
+                 kv_dtype: Optional[str] = None,
                  token_budget: Optional[int] = None, slo_bound: float = 2.0,
                  reward_fn=None):
         if rollout not in ("static", "engine"):
@@ -147,6 +149,8 @@ class GRPOJob:
         self.num_kv_blocks = num_kv_blocks
         self.sched = sched
         self.prefix_share = prefix_share
+        self.kernel_backend = kernel_backend
+        self.kv_dtype = kv_dtype
         # per-job token budget for deadline/SLO admission: what one run
         # permit lets this job put in flight — a full GRPO iteration's
         # rollout (batch * group members, max_new decode tokens each).
@@ -198,7 +202,9 @@ class GRPOJob:
                 block_size=self.engine_block_size, kv_layout=self.kv,
                 kv_block_size=self.kv_block_size,
                 num_kv_blocks=self.num_kv_blocks, sched=self.sched,
-                prefix_share=self.prefix_share),
+                prefix_share=self.prefix_share,
+                kernel_backend=self.kernel_backend,
+                kv_dtype=self.kv_dtype),
                 policy=self._make_policy())
             self._engines[max_seq_len] = eng
         return eng
@@ -220,7 +226,8 @@ class GRPOJob:
                 kv_layout=self.kv, kv_block_size=self.kv_block_size,
                 num_kv_blocks=self.num_kv_blocks, engine=eng,
                 prefix_share=self.prefix_share, group=self.group,
-                job_id=self.job_id)
+                job_id=self.job_id, kernel_backend=self.kernel_backend,
+                kv_dtype=self.kv_dtype)
         else:
             out = generate(self.model, params, prompts, k1, self.sampler)
         jax.block_until_ready(out["completions"])
@@ -256,7 +263,9 @@ class GRPOJob:
                     block_size=self.engine_block_size, kv_layout=self.kv,
                     kv_block_size=self.kv_block_size,
                     num_kv_blocks=self.num_kv_blocks, engine=eng,
-                    prefix_share=self.prefix_share, job_id=self.job_id):
+                    prefix_share=self.prefix_share, job_id=self.job_id,
+                    kernel_backend=self.kernel_backend,
+                    kv_dtype=self.kv_dtype):
                 on_group(gout)
         else:
             out = generate(self.model, params, prompts, k1, self.sampler)

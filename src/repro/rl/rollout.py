@@ -70,7 +70,8 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
 def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
                     frontend, *, num_slots, block_size, kv_layout,
                     kv_block_size, num_kv_blocks, engine, sched, policy,
-                    prefix_share, group, job_id, disagg=None):
+                    prefix_share, group, job_id, disagg=None,
+                    kernel_backend="jnp", kv_dtype=None):
     """Shared engine setup for the batch and streaming rollout executors:
     build a fresh engine (or validate + ``reset`` a persistent one) and
     turn the prompt rows into the pending request deque.  ``disagg``
@@ -100,7 +101,9 @@ def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
                 kv_layout=kv_layout, kv_block_size=kv_block_size,
                 decode_kv_blocks=opts.pop("decode_kv_blocks",
                                           num_kv_blocks),
-                sched=sched, prefix_share=prefix_share, **opts)
+                sched=sched, prefix_share=prefix_share,
+                kernel_backend=opts.pop("kernel_backend", kernel_backend),
+                kv_dtype=opts.pop("kv_dtype", kv_dtype), **opts)
         engine = DisaggRouter(model, params, cfg, rng=rng, policy=policy,
                               job_id=job_id)
     elif engine is None:
@@ -110,7 +113,8 @@ def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
             eos_id=sampler.eos_id, temperature=sampler.temperature,
             block_size=block_size, kv_layout=kv_layout,
             kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-            sched=sched, prefix_share=prefix_share),
+            sched=sched, prefix_share=prefix_share,
+            kernel_backend=kernel_backend, kv_dtype=kv_dtype),
             rng=rng, policy=policy)
     else:
         cfg = engine.config
@@ -133,6 +137,17 @@ def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
         if prefix_share and not cfg.prefix_share:
             raise ValueError("persistent engine was built without "
                              "prefix_share")
+        # decode backend and KV storage dtype are baked into the jitted
+        # fns / pool layout — a disagreeing request would silently serve
+        # the engine's own configuration, so refuse
+        if cfg.kernel_backend != kernel_backend:
+            raise ValueError(
+                f"persistent engine kernel_backend="
+                f"{cfg.kernel_backend!r} != requested {kernel_backend!r}")
+        if cfg.kv_dtype != kv_dtype:
+            raise ValueError(
+                f"persistent engine kv_dtype={cfg.kv_dtype!r} != "
+                f"requested {kv_dtype!r}")
         engine.reset(params, rng)
     pending = deque()
     for i in range(B):
@@ -154,7 +169,9 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
                         num_kv_blocks: int | None = None, engine=None,
                         sched: str = "fifo", policy=None,
                         prefix_share: bool = False, group: int | None = None,
-                        job_id: str | None = None, disagg=None):
+                        job_id: str | None = None, disagg=None,
+                        kernel_backend: str = "jnp",
+                        kv_dtype: str | None = None):
     """Rollout-phase executor backed by the continuous-batching engine.
 
     Drop-in alternative to :func:`generate`: same inputs, same output dict
@@ -200,6 +217,15 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     ``DisaggConfig``.  A persistent ``engine`` may itself be a
     ``DisaggRouter`` — ``reset`` drops un-adopted transfer handles and
     asserts both pools leak-free.
+
+    ``kernel_backend="pallas"`` serves decode through the batched Pallas
+    decode-attention kernels (token-identical to the default vmapped-step
+    path; see ``serve.engine.EngineConfig``), and ``kv_dtype="int8"``
+    (paged only) stores KV blocks quantized with per-position scales —
+    roughly double the live requests at equal KV memory for a bounded
+    logprob perturbation.  Both are baked into a persistent engine; a
+    mismatching request raises rather than silently serving the engine's
+    own configuration.
     """
     import numpy as np
 
@@ -212,7 +238,7 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
         engine=engine, sched=sched, policy=policy,
         prefix_share=prefix_share, group=group, job_id=job_id,
-        disagg=disagg)
+        disagg=disagg, kernel_backend=kernel_backend, kv_dtype=kv_dtype)
     # backpressure-aware drive: a full queue (max_waiting) defers
     # submission until the engine drains instead of crashing
     while pending or not engine.idle:
@@ -251,7 +277,9 @@ def generate_continuous_stream(model, params, prompts, rng,
                                num_kv_blocks: int | None = None, engine=None,
                                sched: str = "fifo", policy=None,
                                prefix_share: bool = False,
-                               job_id: str | None = None, disagg=None):
+                               job_id: str | None = None, disagg=None,
+                               kernel_backend: str = "jnp",
+                               kv_dtype: str | None = None):
     """Streaming rollout executor: yield completed GRPO prompt **groups**
     the moment their last member finishes decoding, while the engine keeps
     serving the stragglers.
@@ -289,7 +317,7 @@ def generate_continuous_stream(model, params, prompts, rng,
         kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
         engine=engine, sched=sched, policy=policy,
         prefix_share=prefix_share, group=group, job_id=job_id,
-        disagg=disagg)
+        disagg=disagg, kernel_backend=kernel_backend, kv_dtype=kv_dtype)
     engine.harvest()                    # drop any stale pre-session leftovers
     buckets: dict[int, list] = {}
     sizes = [min(B, (gi + 1) * g) - gi * g for gi in range((B + g - 1) // g)]

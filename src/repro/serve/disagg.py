@@ -112,7 +112,8 @@ class KVTransferHandle:
 
 
 @functools.lru_cache(maxsize=32)
-def _transfer_fns(model, max_seq_len: int, kv_block_size: int):
+def _transfer_fns(model, max_seq_len: int, kv_block_size: int,
+                  kv_dtype=None):
     """Jitted handle-adoption gather, shared per serving shape.
 
     ``fetch`` materializes a batch=1 prefill-shaped cache view from the
@@ -123,13 +124,35 @@ def _transfer_fns(model, max_seq_len: int, kv_block_size: int):
     slot's writes: decode never reads a position before writing it, so
     the adopted slot is value-identical to a monolithic prefill
     everywhere it matters.  Pure copies, no arithmetic — bit-exact.
+
+    ``kv_dtype="int8"`` is the one exception to "no arithmetic": the
+    handle's pinned blocks live quantized in the prefill pool, so fetch
+    gathers their per-position scales too and dequantizes — the
+    interchange format stays a float prefill-shaped cache either way,
+    and the decode engine's scatter re-quantizes on the block write.
+    Quantizing an already-dequantized block reproduces the same int8
+    payload and scale (the max-magnitude position pins the scale), so
+    adopted blocks in the decode pool are still bit-identical to a
+    monolithic int8 admit.
     """
+    from repro.models import kvcache
+    SUF = kvcache.SCALE_SUFFIX
+    quant = kv_dtype == "int8"
+    view_dtype = jnp.dtype(model.cfg.dtype)
+
     def fetch_fn(src_leaves, table_row, tails, n_full):
         out = {}
         for name, pool in src_leaves.items():
+            if name.endswith(SUF):
+                continue                    # consumed beside the parent leaf
             # (L, max_blocks * block_size, *rest) contiguous sequence view
             seq = gather_blocks(pool, table_row, axis=1)
+            if quant:
+                s = gather_blocks(src_leaves[name + SUF], table_row, axis=1)
+                seq = kvcache.dequantize_kv(seq, s, view_dtype)
             if name in tails:
+                # tail snapshots are float (taken from the prefill output
+                # before any block write), so the splice happens in float
                 seq = jax.lax.dynamic_update_slice_in_dim(
                     seq, tails[name].astype(seq.dtype),
                     n_full * kv_block_size, axis=1)
@@ -158,16 +181,34 @@ class PrefillEngine:
         self.policy = policy if policy is not None else \
             make_policy(config.sched)
         self.paged = config.kv_layout == "paged"
+        # mirror Engine's backend resolution so the fns cache entry is
+        # shared with the decode engine it feeds; prefill itself never
+        # decodes, so unsupported families just fall back quietly here
+        kb = config.kernel_backend
+        if kb == "pallas" and not model.kernel_supported():
+            kb = "jnp"
+        self.kernel_backend = kb
+        self._kv_dtype = (None if config.kv_dtype == "auto"
+                          else config.kv_dtype)
+        if kb == "pallas":
+            from repro.kernels.ops import resolve_interpret
+            interp = resolve_interpret()
+        else:
+            interp = True
         if self.paged:
             self.slots = PagedSlotManager(
                 model, config.num_slots, config.max_seq_len,
                 block_size=config.kv_block_size,
-                num_blocks=config.num_kv_blocks)
+                num_blocks=config.num_kv_blocks,
+                kv_dtype=self._kv_dtype)
             self._fns = _paged_engine_fns(
                 model, config.max_seq_len, config.kv_block_size,
-                config.temperature, config.eos_id)
+                config.temperature, config.eos_id,
+                kernel_backend=kb, kv_dtype=self._kv_dtype,
+                interpret=interp)
             self._xfer = _transfer_fns(model, config.max_seq_len,
-                                       config.kv_block_size)
+                                       config.kv_block_size,
+                                       kv_dtype=self._kv_dtype)
             N = config.num_slots
             # dummy per-slot rows the shared scatter fn updates; the
             # prefill engine never decodes, so they are write-only
@@ -180,7 +221,8 @@ class PrefillEngine:
             # so there is no donor pool — capacity is resident handles
             self.slots = None
             self._fns = _engine_fns(
-                model, config.max_seq_len, config.temperature, config.eos_id)
+                model, config.max_seq_len, config.temperature, config.eos_id,
+                kernel_backend=kb, interpret=interp)
         self.radix = (RadixPrefixIndex(self.slots.alloc)
                       if config.prefix_share else None)
         self.ready: list[KVTransferHandle] = []
@@ -337,6 +379,9 @@ class PrefillEngine:
             row[:len(handle.block_ids)] = handle.block_ids
             src = {name: self.slots.cache[name]
                    for name in self.slots.paged_names}
+            if self._kv_dtype == "int8":
+                src.update({name: self.slots.cache[name]
+                            for name in self.model.scale_cache_names()})
             n_full = handle.req.prompt_len // self.config.kv_block_size
             one.update(self._xfer["fetch"](
                 src, jnp.asarray(row), handle.tail,

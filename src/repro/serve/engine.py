@@ -92,6 +92,13 @@ class EngineConfig:
                                       # a policy object to Engine(policy=...)
     prefix_share: bool = False        # radix prompt-prefix KV sharing
                                       # (paged layout only)
+    kernel_backend: str = "jnp"       # decode-step backend: "jnp" (vmapped
+                                      # model step) | "pallas" (batched
+                                      # decode-attention kernels + fused
+                                      # sampling epilogue)
+    kv_dtype: Optional[str] = None    # paged KV storage: None/"auto" keeps
+                                      # the model dtype, "int8" quantizes
+                                      # blocks with per-position scales
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -109,6 +116,14 @@ class EngineConfig:
         if self.prefix_share and self.kv_layout != "paged":
             raise ValueError("prefix_share requires kv_layout='paged' "
                              "(sharing is block-granular)")
+        if self.kernel_backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown kernel_backend "
+                             f"{self.kernel_backend!r}")
+        if self.kv_dtype not in (None, "auto", "int8"):
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r}")
+        if self.kv_dtype == "int8" and self.kv_layout != "paged":
+            raise ValueError("kv_dtype='int8' requires kv_layout='paged' "
+                             "(quantization is per KV block)")
 
 
 @dataclass
@@ -139,10 +154,37 @@ class EngineStats:
         return self.decode_time_s / max(self.steps, 1)
 
 
+def _make_sampler(temperature: float, kernel_backend: str, interpret: bool):
+    """(logits, key) -> (next_token (N,), token_logprob (N,)).
+
+    The pallas backend fuses the greedy argmax + logprob epilogue into one
+    kernel pass over the vocabulary (``kernels.sampling.greedy_sample``);
+    sampled decoding keeps ``jax.random.categorical`` (the draw itself
+    needs the full distribution either way)."""
+    def sample_logp(logits, key):
+        if temperature == 0:
+            if kernel_backend == "pallas":
+                from repro.kernels.sampling import greedy_sample
+                return greedy_sample(logits, interpret=interpret)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits / temperature, axis=-1).astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits, -1)
+        return nxt, jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+    return sample_logp
+
+
 @functools.lru_cache(maxsize=32)
-def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
+def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int,
+                kernel_backend: str = "jnp", interpret: bool = True):
     """Jitted prefill / admit / decode-block shared by all engines with the
-    same serving shape (keyed on the hashable frozen ``Model``)."""
+    same serving shape (keyed on the hashable frozen ``Model``).
+
+    ``kernel_backend="pallas"`` swaps the decode block's vmapped model step
+    for the batched Pallas path (``Model.kernel_decode_step``: one call per
+    step over the whole slot pool, decode attention in a kernel) plus the
+    fused greedy sampling epilogue; admission/prefill stay shared."""
 
     def prefill_fn(params, prompt, frontend):
         cache = model.init_cache(1, max_seq_len)
@@ -184,21 +226,18 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
 
     pool_decode = jax.vmap(decode_one, in_axes=(None, 0, cache_axes),
                            out_axes=(0, cache_axes))
-
-    def sample(logits, key):
-        if temperature == 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / temperature, axis=-1).astype(jnp.int32)
+    sample_logp = _make_sampler(temperature, kernel_backend, interpret)
 
     def block_fn(params, last_logits, cache, alive, remaining, keys):
         def step(carry, key):
             logits, cache, alive, remaining = carry
-            nxt = sample(logits, key)                       # (N,)
-            logp = jax.nn.log_softmax(logits, -1)
-            tok_logp = jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+            nxt, tok_logp = sample_logp(logits, key)        # (N,), (N,)
             rec = alive & (remaining > 0)
-            logits, cache = pool_decode(params, nxt, cache)
+            if kernel_backend == "pallas":
+                logits, cache = model.kernel_decode_step(
+                    params, nxt[:, None], cache, interpret=interpret)
+            else:
+                logits, cache = pool_decode(params, nxt, cache)
             alive = alive & (nxt != eos_id)
             remaining = remaining - rec.astype(jnp.int32)
             return (logits, cache, alive, remaining), (nxt, tok_logp, rec)
@@ -213,7 +252,10 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int):
 
 @functools.lru_cache(maxsize=32)
 def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
-                      temperature: float, eos_id: int):
+                      temperature: float, eos_id: int,
+                      kernel_backend: str = "jnp",
+                      kv_dtype: Optional[str] = None,
+                      interpret: bool = True):
     """Jitted admit / decode-block for the paged KV layout.
 
     Admission scatters a prefilled contiguous cache into the slot's block
@@ -223,6 +265,19 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
     only the block that step wrote.  Dead / over-budget slots carry
     all-zero table rows, so their writes land in the null block 0.
 
+    ``kernel_backend="pallas"`` replaces the gather/vmap/scatter decode
+    with one batched ``Model.kernel_decode_step`` per step: the block
+    tables are scalar-prefetched into the decode-attention kernel, so the
+    contiguous view is never materialized.
+
+    ``kv_dtype="int8"`` stores paged pools quantized with per-position
+    scales (``models.kvcache.quantize_kv``): admission quantizes on the
+    block write, the jnp decode path dequantizes the gathered view (and
+    writes back only the one freshly written position, keeping stored
+    blocks stable), and the pallas path dequantizes inside the kernel's
+    block loop.  Radix snapshots stay float — sharing quantizes on the
+    tail-block write like any other write.
+
     Besides the fused ``admit`` (prefill + scatter, the non-sharing fast
     path), the prefix-sharing engine uses the split pieces: ``prefill``
     runs the model once, ``scatter`` writes a given prefill result through
@@ -231,7 +286,11 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
     admits a radix hit with *no* model compute — cached logits, cached
     slot rows, and a copy-on-write tail block seeded from the snapshot.
     """
+    from repro.models import kvcache
+    SUF = kvcache.SCALE_SUFFIX
     paged = frozenset(model.paged_cache_names())
+    quant = kv_dtype == "int8"
+    view_dtype = jnp.dtype(model.cfg.dtype)       # gathered-view dtype
     MB = blocks_for(max_seq_len, kv_block_size)   # table entries per slot
     S_view = MB * kv_block_size                   # gathered view length
 
@@ -255,6 +314,8 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
         null block) plus the logits/alive/budget row updates."""
         out = {}
         for name, leaf in pool.items():
+            if name.endswith(SUF):
+                continue                  # written beside the parent leaf
             upd = one[name]
             if name == "index":
                 out[name] = leaf.at[slot].set(jnp.asarray(upd, leaf.dtype))
@@ -262,7 +323,12 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
                 u = _blockify(upd[:, 0])                    # (L, MB, bs, ...)
                 # unassigned / masked table entries are 0: their blocks
                 # fall through to the null block
-                out[name] = leaf.at[:, table_row].set(u.astype(leaf.dtype))
+                if quant:
+                    q, s = kvcache.quantize_kv(u, 3)
+                    out[name] = leaf.at[:, table_row].set(q)
+                    out[name + SUF] = pool[name + SUF].at[:, table_row].set(s)
+                else:
+                    out[name] = leaf.at[:, table_row].set(u.astype(leaf.dtype))
             else:
                 start = (0, slot) + (0,) * (leaf.ndim - 2)
                 out[name] = jax.lax.dynamic_update_slice(
@@ -298,15 +364,25 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
         the donor's snapshot, and restore the cached post-prompt logits."""
         out = {}
         for name, leaf in pool.items():
+            if name.endswith(SUF):
+                continue                  # written beside the parent leaf
             if name == "index":
                 out[name] = leaf.at[slot].set(
                     jnp.asarray(index_val, leaf.dtype))
             elif name in paged:
                 if name in tail:
-                    out[name] = leaf.at[:, tail_pid].set(
-                        tail[name].astype(leaf.dtype))
+                    if quant:             # snapshots are float: quantize
+                        q, s = kvcache.quantize_kv(tail[name], 2)
+                        out[name] = leaf.at[:, tail_pid].set(q)
+                        out[name + SUF] = \
+                            pool[name + SUF].at[:, tail_pid].set(s)
+                    else:
+                        out[name] = leaf.at[:, tail_pid].set(
+                            tail[name].astype(leaf.dtype))
                 else:           # prompt ends on a block boundary: no tail
                     out[name] = leaf
+                    if quant:
+                        out[name + SUF] = pool[name + SUF]
             else:
                 upd = slot_leaves[name]
                 start = (0, slot) + (0,) * (leaf.ndim - 2)
@@ -315,21 +391,33 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
         return (out, last_logits.at[slot].set(logits),
                 alive.at[slot].set(True), remaining.at[slot].set(budget))
 
-    cache_axes = {k: (0 if k == "index" else (None if k in paged else 1))
-                  for k in model.cache_logical_specs()}
-    slot_axes = {k: ax for k, ax in cache_axes.items() if k not in paged}
+    cache_keys = tuple(model.cache_logical_specs()) + \
+        (model.scale_cache_names() if quant else ())
+    cache_axes = {k: (0 if k == "index" else
+                      (None if k in paged or k.endswith(SUF) else 1))
+                  for k in cache_keys}
+    slot_axes = {k: ax for k, ax in cache_axes.items()
+                 if k not in paged and not k.endswith(SUF)}
 
     def decode_one(params, token, cache, table_row):
         # gather this slot's blocks into a contiguous (batch=1) view, run
         # the model's own decode step, and hand back the written block
+        # (int8: dequantize the view, hand back only the written *row* so
+        # already-stored positions are never re-quantized)
         old_idx = cache["index"]
         cache_b = {}
         for k, v in cache.items():
             if k == "index":
                 cache_b[k] = v
+            elif k.endswith(SUF):
+                continue
             elif k in paged:
                 # (L, S_view, *rest) with the batch=1 axis re-grown
-                cache_b[k] = gather_blocks(v, table_row, axis=1)[:, None]
+                g = gather_blocks(v, table_row, axis=1)
+                if quant:
+                    s = gather_blocks(cache[k + SUF], table_row, axis=1)
+                    g = kvcache.dequantize_kv(g, s, view_dtype)
+                cache_b[k] = g[:, None]
             else:
                 cache_b[k] = v[:, None]
         logits, cache_b = model.decode_step(
@@ -341,40 +429,53 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
             if k == "index":
                 out[k] = v
             elif k in paged:
-                written[k] = jax.lax.dynamic_slice_in_dim(
-                    v[:, 0], b * kv_block_size, kv_block_size, axis=1)
+                if quant:
+                    written[k] = jax.lax.dynamic_slice_in_dim(
+                        v[:, 0], jnp.minimum(old_idx, S_view - 1), 1,
+                        axis=1)[:, 0]       # just the new row (L, ...)
+                else:
+                    written[k] = jax.lax.dynamic_slice_in_dim(
+                        v[:, 0], b * kv_block_size, kv_block_size, axis=1)
             else:
                 out[k] = v[:, 0]
-        return logits[0], out, written, pid
+        return logits[0], out, written, pid, old_idx % kv_block_size
 
     pool_decode = jax.vmap(
         decode_one, in_axes=(None, 0, cache_axes, 0),
-        out_axes=(0, slot_axes, {k: 0 for k in paged}, 0))
+        out_axes=(0, slot_axes, {k: 0 for k in paged}, 0, 0))
+    sample_logp = _make_sampler(temperature, kernel_backend, interpret)
 
-    def sample(logits, key):
-        if temperature == 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / temperature, axis=-1).astype(jnp.int32)
+    def jnp_decode(params, nxt, cache, tables):
+        logits, slot_cache, written, pids, offs = pool_decode(
+            params, nxt, cache, tables)
+        new_cache = dict(cache) | dict(slot_cache)
+        for k in paged:
+            # distinct live slots own distinct blocks, so pids collide
+            # only at the null block 0 (dead slots) — a don't-care write
+            if quant:
+                rows = jnp.moveaxis(written[k], 0, 1)       # (L, N, ...)
+                q, s = kvcache.quantize_kv(rows, 2)
+                new_cache[k] = cache[k].at[:, pids, offs].set(q)
+                new_cache[k + SUF] = cache[k + SUF].at[:, pids, offs].set(s)
+            else:
+                blk = jnp.moveaxis(written[k], 0, 1)        # (L, N, bs, ...)
+                new_cache[k] = cache[k].at[:, pids].set(blk)
+        return logits, new_cache
 
     def block_fn(params, last_logits, cache, tables, alive, remaining, keys):
         def step(carry, key):
             logits, cache, alive, remaining = carry
-            nxt = sample(logits, key)                       # (N,)
-            logp = jax.nn.log_softmax(logits, -1)
-            tok_logp = jnp.take_along_axis(logp, nxt[:, None], -1)[:, 0]
+            nxt, tok_logp = sample_logp(logits, key)        # (N,), (N,)
             rec = alive & (remaining > 0)
-            logits, slot_cache, written, pids = pool_decode(
-                params, nxt, cache, tables)
-            new_cache = dict(slot_cache)
-            for k in paged:
-                blk = jnp.moveaxis(written[k], 0, 1)        # (L, N, bs, ...)
-                # distinct live slots own distinct blocks, so pids collide
-                # only at the null block 0 (dead slots) — a don't-care write
-                new_cache[k] = cache[k].at[:, pids].set(blk)
+            if kernel_backend == "pallas":
+                logits, cache = model.kernel_decode_step(
+                    params, nxt[:, None], cache, tables=tables,
+                    interpret=interpret)
+            else:
+                logits, cache = jnp_decode(params, nxt, cache, tables)
             alive = alive & (nxt != eos_id)
             remaining = remaining - rec.astype(jnp.int32)
-            return (logits, new_cache, alive, remaining), (nxt, tok_logp, rec)
+            return (logits, cache, alive, remaining), (nxt, tok_logp, rec)
 
         carry, out = jax.lax.scan(
             step, (last_logits, cache, alive, remaining), keys)
@@ -402,20 +503,8 @@ class Engine:
         self.policy = policy if policy is not None else \
             make_policy(config.sched)
         self.paged = config.kv_layout == "paged"
-        if self.paged:
-            self.slots = PagedSlotManager(
-                model, config.num_slots, config.max_seq_len,
-                block_size=config.kv_block_size,
-                num_blocks=config.num_kv_blocks)
-            self._fns = _paged_engine_fns(
-                model, config.max_seq_len, config.kv_block_size,
-                config.temperature, config.eos_id)
-        else:
-            self.slots = SlotManager(model, config.num_slots,
-                                     config.max_seq_len)
-            self._fns = _engine_fns(
-                model, config.max_seq_len, config.temperature, config.eos_id)
-        self._admit_fn, self._block = self._fns["admit"], self._fns["block"]
+        self.kernel_backend = self._resolve_backend(config.kernel_backend)
+        self._build_fns()
         self.radix = (RadixPrefixIndex(self.slots.alloc)
                       if config.prefix_share else None)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -430,6 +519,77 @@ class Engine:
         self._unharvested: list[RequestOutput] = []
         self.stats = EngineStats()
         self.clock = None             # optional wall-clock for trace drivers
+
+    def _resolve_backend(self, backend: str) -> str:
+        """Effective decode backend for this model: recurrent families
+        (rwkv6: no sequence-shaped KV for the kernel to touch) silently
+        fall back from pallas to jnp; families the kernel path cannot
+        serve faithfully (MLA/hybrid/audio) refuse loudly."""
+        if backend != "pallas" or self.model.kernel_supported():
+            return backend
+        if self.model.cfg.family == "ssm":
+            return "jnp"            # pure recurrent state: nothing to page
+        raise ValueError(
+            f"kernel_backend='pallas' does not support family "
+            f"{self.model.cfg.family!r} / attention "
+            f"{self.model.cfg.attention!r}")
+
+    def _build_fns(self) -> None:
+        """(Re)build the jitted fns + slot pool for the current config and
+        effective backend (cached per shape, so flips are cheap)."""
+        from repro.kernels.ops import resolve_interpret
+        model, config = self.model, self.config
+        # interpret mode resolved once per engine (at call time relative to
+        # the lazy env/flag override) and baked into the jitted fns
+        interp = (resolve_interpret()
+                  if self.kernel_backend == "pallas" else True)
+        kv_dtype = None if config.kv_dtype == "auto" else config.kv_dtype
+        if self.paged:
+            if not hasattr(self, "slots"):
+                self.slots = PagedSlotManager(
+                    model, config.num_slots, config.max_seq_len,
+                    block_size=config.kv_block_size,
+                    num_blocks=config.num_kv_blocks,
+                    kv_dtype=kv_dtype)
+            self._fns = _paged_engine_fns(
+                model, config.max_seq_len, config.kv_block_size,
+                config.temperature, config.eos_id,
+                kernel_backend=self.kernel_backend, kv_dtype=kv_dtype,
+                interpret=interp)
+        else:
+            if kv_dtype is not None:
+                raise ValueError("kv_dtype requires kv_layout='paged'")
+            if not hasattr(self, "slots"):
+                self.slots = SlotManager(model, config.num_slots,
+                                         config.max_seq_len)
+            self._fns = _engine_fns(
+                model, config.max_seq_len, config.temperature, config.eos_id,
+                kernel_backend=self.kernel_backend, interpret=interp)
+        self._admit_fn, self._block = self._fns["admit"], self._fns["block"]
+
+    def set_kernel_backend(self, backend: str) -> None:
+        """Switch the decode backend on a drained engine.
+
+        The jitted decode block is rebuilt (cached per shape, so A/B flips
+        re-use earlier compilations) and the admission policy is told via
+        ``on_backend_change()``: a backend flip invalidates any learned
+        per-token service-time estimate — the SLO policy re-arms its
+        first-sample compile discard and falls back to its initial
+        estimate rather than steering deadlines with the old backend's
+        timings."""
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown kernel_backend {backend!r}")
+        if backend == self.config.kernel_backend:
+            return
+        if not self.idle:
+            raise RuntimeError("set_kernel_backend() on a live engine; "
+                               "drain or export_state() first")
+        import dataclasses
+        self.config = dataclasses.replace(self.config,
+                                          kernel_backend=backend)
+        self.kernel_backend = self._resolve_backend(backend)
+        self._build_fns()
+        self.policy.on_backend_change()
 
     # ---- submission --------------------------------------------------------
     def submit(self, req: Request) -> bool:

@@ -75,6 +75,9 @@ class DisaggConfig:
     decode_kv_blocks: Optional[int] = None
     sched: str = "fifo"
     prefix_share: bool = False
+    kernel_backend: str = "jnp"     # decode-step backend for BOTH pools
+    kv_dtype: Optional[str] = None  # paged KV storage dtype for BOTH pools
+    #                                 (the handle interchange stays float)
 
     def prefill_config(self) -> EngineConfig:
         return EngineConfig(
@@ -83,7 +86,8 @@ class DisaggConfig:
             block_size=self.block_size, max_waiting=self.max_waiting,
             kv_layout=self.kv_layout, kv_block_size=self.kv_block_size,
             num_kv_blocks=self.prefill_kv_blocks, sched=self.sched,
-            prefix_share=self.prefix_share)
+            prefix_share=self.prefix_share,
+            kernel_backend=self.kernel_backend, kv_dtype=self.kv_dtype)
 
     def decode_config(self) -> EngineConfig:
         # the decode engine is fed adopted handles, never a policy-ordered
@@ -94,7 +98,8 @@ class DisaggConfig:
             block_size=self.block_size, kv_layout=self.kv_layout,
             kv_block_size=self.kv_block_size,
             num_kv_blocks=self.decode_kv_blocks, sched="fifo",
-            prefix_share=False)
+            prefix_share=False,
+            kernel_backend=self.kernel_backend, kv_dtype=self.kv_dtype)
 
 
 class RouterStats:

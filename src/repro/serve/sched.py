@@ -83,6 +83,13 @@ class SchedulerPolicy:
         anything calibrated against compilation — the SLO policy's
         first-sample discard — must not re-trigger."""
 
+    def on_backend_change(self) -> None:
+        """Optional hook ``Engine.set_kernel_backend`` calls when the decode
+        kernel backend flips on an (idle) engine.  Unlike ``on_reset``,
+        measured *hardware* state is exactly what is now stale: per-token
+        service times learned against one backend's kernels say nothing
+        about the other's, and the new backend's first step re-compiles."""
+
 
 class FIFOPolicy(SchedulerPolicy):
     """Strict arrival order; the head is never skipped (PR 3 semantics)."""
@@ -231,6 +238,7 @@ class SLOPolicy(DeadlinePolicy):
             raise ValueError("slowdown bound must be >= 1 (x solo latency)")
         self.slowdown = slowdown
         self.time_per_token = time_per_token
+        self._initial_time_per_token = time_per_token
         self.ema = ema
         self._step_samples = 0      # engine step() measurements consumed
 
@@ -256,6 +264,15 @@ class SLOPolicy(DeadlinePolicy):
         # would throw away a clean measurement and leave low-sample
         # estimates skewed toward whatever the previous batch ended on.
         super().on_reset()
+
+    def on_backend_change(self) -> None:
+        # The learned per-token estimate was measured against the *old*
+        # backend's kernels; carrying it across the flip would admit (or
+        # reject) against fiction.  Fall back to the configured prior and
+        # re-arm the first-sample discard: the new backend's first decode
+        # step pays a fresh jit compile.
+        self.time_per_token = self._initial_time_per_token
+        self._step_samples = 0
 
     def observe_step(self, service_s: float, tokens: int) -> None:
         # The engine's own decode accounting: ``tokens`` decode steps took

@@ -124,11 +124,13 @@ class PagedSlotManager:
     """
 
     def __init__(self, model, num_slots: int, max_seq_len: int, *,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.num_slots = num_slots
         self.max_seq_len = max_seq_len
         self.block_size = block_size
+        self.kv_dtype = kv_dtype
         self.max_blocks = blocks_for(max_seq_len, block_size)  # per slot
         if num_blocks is None:
             num_blocks = num_slots * self.max_blocks
@@ -136,7 +138,7 @@ class PagedSlotManager:
         self.alloc = BlockAllocator(num_blocks, block_size)
         self.cache = model.init_paged_cache(
             num_slots, max_seq_len, block_size=block_size,
-            num_blocks=num_blocks)
+            num_blocks=num_blocks, kv_dtype=kv_dtype)
         self.owner: list[Optional[int]] = [None] * num_slots
         self.free: list[int] = list(range(num_slots - 1, -1, -1))
         self.events: list[tuple] = []
