@@ -25,6 +25,7 @@ from repro.data import tokenizer as tok
 from repro.models import build_model
 from repro.rl import (SamplerConfig, completions_to_text, generate,
                       generate_continuous)
+from repro.serve import RolloutSpec
 
 
 def _encode_prompts(model, prompts_text):
@@ -66,6 +67,7 @@ def serve_batch(arch: str, prompts_text: list[str], *, reduced: bool = True,
 def serve_continuous(arch: str, prompts_text: list[str], *,
                      reduced: bool = True, max_new: int = 32,
                      temperature: float = 0.8, seed: int = 0,
+                     spec: RolloutSpec | None = None,
                      num_slots: int | None = None, block_size: int = 1,
                      kv: str = "contiguous", kv_block_size: int = 16,
                      num_kv_blocks: int | None = None,
@@ -80,7 +82,18 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
     consecutive prompts are treated as one shared-prefix group).
     ``disagg`` routes through split prefill/decode pools instead of one
     engine — ``True`` or a dict of ``DisaggConfig`` overrides (see
-    ``rl.generate_continuous``); output is identical under greedy."""
+    ``rl.generate_continuous``); output is identical under greedy.
+    ``spec`` supplies the whole engine shape as one
+    :class:`~repro.serve.RolloutSpec` instead of the loose kwargs."""
+    if spec is None:
+        spec = RolloutSpec(num_slots=num_slots, block_size=block_size,
+                           kv_layout=kv, kv_block_size=kv_block_size,
+                           num_kv_blocks=num_kv_blocks, sched=sched,
+                           prefix_share=prefix_share, disagg=disagg,
+                           kernel_backend=kernel_backend, kv_dtype=kv_dtype,
+                           group=group)
+    elif group is not None:
+        spec = spec.replace(group=group)
     if model is None:
         model = build_model(arch, reduced=reduced)
     key = jax.random.PRNGKey(seed)
@@ -90,14 +103,7 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
     sampler = SamplerConfig(max_new_tokens=max_new, temperature=temperature)
     t0 = time.perf_counter()
     out = generate_continuous(model, params, prompts, key, sampler,
-                              frontend=fr, num_slots=num_slots,
-                              block_size=block_size, kv_layout=kv,
-                              kv_block_size=kv_block_size,
-                              num_kv_blocks=num_kv_blocks, sched=sched,
-                              policy=policy, prefix_share=prefix_share,
-                              group=group, disagg=disagg,
-                              kernel_backend=kernel_backend,
-                              kv_dtype=kv_dtype)
+                              frontend=fr, spec=spec, policy=policy)
     dt = time.perf_counter() - t0
     n_tok = int(out["mask"].sum())
     stats = out["engine_stats"]
@@ -110,7 +116,7 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
               "peak_kv_blocks": stats.peak_kv_blocks,
               "prefix_hits": stats.prefix_hits,
               "blocks_saved": stats.blocks_saved}
-    if disagg:
+    if spec.disagg:
         report["transfers"] = stats.transfers
         report["transfer_time_s"] = stats.transfer_time_s
         report["transferred_blocks"] = stats.transferred_blocks
@@ -180,28 +186,13 @@ def _main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
-    disagg = None
-    if args.disagg:
-        disagg = {k: v for k, v in
-                  (("prefill_slots", args.prefill_slots),
-                   ("decode_slots", args.decode_slots),
-                   ("prefill_kv_blocks", args.prefill_kv_blocks),
-                   ("decode_kv_blocks", args.decode_kv_blocks))
-                  if v is not None} or True
+    spec = RolloutSpec.from_args(args)
     prompts = [f"{i}+{i+1}=" for i in range(args.batch)]
     if args.group:
         prompts = [p for p in prompts for _ in range(args.group)]
     if args.engine == "continuous":
         res = serve_continuous(args.arch, prompts, max_new=args.max_new,
-                               num_slots=args.slots,
-                               block_size=args.block_size, kv=args.kv,
-                               kv_block_size=args.kv_block_size,
-                               num_kv_blocks=args.num_kv_blocks,
-                               sched=args.sched,
-                               prefix_share=args.prefix_share,
-                               group=args.group, disagg=disagg,
-                               kernel_backend=args.kernel_backend,
-                               kv_dtype=args.kv_dtype)
+                               spec=spec)
         extra = (f", slot util {res['slot_utilization']:.0%}, "
                  f"{res['decode_steps']} decode steps")
         if args.prefix_share:

@@ -72,6 +72,7 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  mux: str = "off", mux_staleness: int = 1, jobs: int = 2,
                  reward: str = "arith", reward_latency: float = 0.0,
                  reward_workers: int = 2, micro_groups: int | None = None,
+                 spec=None, carry: bool = False,
                  return_report: bool = False):
     """GRPO post-training through the phase-multiplexed executors.
 
@@ -85,19 +86,25 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
     keyed by job id — plus the :class:`~repro.rl.coexec.MuxReport` when
     ``return_report``.
     """
+    from repro.serve import RolloutSpec
+
     cfg = MuxConfig(mode=mux, max_staleness=mux_staleness,
                     reward_workers=reward_workers, micro_groups=micro_groups)
     reward_fn = make_reward(reward, latency_s=reward_latency, seed=seed)
+    if spec is None:
+        spec = RolloutSpec(num_slots=num_slots,
+                           block_size=engine_block_size, kv_layout=kv,
+                           kv_block_size=kv_block_size, sched=sched,
+                           prefix_share=prefix_share,
+                           kernel_backend=kernel_backend, kv_dtype=kv_dtype,
+                           carry=carry)
 
     def make_job(jid: str, job_seed: int) -> GRPOJob:
         return GRPOJob(
             jid, model=model or build_model(arch, reduced=reduced),
             seed=job_seed, steps=steps, batch=batch, group=group,
             max_new=max_new, lr=lr, temperature=temperature, rollout=rollout,
-            num_slots=num_slots, engine_block_size=engine_block_size,
-            kv=kv, kv_block_size=kv_block_size, sched=sched,
-            prefix_share=prefix_share, kernel_backend=kernel_backend,
-            kv_dtype=kv_dtype, slo_bound=slo_bound,
+            spec=spec, carry=carry or spec.carry, slo_bound=slo_bound,
             reward_fn=reward_fn)
 
     if cfg.mode == "off":
@@ -188,6 +195,14 @@ def _main():
                     help="pipeline/stream modes: max optimizer iterations "
                          "the rollout weights may lag (0 = force sync; "
                          "bit-exact to --mux off but with no overlap)")
+    ap.add_argument("--carry", action="store_true",
+                    help="stream mode, --rollout engine: partial-rollout "
+                         "continuation — a mid-rollout weight sync suspends "
+                         "live generations, swaps weights and resumes them "
+                         "(Engine.reset(carry_live=True)) instead of "
+                         "finishing the iteration on stale weights; "
+                         "per-token weight versions feed the clip-fraction "
+                         "diagnostics")
     ap.add_argument("--jobs", type=int, default=2,
                     help="coexec mode: number of co-executing jobs "
                          "(job i uses seed+i)")
@@ -208,15 +223,13 @@ def _main():
                          "micro-step (default: all groups of an iteration "
                          "in one bit-exact full-batch step)")
     args = ap.parse_args()
+    from repro.serve import RolloutSpec
+    spec = RolloutSpec.from_args(args)
     t0 = time.time()
     out = run_training(args.arch, reduced=args.reduced, steps=args.steps,
                        batch=args.batch, group=args.group,
                        max_new=args.max_new, lr=args.lr, seed=args.seed,
-                       rollout=args.rollout, num_slots=args.slots,
-                       kv=args.kv, kv_block_size=args.kv_block_size,
-                       sched=args.sched, prefix_share=args.prefix_share,
-                       kernel_backend=args.kernel_backend,
-                       kv_dtype=args.kv_dtype,
+                       rollout=args.rollout, spec=spec, carry=args.carry,
                        slo_bound=args.slo_bound,
                        mux=args.mux, mux_staleness=args.mux_staleness,
                        jobs=args.jobs, reward=args.reward,

@@ -8,6 +8,8 @@ from repro.rl.train_step import init_train_state, make_loss_fn, make_train_step
 from repro.rl.coexec import (GRPOJob, MuxConfig, MuxReport, build_train_batch,
                              run_coexec, run_pipelined, run_sequential)
 from repro.rl.stream import run_streaming
+from repro.rl.agentic import (CountdownToolEnv, Environment, Episode, Turn,
+                              run_episodes)
 
 __all__ = ["GRPOConfig", "group_advantages", "policy_gradient_loss",
            "SamplerConfig", "generate", "generate_continuous",
@@ -16,4 +18,6 @@ __all__ = ["GRPOConfig", "group_advantages", "policy_gradient_loss",
            "ExternalVerifier", "CompositeReward", "make_reward",
            "init_train_state", "make_loss_fn", "make_train_step", "GRPOJob",
            "MuxConfig", "MuxReport", "build_train_batch", "run_coexec",
-           "run_pipelined", "run_sequential", "run_streaming"]
+           "run_pipelined", "run_sequential", "run_streaming",
+           "Environment", "CountdownToolEnv", "Episode", "Turn",
+           "run_episodes"]

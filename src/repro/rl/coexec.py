@@ -131,7 +131,9 @@ class GRPOJob:
                  kernel_backend: str = "jnp",
                  kv_dtype: Optional[str] = None,
                  token_budget: Optional[int] = None, slo_bound: float = 2.0,
-                 reward_fn=None):
+                 reward_fn=None, spec=None, carry: bool = False):
+        from repro.serve import RolloutSpec
+
         if rollout not in ("static", "engine"):
             raise ValueError(f"unknown rollout backend {rollout!r}")
         self.job_id = job_id
@@ -142,15 +144,27 @@ class GRPOJob:
         self.group = group
         self.lr = lr
         self.rollout = rollout
-        self.num_slots = num_slots
-        self.engine_block_size = engine_block_size
-        self.kv = kv
-        self.kv_block_size = kv_block_size
-        self.num_kv_blocks = num_kv_blocks
-        self.sched = sched
-        self.prefix_share = prefix_share
-        self.kernel_backend = kernel_backend
-        self.kv_dtype = kv_dtype
+        if spec is None:
+            spec = RolloutSpec(
+                num_slots=num_slots, block_size=engine_block_size,
+                kv_layout=kv, kv_block_size=kv_block_size,
+                num_kv_blocks=num_kv_blocks, sched=sched,
+                prefix_share=prefix_share, kernel_backend=kernel_backend,
+                kv_dtype=kv_dtype, carry=carry)
+        # the spec is the single source for the engine shape; the loose
+        # attributes below mirror it for existing call sites
+        self.spec = spec.replace(group=group, job_id=job_id,
+                                 carry=spec.carry or carry)
+        self.carry = self.spec.carry
+        self.num_slots = self.spec.num_slots
+        self.engine_block_size = self.spec.block_size
+        self.kv = self.spec.kv_layout
+        self.kv_block_size = self.spec.kv_block_size
+        self.num_kv_blocks = self.spec.num_kv_blocks
+        self.sched = self.spec.sched
+        self.prefix_share = self.spec.prefix_share
+        self.kernel_backend = self.spec.kernel_backend
+        self.kv_dtype = self.spec.kv_dtype
         # per-job token budget for deadline/SLO admission: what one run
         # permit lets this job put in flight — a full GRPO iteration's
         # rollout (batch * group members, max_new decode tokens each).
@@ -194,17 +208,10 @@ class GRPOJob:
         the slot pool and compiled admit/decode blocks stay."""
         eng = self._engines.get(max_seq_len)
         if eng is None:
-            from repro.serve import Engine, EngineConfig
-            eng = Engine(self.model, None, EngineConfig(
-                num_slots=num_slots, max_seq_len=max_seq_len,
-                eos_id=self.sampler.eos_id,
+            eng = self.spec.build_engine(
+                self.model, None, batch=num_slots,
+                max_seq_len=max_seq_len, eos_id=self.sampler.eos_id,
                 temperature=self.sampler.temperature,
-                block_size=self.engine_block_size, kv_layout=self.kv,
-                kv_block_size=self.kv_block_size,
-                num_kv_blocks=self.num_kv_blocks, sched=self.sched,
-                prefix_share=self.prefix_share,
-                kernel_backend=self.kernel_backend,
-                kv_dtype=self.kv_dtype),
                 policy=self._make_policy())
             self._engines[max_seq_len] = eng
         return eng
@@ -222,18 +229,14 @@ class GRPOJob:
                                    Sp + self.sampler.max_new_tokens)
             out = generate_continuous(
                 self.model, params, prompts, k1, self.sampler,
-                num_slots=self.num_slots, block_size=self.engine_block_size,
-                kv_layout=self.kv, kv_block_size=self.kv_block_size,
-                num_kv_blocks=self.num_kv_blocks, engine=eng,
-                prefix_share=self.prefix_share, group=self.group,
-                job_id=self.job_id, kernel_backend=self.kernel_backend,
-                kv_dtype=self.kv_dtype)
+                engine=eng, spec=self.spec)
         else:
             out = generate(self.model, params, prompts, k1, self.sampler)
         jax.block_until_ready(out["completions"])
         return b, out
 
-    def rollout_stream(self, params, k: int, on_group, on_batch=None):
+    def rollout_stream(self, params, k: int, on_group, on_batch=None,
+                       sync_params=None):
         """Streaming rollout for iteration ``k``: ``on_group(gout)`` fires
         the moment each GRPO prompt group finishes decoding (the engine
         keeps serving the stragglers — partial harvest, no drain).  Same
@@ -242,6 +245,10 @@ class GRPOJob:
         bit-identical to the batch rollout.  Returns the task batch;
         ``on_batch(b)``, when given, receives it *before* the engine runs
         — reward workers need the answers before the first group lands.
+        ``sync_params`` (engine backend only) enables partial-rollout
+        continuation: the newest-weights poll the engine weight-syncs
+        against mid-rollout via ``reset(carry_live=True)`` — see
+        :func:`~repro.rl.rollout.generate_continuous_stream`.
 
         The static backend has no sub-phase granularity to expose: it
         generates the whole batch, then emits the groups in row order —
@@ -259,13 +266,7 @@ class GRPOJob:
                                    Sp + self.sampler.max_new_tokens)
             for gout in generate_continuous_stream(
                     self.model, params, prompts, k1, self.sampler,
-                    group=self.group, num_slots=self.num_slots,
-                    block_size=self.engine_block_size, kv_layout=self.kv,
-                    kv_block_size=self.kv_block_size,
-                    num_kv_blocks=self.num_kv_blocks, engine=eng,
-                    prefix_share=self.prefix_share, job_id=self.job_id,
-                    kernel_backend=self.kernel_backend,
-                    kv_dtype=self.kv_dtype):
+                    engine=eng, spec=self.spec, sync_params=sync_params):
                 on_group(gout)
         else:
             out = generate(self.model, params, prompts, k1, self.sampler)

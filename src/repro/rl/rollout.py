@@ -67,54 +67,64 @@ def generate(model: Model, params, prompts, rng, sampler: SamplerConfig,
     }
 
 
+#: Legacy per-call engine-shape kwargs and their defaults — the pre-
+#: ``RolloutSpec`` surface the deprecation shim keeps alive.
+_LEGACY_DEFAULTS = dict(num_slots=None, block_size=1, kv_layout="contiguous",
+                        kv_block_size=16, num_kv_blocks=None, sched="fifo",
+                        prefix_share=False, disagg=None, kernel_backend="jnp",
+                        kv_dtype=None)
+_warned_legacy = [False]
+
+
+def _resolve_spec(spec, group, job_id, legacy: dict):
+    """Fold the legacy per-call kwargs and ``spec`` into one
+    ``RolloutSpec``.  Passing engine-shape kwargs without a spec still
+    works — once per process it warns to migrate; passing both raises
+    rather than silently picking a winner.  ``group``/``job_id`` stay
+    per-call (they describe the batch, not the engine) and override the
+    spec's own."""
+    import warnings
+
+    from repro.serve import RolloutSpec
+
+    non_default = {k: v for k, v in legacy.items()
+                   if v != _LEGACY_DEFAULTS[k]}
+    if spec is None:
+        if non_default and not _warned_legacy[0]:
+            _warned_legacy[0] = True
+            warnings.warn(
+                "passing engine-shape kwargs (num_slots/kv_layout/...) to "
+                "the rollout executors is deprecated; build a "
+                "repro.serve.RolloutSpec and pass spec=",
+                DeprecationWarning, stacklevel=3)
+        spec = RolloutSpec(**legacy)
+    elif non_default:
+        raise ValueError(
+            f"spec= given alongside legacy engine kwargs "
+            f"{sorted(non_default)}; move them into the RolloutSpec")
+    if group is not None:
+        spec = spec.replace(group=group)
+    if job_id is not None:
+        spec = spec.replace(job_id=job_id)
+    return spec
+
+
 def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
-                    frontend, *, num_slots, block_size, kv_layout,
-                    kv_block_size, num_kv_blocks, engine, sched, policy,
-                    prefix_share, group, job_id, disagg=None,
-                    kernel_backend="jnp", kv_dtype=None):
+                    frontend, *, spec, engine, policy):
     """Shared engine setup for the batch and streaming rollout executors:
-    build a fresh engine (or validate + ``reset`` a persistent one) and
-    turn the prompt rows into the pending request deque.  ``disagg``
-    selects the disaggregated prefill/decode router instead of the
-    monolithic engine (see :func:`generate_continuous`)."""
+    build the engine ``spec`` describes (or validate + ``reset`` a
+    persistent one) and turn the prompt rows into the pending request
+    deque."""
     from collections import deque
 
-    from repro.serve import (DisaggConfig, DisaggRouter, Engine,
-                             EngineConfig, Request)
+    from repro.serve import Request
 
     B, Sp = prompts_np.shape
     T = sampler.max_new_tokens
-    if engine is None and disagg:
-        n = B if num_slots is None else num_slots
-        if isinstance(disagg, DisaggConfig):
-            cfg = disagg
-        else:
-            # True -> split the monolithic pool 1:3 prefill:decode; a dict
-            # overrides any DisaggConfig field (pool sizes, max_waiting...)
-            opts = {} if disagg is True else dict(disagg)
-            pf = opts.pop("prefill_slots", max(1, n // 4))
-            cfg = DisaggConfig(
-                prefill_slots=pf,
-                decode_slots=opts.pop("decode_slots", max(1, n - pf)),
-                max_seq_len=Sp + T, eos_id=sampler.eos_id,
-                temperature=sampler.temperature, block_size=block_size,
-                kv_layout=kv_layout, kv_block_size=kv_block_size,
-                decode_kv_blocks=opts.pop("decode_kv_blocks",
-                                          num_kv_blocks),
-                sched=sched, prefix_share=prefix_share,
-                kernel_backend=opts.pop("kernel_backend", kernel_backend),
-                kv_dtype=opts.pop("kv_dtype", kv_dtype), **opts)
-        engine = DisaggRouter(model, params, cfg, rng=rng, policy=policy,
-                              job_id=job_id)
-    elif engine is None:
-        engine = Engine(model, params, EngineConfig(
-            num_slots=B if num_slots is None else num_slots,
-            max_seq_len=Sp + T,
+    if engine is None:
+        engine = spec.build_engine(
+            model, params, batch=B, max_seq_len=Sp + T,
             eos_id=sampler.eos_id, temperature=sampler.temperature,
-            block_size=block_size, kv_layout=kv_layout,
-            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-            sched=sched, prefix_share=prefix_share,
-            kernel_backend=kernel_backend, kv_dtype=kv_dtype),
             rng=rng, policy=policy)
     else:
         cfg = engine.config
@@ -130,40 +140,42 @@ def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
                 f"persistent engine serves temperature={cfg.temperature}, "
                 f"eos_id={cfg.eos_id} but sampler asks for "
                 f"temperature={sampler.temperature}, eos_id={sampler.eos_id}")
-        if cfg.kv_layout != kv_layout:
+        if cfg.kv_layout != spec.kv_layout:
             raise ValueError(
                 f"persistent engine kv_layout={cfg.kv_layout!r} != "
-                f"requested {kv_layout!r}")
-        if prefix_share and not cfg.prefix_share:
+                f"requested {spec.kv_layout!r}")
+        if spec.prefix_share and not cfg.prefix_share:
             raise ValueError("persistent engine was built without "
                              "prefix_share")
         # decode backend and KV storage dtype are baked into the jitted
         # fns / pool layout — a disagreeing request would silently serve
         # the engine's own configuration, so refuse
-        if cfg.kernel_backend != kernel_backend:
+        if cfg.kernel_backend != spec.kernel_backend:
             raise ValueError(
                 f"persistent engine kernel_backend="
-                f"{cfg.kernel_backend!r} != requested {kernel_backend!r}")
-        if cfg.kv_dtype != kv_dtype:
+                f"{cfg.kernel_backend!r} != requested "
+                f"{spec.kernel_backend!r}")
+        if cfg.kv_dtype != spec.kv_dtype:
             raise ValueError(
                 f"persistent engine kv_dtype={cfg.kv_dtype!r} != "
-                f"requested {kv_dtype!r}")
+                f"requested {spec.kv_dtype!r}")
         engine.reset(params, rng)
     pending = deque()
     for i in range(B):
         fr = None if frontend is None else frontend[i:i + 1]
         # one shared prefix key per GRPO prompt group: rows i*group ..
         # (i+1)*group-1 are the same prompt repeated
-        key = ((job_id, i // group)
-               if engine.radix is not None and group else None)
+        key = ((spec.job_id, i // spec.group)
+               if engine.radix is not None and spec.group else None)
         pending.append(Request(rid=i, prompt=prompts_np[i],
                                max_new_tokens=T, frontend=fr,
-                               prefix_key=key, job_id=job_id))
+                               prefix_key=key, job_id=spec.job_id))
     return engine, pending
 
 
 def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
-                        frontend=None, *, num_slots: int | None = None,
+                        frontend=None, *, spec=None,
+                        num_slots: int | None = None,
                         block_size: int = 1, kv_layout: str = "contiguous",
                         kv_block_size: int = 16,
                         num_kv_blocks: int | None = None, engine=None,
@@ -226,19 +238,25 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     logprob perturbation.  Both are baked into a persistent engine; a
     mismatching request raises rather than silently serving the engine's
     own configuration.
+
+    ``spec`` bundles all the engine-shape kwargs above into one
+    :class:`~repro.serve.RolloutSpec` — the consolidated surface both
+    launch entrypoints use.  The loose kwargs keep working (a one-time
+    ``DeprecationWarning`` nudges migration); passing both raises.
     """
     import numpy as np
 
+    spec = _resolve_spec(spec, group, job_id, dict(
+        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
+        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+        sched=sched, prefix_share=prefix_share, disagg=disagg,
+        kernel_backend=kernel_backend, kv_dtype=kv_dtype))
     B, Sp = prompts.shape
     T = sampler.max_new_tokens
     prompts_np = np.asarray(prompts, np.int32)
     engine, pending = _engine_session(
         model, params, prompts_np, rng, sampler, frontend,
-        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
-        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-        engine=engine, sched=sched, policy=policy,
-        prefix_share=prefix_share, group=group, job_id=job_id,
-        disagg=disagg, kernel_backend=kernel_backend, kv_dtype=kv_dtype)
+        spec=spec, engine=engine, policy=policy)
     # backpressure-aware drive: a full queue (max_waiting) defers
     # submission until the engine drains instead of crashing
     while pending or not engine.idle:
@@ -251,11 +269,13 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     completions = np.full((B, T), sampler.eos_id, np.int32)
     behavior_logp = np.zeros((B, T), np.float32)
     mask = np.zeros((B, T), np.float32)
+    token_versions = np.full((B, T), -1, np.int32)
     for o in outs:
         n = o.num_tokens
         completions[o.rid, :n] = o.tokens
         behavior_logp[o.rid, :n] = o.logprobs
         mask[o.rid, :n] = 1.0
+        token_versions[o.rid, :n] = o.token_versions
     completions = jnp.asarray(completions)
     return {
         "prompts": prompts,
@@ -263,12 +283,14 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         "tokens": jnp.concatenate([prompts, completions], axis=1),
         "behavior_logp": jnp.asarray(behavior_logp),
         "mask": jnp.asarray(mask),
+        "token_versions": token_versions,
         "engine_stats": engine.stats,
     }
 
 
 def generate_continuous_stream(model, params, prompts, rng,
                                sampler: SamplerConfig, frontend=None, *,
+                               spec=None, sync_params=None,
                                group: int | None = None,
                                num_slots: int | None = None,
                                block_size: int = 1,
@@ -304,21 +326,38 @@ def generate_continuous_stream(model, params, prompts, rng,
     reclamation: finished groups flow to reward verification and training
     micro-batches (``rl.stream``) while decode is still in flight — the
     driver pulls via :meth:`Engine.harvest` (partial harvest, no drain).
+
+    ``sync_params`` is partial-rollout continuation across weight syncs:
+    a zero-argument callable returning ``(params, version)`` with the
+    newest synced weights, polled between scheduler ticks.  When the
+    version advances mid-rollout the engine weight-syncs *live* —
+    ``reset(carry_live=True)`` suspends every in-flight generation,
+    swaps weights, and resumes them with outputs carried forward — so
+    stragglers finish on fresh weights instead of the iteration-start
+    ones.  Each group dict then carries ``token_versions`` (the
+    per-token behaviour-weight provenance; ``-1`` past each row's
+    length) feeding the clipped importance-ratio diagnostics.
+    ``spec``/loose-kwargs semantics are those of
+    :func:`generate_continuous`.
     """
     import numpy as np
 
+    spec = _resolve_spec(spec, group, job_id, dict(
+        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
+        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+        sched=sched, prefix_share=prefix_share, disagg=disagg,
+        kernel_backend=kernel_backend, kv_dtype=kv_dtype))
     B, Sp = prompts.shape
     T = sampler.max_new_tokens
-    g = group or 1
+    g = spec.group or 1
     prompts_np = np.asarray(prompts, np.int32)
     engine, pending = _engine_session(
         model, params, prompts_np, rng, sampler, frontend,
-        num_slots=num_slots, block_size=block_size, kv_layout=kv_layout,
-        kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
-        engine=engine, sched=sched, policy=policy,
-        prefix_share=prefix_share, group=group, job_id=job_id,
-        disagg=disagg, kernel_backend=kernel_backend, kv_dtype=kv_dtype)
+        spec=spec, engine=engine, policy=policy)
     engine.harvest()                    # drop any stale pre-session leftovers
+    synced_version = None
+    if sync_params is not None:
+        _, synced_version = sync_params()   # session-start baseline
     buckets: dict[int, list] = {}
     sizes = [min(B, (gi + 1) * g) - gi * g for gi in range((B + g - 1) // g)]
 
@@ -335,16 +374,29 @@ def generate_continuous_stream(model, params, prompts, rng,
         completions = np.full((n_rows, T), sampler.eos_id, np.int32)
         behavior_logp = np.zeros((n_rows, T), np.float32)
         mask = np.zeros((n_rows, T), np.float32)
+        token_versions = np.full((n_rows, T), -1, np.int32)
         for r, o in enumerate(outs):
             n = o.num_tokens
             completions[r, :n] = o.tokens
             behavior_logp[r, :n] = o.logprobs
             mask[r, :n] = 1.0
+            token_versions[r, :n] = o.token_versions
         return {"group_index": gi,
                 "rows": [o.rid for o in outs],
                 "completions": completions,
                 "behavior_logp": behavior_logp,
-                "mask": mask}
+                "mask": mask,
+                "token_versions": token_versions}
+
+    def _maybe_carry_sync():
+        nonlocal synced_version
+        if sync_params is None:
+            return
+        new_params, version = sync_params()
+        if version == synced_version:
+            return
+        synced_version = version
+        engine.reset(new_params, carry_live=True)
 
     # backpressure-aware drive, harvesting between scheduler ticks
     while pending or not engine.idle:
@@ -353,6 +405,7 @@ def generate_continuous_stream(model, params, prompts, rng,
         if not engine.idle:
             engine.step()
         yield from drain_finished()
+        _maybe_carry_sync()
     yield from drain_finished()         # anything finalized by the last tick
 
 

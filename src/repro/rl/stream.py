@@ -141,7 +141,10 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
     n_groups = job.batch                    # one GRPO group per task prompt
     state = job.init_state()
     cv = threading.Condition()
-    shared = {"params": state["params"], "trained": 0, "err": None}
+    # "version" counts optimizer steps (weight syncs) — finer-grained than
+    # "trained" (iterations): the carry path polls it mid-rollout
+    shared = {"params": state["params"], "trained": 0, "version": 0,
+              "err": None}
     batches: dict[int, object] = {}         # k -> task batch (answers)
     versions: dict[int, int] = {}           # k -> behaviour-weight version
     rewarded: dict[int, list] = {}          # k -> [(gout, rewards)] arrivals
@@ -167,6 +170,13 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
         except BaseException as e:          # surface into the train loop
             fail(e)
 
+    def sync_fn():
+        """Newest synced weights + optimizer-step version, polled by the
+        streaming generator between scheduler ticks (partial-rollout
+        continuation — only wired when the job opted in via ``carry``)."""
+        with cv:
+            return shared["params"], shared["version"]
+
     def roll_loop():
         try:
             for k in range(steps):
@@ -187,7 +197,9 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                         params, k,
                         on_group=lambda g, k=k: pool.submit(reward_task,
                                                             k, g),
-                        on_batch=publish)
+                        on_batch=publish,
+                        sync_params=(sync_fn if getattr(job, "carry", False)
+                                     else None))
         except BaseException as e:
             fail(e)
 
@@ -200,6 +212,8 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
             consumed = 0
             pending_gouts: list[dict] = []
             pending_rewards: list[np.ndarray] = []
+            carried_rows = 0                # rows with mixed weight versions
+            vers_seen: set[int] = set()     # behaviour versions this iter
             want = micro_groups if micro_groups is not None else n_groups
             while consumed < n_groups:
                 with cv:
@@ -209,6 +223,16 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                         raise shared["err"]
                     take, rewarded[k] = rewarded[k], []
                 for gout, r in take:
+                    tv = gout.get("token_versions")
+                    if tv is not None:
+                        msk = np.asarray(gout["mask"]) > 0
+                        for row in range(tv.shape[0]):
+                            vs = tv[row][msk[row]]
+                            if vs.size:
+                                vers_seen.update(int(v)
+                                                 for v in np.unique(vs))
+                                if vs.min() != vs.max():
+                                    carried_rows += 1
                     pending_gouts.append(gout)
                     pending_rewards.append(r)
                 consumed += len(take)
@@ -235,6 +259,7 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                     recs.append(rec)
                     with cv:
                         shared["params"] = state["params"]  # weight sync
+                        shared["version"] += 1
                         cv.notify_all()
             with cv:
                 shared["trained"] = k + 1
@@ -243,7 +268,12 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                 batches.pop(k, None)
             rec = {"step": k, **_merge_recs(recs),
                    "rollout_staleness": k - versions[k],
-                   "micro_steps": len(recs)}
+                   "micro_steps": len(recs),
+                   # partial-rollout continuation provenance: rows whose
+                   # behaviour logprobs mix weight versions, and how many
+                   # distinct versions fed this iteration's batch
+                   "carried_rows": carried_rows,
+                   "behavior_versions": max(len(vers_seen), 1)}
             history.append(rec)
             _log(rec, log_every)
     except BaseException:

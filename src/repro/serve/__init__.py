@@ -26,7 +26,9 @@ invariants.
 """
 from repro.serve.blocks import BlockAllocator, blocks_for
 from repro.serve.disagg import KVTransferHandle, PrefillEngine
-from repro.serve.engine import Engine, EngineConfig, EngineStats, run_trace
+from repro.serve.engine import (Engine, EngineConfig, EngineStats,
+                                SuspendedRequest, run_trace)
+from repro.serve.protocol import ENGINE_ATTRS, EngineProtocol
 from repro.serve.queue import RequestQueue
 from repro.serve.radix import RadixEntry, RadixPrefixIndex
 from repro.serve.request import Request, RequestOutput
@@ -34,11 +36,13 @@ from repro.serve.router import DisaggConfig, DisaggRouter, RouterStats
 from repro.serve.sched import (DeadlinePolicy, FIFOPolicy, SchedulerPolicy,
                                SLOPolicy, make_policy)
 from repro.serve.slots import PagedSlotManager, SlotManager
+from repro.serve.spec import RolloutSpec
 
 __all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
-           "EngineStats", "run_trace", "RequestQueue", "Request",
-           "RequestOutput", "PagedSlotManager", "SlotManager",
+           "EngineStats", "SuspendedRequest", "run_trace", "RequestQueue",
+           "Request", "RequestOutput", "PagedSlotManager", "SlotManager",
            "RadixEntry", "RadixPrefixIndex", "SchedulerPolicy",
            "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy",
            "KVTransferHandle", "PrefillEngine", "DisaggConfig",
-           "DisaggRouter", "RouterStats"]
+           "DisaggRouter", "RouterStats", "EngineProtocol", "ENGINE_ATTRS",
+           "RolloutSpec"]

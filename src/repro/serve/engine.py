@@ -141,6 +141,9 @@ class EngineStats:
     decode_time_s: float = 0.0        # wall time inside decode dispatch+sync
     adoptions: int = 0                # admits fed by a KV transfer handle
     #                                   (disaggregated prefill, serve.disagg)
+    suspends: int = 0                 # requests suspended (tool boundary or
+    #                                   carry_live weight sync)
+    resumes: int = 0                  # suspended requests re-admitted
 
     @property
     def slot_utilization(self) -> float:
@@ -246,8 +249,34 @@ def _engine_fns(model, max_seq_len: int, temperature: float, eos_id: int,
             step, (last_logits, cache, alive, remaining), keys)
         return carry, out                   # out: (toks, logps, recs) (K,N)
 
+    def extract_fn(pool, slot):
+        """Gather slot ``slot``'s full cache stripe into a batch=1 pytree —
+        the inverse of ``insert_cache`` (suspension capture)."""
+        out = {}
+        for name, leaf in pool.items():
+            if name == "index":
+                out[name] = leaf[slot]
+            else:
+                start = (0, slot) + (0,) * (leaf.ndim - 2)
+                sizes = (leaf.shape[0], 1) + leaf.shape[2:]
+                out[name] = jax.lax.dynamic_slice(leaf, start, sizes)
+        return out
+
+    def inject_fn(params, tokens, one):
+        """Advance a batch=1 cache view through forced tokens (a tool
+        result) with the model's own decode step; the returned logits
+        predict the first post-injection token.  Specialises on the token
+        count, like prefill does on prompt length."""
+        def step(one, t):
+            logits, one = model.decode_step(
+                params, jnp.reshape(t, (1, 1)), one)
+            return one, logits
+        one, logits = jax.lax.scan(step, one, tokens)
+        return logits[-1, 0], one
+
     return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn),
-            "prefill": jax.jit(prefill_fn), "scatter": jax.jit(scatter_fn)}
+            "prefill": jax.jit(prefill_fn), "scatter": jax.jit(scatter_fn),
+            "extract": jax.jit(extract_fn), "inject": jax.jit(inject_fn)}
 
 
 @functools.lru_cache(maxsize=32)
@@ -481,12 +510,112 @@ def _paged_engine_fns(model, max_seq_len: int, kv_block_size: int,
             step, (last_logits, cache, alive, remaining), keys)
         return carry, out                   # out: (toks, logps, recs) (K,N)
 
+    def suspend_fn(pool, slot, tail_pid):
+        """Capture a live slot's mid-generation state for suspension: the
+        (dequantized) partial tail block of every paged leaf plus the
+        batch=1 rows of every slot-resident leaf — the same snapshot shape
+        a radix entry / KV transfer handle carries, taken from the *pool*
+        instead of a prefill result.  The full blocks travel as allocator
+        pins, not copies."""
+        tail = {}
+        for name in sorted(paged):
+            t = pool[name][:, tail_pid]
+            if quant:
+                t = kvcache.dequantize_kv(t, pool[name + SUF][:, tail_pid],
+                                          view_dtype)
+            tail[name] = t
+        slot_leaves = {}
+        for name, leaf in pool.items():
+            if name == "index" or name in paged or name.endswith(SUF):
+                continue
+            start = (0, slot) + (0,) * (leaf.ndim - 2)
+            sizes = (leaf.shape[0], 1) + leaf.shape[2:]
+            slot_leaves[name] = jax.lax.dynamic_slice(leaf, start, sizes)
+        return tail, slot_leaves
+
+    def inject_fn(params, tokens, one):
+        """Advance a batch=1 contiguous cache view through forced tokens
+        (a tool result) with the model's own decode step; the returned
+        logits predict the first post-injection token."""
+        def step(one, t):
+            logits, one = model.decode_step(
+                params, jnp.reshape(t, (1, 1)), one)
+            return one, logits
+        one, logits = jax.lax.scan(step, one, tokens)
+        return logits[-1, 0], one
+
     return {"admit": jax.jit(admit_fn), "block": jax.jit(block_fn),
             "prefill": jax.jit(prefill_fn),
             "scatter": jax.jit(scatter_fn),
             "snapshot": jax.jit(snapshot_fn,
                                 static_argnames=("tail_block",)),
-            "share_admit": jax.jit(share_admit_fn)}
+            "share_admit": jax.jit(share_admit_fn),
+            "suspend": jax.jit(suspend_fn), "inject": jax.jit(inject_fn)}
+
+
+class SuspendedRequest:
+    """A live generation exported out of its slot at a tool/stop boundary
+    (or a weight sync), waiting to be resumed.
+
+    The handle is the mid-generation generalization of
+    :class:`~repro.serve.disagg.KVTransferHandle`: paged engines pin the
+    sequence's *full* KV blocks in the source pool (one ``incref`` each —
+    zero copies) and carry a small device snapshot (dequantized partial
+    tail block, slot-resident rows, the slot's last logits); contiguous
+    engines carry the whole batch=1 cache stripe in ``one``.  The slot
+    itself is released at suspension — capacity is immediately reusable.
+
+    ``history`` is the full token sequence behind ``index`` (prompt +
+    tokens generated so far): a resume re-admits through the same
+    ``admit_prefilled`` adoption path disaggregated prefill uses, with
+    ``history`` (+ tool tokens) as the synthetic prompt, so it works on
+    monolithic and disagg engines alike and across engines of the same
+    serving shape.
+
+    ``logits`` is the boundary logits row and is only usable
+    (``logits_valid``) when the stop token was the last token the fused
+    decode block produced — a suspension truncated out of a ``block_size
+    > 1`` overrun recomputes the boundary logits at resume (tool-token
+    injection, or a one-token replay of the final history token).
+
+    :meth:`release` drops the pins exactly once (idempotent), mirroring
+    ``KVTransferHandle.release`` — a handle dropped mid-flight must
+    restore the allocator's conservation invariant.
+    """
+
+    __slots__ = ("req", "out", "history", "index", "remaining", "logits",
+                 "logits_valid", "block_ids", "tail", "slot_leaves", "one",
+                 "source", "weight_version", "released")
+
+    def __init__(self, req: Request, out: RequestOutput, history, index: int,
+                 remaining: int, logits, *, source, logits_valid: bool = True,
+                 block_ids=(), tail=None, slot_leaves=None, one=None,
+                 weight_version: int = 0):
+        self.req = req
+        self.out = out
+        self.history = np.asarray(history, np.int32).reshape(-1)
+        self.index = int(index)
+        self.remaining = int(remaining)
+        self.logits = logits
+        self.logits_valid = logits_valid
+        self.block_ids = tuple(int(b) for b in block_ids)
+        self.tail = tail if tail is not None else {}
+        self.slot_leaves = slot_leaves if slot_leaves is not None else {}
+        self.one = one                      # contiguous: full batch=1 cache
+        self.source = source                # the Engine holding the pins
+        self.weight_version = weight_version
+        self.released = False
+
+    def release(self) -> None:
+        """Drop this handle's pins in the source pool (idempotent)."""
+        if self.released:
+            return
+        self.released = True
+        self.source._release_suspended(self)
+        self.one = None
+        self.tail = {}
+        self.slot_leaves = {}
+        self.logits = None
 
 
 class Engine:
@@ -517,6 +646,26 @@ class Engine:
         self._active: dict[int, tuple[Request, RequestOutput]] = {}
         self.finished: dict[int, RequestOutput] = {}
         self._unharvested: list[RequestOutput] = []
+        # ---- suspend/resume + partial-rollout bookkeeping ----
+        # weights swapped via reset(params=...) bump weight_version; each
+        # slot remembers the version that produced its current last-logits
+        # row, so per-token provenance is exact across carry_live resets
+        self.weight_version = 0
+        self._slot_version = [0] * N
+        # carry-resumed outputs arrive pre-seeded with earlier tokens;
+        # _seed_tokens[slot] marks how many, so sequence-position math
+        # (index = prompt_len + generated-this-lifetime) stays right
+        self._seed_tokens: dict[int, int] = {}
+        self.suspended: dict[int, SuspendedRequest] = {}    # by rid
+        self._newly_suspended: list[SuspendedRequest] = []
+        # stop-token rollback is only safe when every non-index cache leaf
+        # is sequence-shaped (attention masks positions >= index); recurrent
+        # state (ssm/hybrid) cannot rewind, so those families must suspend
+        # at block_size=1 (no overrun to truncate)
+        paged_names = set(model.paged_cache_names())
+        self._rollback_safe = all(
+            k == "index" or k in paged_names
+            for k in model.cache_logical_specs())
         self.stats = EngineStats()
         self.clock = None             # optional wall-clock for trace drivers
 
@@ -608,7 +757,22 @@ class Engine:
                 raise ValueError(
                     f"request {req.rid}: needs {need} KV blocks but the "
                     f"pool has {self.slots.alloc.num_blocks}")
+        self._validate_stop_tokens(req)
         return self.queue.push(req)
+
+    def _validate_stop_tokens(self, req: Request) -> None:
+        if not req.stop_tokens:
+            return
+        if self.config.eos_id in req.stop_tokens:
+            raise ValueError(
+                f"request {req.rid}: stop_tokens contain eos_id "
+                f"{self.config.eos_id} — EOS finishes, it cannot suspend")
+        if self.config.block_size > 1 and not self._rollback_safe:
+            raise ValueError(
+                f"request {req.rid}: stop-token suspension on family "
+                f"{self.model.cfg.family!r} needs block_size=1 — its "
+                f"recurrent cache state cannot be rolled back past a "
+                f"mid-block stop boundary")
 
     @property
     def num_active(self) -> int:
@@ -726,6 +890,8 @@ class Engine:
                         self._last_logits, self._alive, self._remaining,
                         budget)
         self._host_index[slot] = req.prompt_len
+        self._slot_version[slot] = self.weight_version
+        self._seed_tokens[slot] = 0
         out = RequestOutput(rid=req.rid, prompt=req.prompt,
                             prefill_step=self.stats.steps,
                             arrival_time=req.arrival_time,
@@ -821,6 +987,7 @@ class Engine:
         Returns the slot.  Callers must gate on
         :meth:`can_admit_prefilled` — like ``SlotManager.assign``, this
         raises rather than queues when the pool is full."""
+        self._validate_stop_tokens(req)
         budget = jnp.asarray(req.max_new_tokens, jnp.int32)
         if not self.paged:
             slot = self.slots.assign(req.rid)
@@ -840,6 +1007,8 @@ class Engine:
             self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
         self._host_index[slot] = req.prompt_len
+        self._slot_version[slot] = self.weight_version
+        self._seed_tokens[slot] = 0
         out = RequestOutput(rid=req.rid, prompt=req.prompt,
                             prefill_step=self.stats.steps,
                             arrival_time=req.arrival_time,
@@ -862,6 +1031,7 @@ class Engine:
         self.finished[req.rid] = out
         self._unharvested.append(out)
         del self._active[slot]
+        self._seed_tokens.pop(slot, None)
         self.slots.release(slot)
         self.policy.observe_finish(out)     # fallback service-time estimate
 
@@ -934,16 +1104,43 @@ class Engine:
         self.stats.blocks += 1
         self.stats.slot_steps += K * self.config.num_slots
         for slot in list(self._active):
-            _, o = self._active[slot]
+            req, o = self._active[slot]
             rec_col = recs[:, slot]
             n_rec = int(rec_col.sum())
+            stop_at = None                  # position of a stop trigger
             if n_rec:
                 if not o.tokens and self.clock is not None:
                     o.first_token_time = self.clock()   # first token on host
-                o.tokens.extend(int(t) for t in toks[rec_col, slot])
-                o.logprobs.extend(float(x) for x in logps[rec_col, slot])
-                self.stats.recorded_tokens += n_rec
-            if (not alive[slot]) or remaining[slot] <= 0:
+                new_toks = [int(t) for t in toks[rec_col, slot]]
+                if req.stop_tokens:
+                    for j, t in enumerate(new_toks):
+                        if t in req.stop_tokens:
+                            stop_at = j
+                            break
+                # a stop trigger is recorded like EOS; anything the fused
+                # block over-ran past it is truncated (the stale KV sits
+                # beyond the rolled-back index, which attention masks)
+                keep = n_rec if stop_at is None else stop_at + 1
+                o.tokens.extend(new_toks[:keep])
+                o.logprobs.extend(
+                    float(x) for x in logps[rec_col, slot][:keep])
+                # token 1 of the block was sampled from last_logits (the
+                # slot's remembered version — stale across a carry resume);
+                # later tokens from logits this block just produced
+                o.token_versions.extend(
+                    [self._slot_version[slot]]
+                    + [self.weight_version] * (keep - 1))
+                self._slot_version[slot] = self.weight_version
+                self.stats.recorded_tokens += keep
+            if stop_at is not None:
+                # tool boundary before EOS/budget: suspend, free the slot.
+                # Boundary logits are only live when the trigger was the
+                # block's final step (no truncation).
+                o.finish_reason = "stop"
+                sreq = self._suspend_slot(
+                    slot, logits_valid=(stop_at + 1 == K))
+                self._newly_suspended.append(sreq)
+            elif (not alive[slot]) or remaining[slot] <= 0:
                 self._finalize(slot)
         return K
 
@@ -968,16 +1165,254 @@ class Engine:
         return [self.finished[r] for r in sorted(self.finished)]
 
     # ---- suspend / resume --------------------------------------------------
-    def reset(self, params=None, rng: Optional[jax.Array] = None) -> None:
+    def harvest_suspended(self) -> list[SuspendedRequest]:
+        """Pop the requests that hit a stop-token boundary since the last
+        call — the agentic driver's pickup point (the partial-harvest twin
+        of :meth:`harvest`).  Handles stay registered in :attr:`suspended`
+        until resumed or released."""
+        out, self._newly_suspended = self._newly_suspended, []
+        return out
+
+    def suspend(self, rid: int) -> SuspendedRequest:
+        """Suspend a live request by rid (manual / carry-side suspension, at
+        a fused-block boundary so the captured logits stay valid), freeing
+        its slot.  Returns the pinned handle; also registered in
+        :attr:`suspended` until resumed or released."""
+        for slot, (req, _) in self._active.items():
+            if req.rid == rid:
+                return self._suspend_slot(slot)
+        raise KeyError(f"rid {rid} is not live")
+
+    def _suspend_slot(self, slot: int, *,
+                      logits_valid: bool = True) -> SuspendedRequest:
+        """Export slot ``slot``'s generation into a SuspendedRequest and
+        release the slot.  Paged: pin the sequence's full blocks (zero
+        copy), snapshot the partial tail + slot rows.  Contiguous: extract
+        the batch=1 stripe."""
+        req, out = self._active.pop(slot)
+        seed = self._seed_tokens.pop(slot, 0)
+        produced = len(out.tokens) - seed   # tokens this slot lifetime
+        idx = req.prompt_len + produced     # rolled-back sequence position
+        self._host_index[slot] = idx
+        history = np.concatenate(
+            [req.prompt, np.asarray(out.tokens[seed:], np.int32)])
+        kwargs = dict(source=self, logits_valid=logits_valid,
+                      weight_version=self._slot_version[slot])
+        logits = self._last_logits[slot]
+        if not self.paged:
+            one = dict(self._fns["extract"](
+                self.slots.cache, jnp.asarray(slot, jnp.int32)))
+            one["index"] = jnp.asarray(idx, jnp.int32)
+            sreq = SuspendedRequest(
+                req, out, history, idx, req.max_new_tokens - produced,
+                logits, one=one, **kwargs)
+        else:
+            bs = self.config.kv_block_size
+            has_paged = bool(self.slots.paged_names)
+            n_full = (idx // bs) if has_paged else 0
+            pinned = self.slots.pin_prefix(slot, n_full)
+            has_tail = has_paged and idx % bs != 0
+            tail_pid = (int(self.slots.tables[slot, n_full])
+                        if has_tail else 0)
+            tail, slot_leaves = self._fns["suspend"](
+                self.slots.cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(tail_pid, jnp.int32))
+            if not has_tail:
+                tail = {}
+            sreq = SuspendedRequest(
+                req, out, history, idx, req.max_new_tokens - produced,
+                logits, block_ids=pinned, tail=tail,
+                slot_leaves=dict(slot_leaves), **kwargs)
+        self.slots.release(slot)
+        self.suspended[req.rid] = sreq
+        self.stats.suspends += 1
+        return sreq
+
+    def _materialize(self, sreq: SuspendedRequest) -> dict:
+        """Batch=1 contiguous cache view of a handle suspended from *this*
+        engine's pool — the resume-side twin of
+        ``PrefillEngine.export_cache`` (same jitted fetch: gather the
+        pinned blocks through a padded table row, splice the tail
+        snapshot, dequantizing int8 on the way out)."""
+        if sreq.released:
+            raise RuntimeError(
+                f"suspended rid {sreq.req.rid} was already released")
+        if not self.paged:
+            one = dict(sreq.one)
+            one["index"] = jnp.asarray(sreq.index, jnp.int32)
+            return one
+        one = dict(sreq.slot_leaves)
+        one["index"] = jnp.asarray(sreq.index, jnp.int32)
+        if self.slots.paged_names:
+            from repro.serve.disagg import _transfer_fns
+            kv_dtype = (None if self.config.kv_dtype == "auto"
+                        else self.config.kv_dtype)
+            xfer = _transfer_fns(self.model, self.config.max_seq_len,
+                                 self.config.kv_block_size,
+                                 kv_dtype=kv_dtype)
+            row = np.zeros((self.slots.max_blocks,), np.int32)
+            row[:len(sreq.block_ids)] = sreq.block_ids
+            src = {name: self.slots.cache[name]
+                   for name in self.slots.paged_names}
+            if kv_dtype == "int8":
+                src.update({name: self.slots.cache[name]
+                            for name in self.model.scale_cache_names()})
+            one.update(xfer["fetch"](
+                src, jnp.asarray(row), sreq.tail,
+                jnp.asarray(len(sreq.block_ids), jnp.int32)))
+        return one
+
+    def _release_suspended(self, sreq: SuspendedRequest) -> None:
+        if self.paged:
+            for bid in sreq.block_ids:
+                self.slots.alloc.decref(bid)
+        if self.suspended.get(sreq.req.rid) is sreq:
+            del self.suspended[sreq.req.rid]
+
+    def can_resume(self, sreq: SuspendedRequest, tool_tokens=(), *,
+                   max_new_tokens: Optional[int] = None) -> bool:
+        """Re-admission gate for a suspended handle: a free slot and
+        (paged) blocks for the continued sequence's worst-case budget —
+        the same gate :meth:`can_admit_prefilled` applies to transfer
+        handles."""
+        if not self.slots.num_free:
+            return False
+        if not self.paged:
+            return True
+        budget = (max_new_tokens if max_new_tokens is not None
+                  else max(sreq.remaining, 1))
+        total = sreq.index + len(tool_tokens) + budget
+        return self.slots.can_admit(total)
+
+    def resume(self, sreq: SuspendedRequest, tool_tokens=(), *,
+               max_new_tokens: Optional[int] = None,
+               rid: Optional[int] = None,
+               stop_tokens: Optional[tuple] = None,
+               continue_output: bool = False) -> int:
+        """Re-adopt a suspended generation into a fresh slot, optionally
+        feeding ``tool_tokens`` (the environment's reply) through the
+        model first so decoding continues past them.
+
+        The adoption itself is :meth:`admit_prefilled` on a synthetic
+        request whose prompt is the handle's token history (+ tool
+        tokens) — the same path disaggregated prefill handles take, so a
+        handle suspended on one engine resumes on any engine with the
+        same serving shape (``sreq.source`` keeps the pins until the view
+        is materialized here).  Greedy continuation is bit-identical to
+        never having suspended on float pools: every array decode
+        restarts from is moved by pure copies, and injection uses the
+        model's own decode step.  int8 pools requantize to the same int8
+        payload but the recomputed per-position scale can drift one float
+        ulp (``(amax/127)*127``), so logprobs match to float tolerance —
+        the same contract the disaggregated int8 transfer carries.
+
+        ``continue_output=True`` (partial-rollout continuation) carries
+        the suspended :class:`RequestOutput` forward — tokens, behaviour
+        logprobs and per-token weight versions accumulate across the
+        suspension instead of starting a fresh per-turn output.
+        ``max_new_tokens`` grants a fresh per-turn budget (default: the
+        handle's remaining budget) and ``stop_tokens`` replaces the
+        request's boundary set (``()`` on the final turn lets the episode
+        run to EOS instead of re-suspending; ``None`` inherits).  Returns
+        the slot."""
+        if sreq.released:
+            raise RuntimeError(
+                f"suspended rid {sreq.req.rid} was already released")
+        tool = np.asarray(tool_tokens, np.int32).reshape(-1)
+        if tool.size == 0 and not sreq.logits_valid \
+                and not self._rollback_safe:
+            raise RuntimeError(
+                f"rid {sreq.req.rid} was truncated out of a fused decode "
+                f"block and family {self.model.cfg.family!r} cannot replay "
+                f"past recurrent state; resume with tool tokens")
+        budget = (max_new_tokens if max_new_tokens is not None
+                  else max(sreq.remaining, 1))
+        prompt = (np.concatenate([sreq.history, tool])
+                  if tool.size else sreq.history)
+        src = sreq.req
+        req = Request(rid=src.rid if rid is None else rid, prompt=prompt,
+                      max_new_tokens=budget, arrival_time=src.arrival_time,
+                      frontend=src.frontend, priority=src.priority,
+                      deadline=src.deadline, job_id=src.job_id,
+                      stop_tokens=(src.stop_tokens if stop_tokens is None
+                                   else stop_tokens))
+        if req.total_budget > self.config.max_seq_len:
+            raise ValueError(
+                f"resume of rid {req.rid}: history {sreq.index} + tool "
+                f"{tool.size} + budget {budget} exceeds max_seq_len "
+                f"{self.config.max_seq_len}")
+        one = sreq.source._materialize(sreq)
+        if tool.size:
+            logits, one = self._fns["inject"](
+                self.params, jnp.asarray(tool), one)
+            version = self.weight_version
+        elif not sreq.logits_valid:
+            # the boundary logits were truncated out of a fused decode
+            # block: replay the final history token one position back — a
+            # pure KV overwrite on the materialized copy (attention masks
+            # by index; recurrent families never get here, their stop
+            # requests are gated to block_size=1)
+            one["index"] = jnp.asarray(sreq.index - 1, jnp.int32)
+            logits, one = self._fns["inject"](
+                self.params, jnp.asarray(sreq.history[-1:]), one)
+            version = self.weight_version
+        else:
+            # first resumed token samples from the captured boundary row —
+            # across a carry_live weight sync that row is *stale*, which is
+            # exactly the behaviour-provenance the version tracks
+            logits = sreq.logits
+            version = sreq.weight_version
+        slot = self.admit_prefilled(req, logits, one)
+        self._slot_version[slot] = version
+        if continue_output:
+            prev = sreq.out
+            _, out = self._active[slot]
+            out.prompt = prev.prompt
+            out.tokens = list(prev.tokens)
+            out.logprobs = list(prev.logprobs)
+            out.token_versions = list(prev.token_versions)
+            out.finish_reason = ""
+            out.prefill_step = prev.prefill_step
+            out.arrival_time = prev.arrival_time
+            out.first_token_time = prev.first_token_time
+            out.prefix_shared_blocks = prev.prefix_shared_blocks
+            self._seed_tokens[slot] = len(out.tokens)
+        sreq.release()
+        self.stats.resumes += 1
+        return slot
+
+    def reset(self, params=None, rng: Optional[jax.Array] = None, *,
+              carry_live: bool = False) -> None:
         """Prepare a drained engine for its next batch of requests: swap in
         freshly synced weights and a new key stream, and drop the previous
         batch's outputs.  This is how the mux trainer reuses one engine
-        (and its jit cache) across GRPO iterations."""
-        if not self.idle:
+        (and its jit cache) across GRPO iterations.
+
+        ``carry_live=True`` is partial-rollout continuation: instead of
+        requiring a drained engine, every live generation is suspended,
+        the reset (weight swap, radix flush, policy reset) runs, and the
+        suspended generations are resumed under the new weights with
+        their outputs carried forward (mixed per-token weight versions —
+        the clipped importance-ratio machinery sees the stale prefix).
+        Queued-but-unadmitted requests simply stay queued; harvest
+        completed outputs *before* the reset, they are dropped like any
+        other reset."""
+        carried: list[SuspendedRequest] = []
+        if carry_live:
+            for slot in sorted(self._active):
+                carried.append(self._suspend_slot(slot))
+        if self._active or (self.queue and not carry_live):
             raise RuntimeError("reset() on a live engine; drain or "
                                "export_state() first")
+        if self.suspended and not carry_live:
+            raise RuntimeError(
+                f"reset() with {len(self.suspended)} suspended request(s) "
+                f"still pinning the pool (rids "
+                f"{sorted(self.suspended)!r}); resume or release them, or "
+                f"reset(carry_live=True)")
         if params is not None:
             self.params = params
+            self.weight_version += 1
         if rng is not None:
             self._rng = rng
         if self.radix is not None:
@@ -989,12 +1424,20 @@ class Engine:
         # stale arrival seqs / skip counts would poison the next batch
         self.policy.on_reset()
         if self.paged:
-            # an idle engine with a flushed radix must hold zero blocks —
-            # any dangling refcount here is a leak that would compound
-            # across iterations of a persistent engine
-            self.slots.alloc.assert_clean(context="Engine.reset")
+            pins = [b for s in self.suspended.values() for b in s.block_ids]
+            if pins:
+                # suspended handles legitimately hold blocks: check exact
+                # conservation against those pins instead of emptiness
+                self.slots.check(extra_pins=pins)
+            else:
+                # an idle engine with a flushed radix must hold zero
+                # blocks — any dangling refcount here is a leak that would
+                # compound across iterations of a persistent engine
+                self.slots.alloc.assert_clean(context="Engine.reset")
         self.finished.clear()
         self._unharvested.clear()
+        for sreq in carried:
+            self.resume(sreq, continue_output=True)
 
     def export_state(self) -> dict:
         """Checkpoint the live serving state mid-flight (drain of live
@@ -1012,6 +1455,14 @@ class Engine:
                   "alive": self._alive,
                   "remaining": self._remaining,
                   "rng": self._rng}
+        if self.suspended:
+            # suspended handles split like radix entries: array pytrees in
+            # the device section, metadata (deep-copied) in the host part;
+            # the allocator pins they hold are already in the alloc state
+            device["suspended"] = {
+                rid: {"logits": s.logits, "one": s.one, "tail": s.tail,
+                      "slot_leaves": s.slot_leaves}
+                for rid, s in self.suspended.items()}
         slots: dict = {"owner": list(self.slots.owner),
                        "free": list(self.slots.free),
                        "events": list(self.slots.events)}
@@ -1034,6 +1485,17 @@ class Engine:
             "unharvested_rids": [o.rid for o in self._unharvested],
             "stats": self.stats,
             "slots": slots,
+            "weight_version": self.weight_version,
+            "slot_version": list(self._slot_version),
+            "seed_tokens": dict(self._seed_tokens),
+            "suspended": {
+                rid: {"req": s.req, "out": s.out, "history": s.history,
+                      "index": s.index, "remaining": s.remaining,
+                      "block_ids": s.block_ids,
+                      "weight_version": s.weight_version,
+                      "logits_valid": s.logits_valid}
+                for rid, s in self.suspended.items()},
+            "newly_suspended": [s.req.rid for s in self._newly_suspended],
         })
         if self.radix is not None:
             # entry pytrees (logits/tail/slot rows) are device arrays: they
@@ -1075,6 +1537,27 @@ class Engine:
                              for r in host.get("unharvested_rids", ())
                              if r in self.finished]
         self.stats = host["stats"]
+        self.weight_version = host.get("weight_version", 0)
+        self._slot_version = list(host.get(
+            "slot_version", [0] * self.config.num_slots))
+        self._seed_tokens = {int(k): int(v)
+                             for k, v in host.get("seed_tokens", {}).items()}
+        dev_susp = dev.get("suspended", {})
+        self.suspended = {}
+        for rid, m in host.get("suspended", {}).items():
+            d = dev_susp[rid]
+            self.suspended[int(rid)] = SuspendedRequest(
+                m["req"], m["out"], m["history"], m["index"],
+                m["remaining"], jnp.asarray(d["logits"]), source=self,
+                logits_valid=m["logits_valid"], block_ids=m["block_ids"],
+                tail=jax.tree.map(jnp.asarray, d["tail"]),
+                slot_leaves=jax.tree.map(jnp.asarray, d["slot_leaves"]),
+                one=(None if d["one"] is None
+                     else jax.tree.map(jnp.asarray, d["one"])),
+                weight_version=m["weight_version"])
+        self._newly_suspended = [
+            self.suspended[r] for r in host.get("newly_suspended", ())
+            if r in self.suspended]
         sl = host["slots"]
         self.slots.owner = list(sl["owner"])
         self.slots.free = list(sl["free"])

@@ -1,0 +1,77 @@
+"""The written engine contract: what a rollout executor may drive.
+
+``DisaggRouter`` has always duck-typed the ``Engine`` surface that
+``run_trace``, ``generate_continuous`` and the streaming executor drive;
+with the suspend/resume lifecycle that surface grew, and an implicit
+contract over two implementations is how surfaces silently drift.
+:class:`EngineProtocol` writes it down once; the conformance test
+(``tests/test_protocol.py``) is parameterized over both implementations
+so a method added to one but not the other fails loudly.
+
+Beyond the methods the protocol can express, conforming engines also
+carry the data surface drivers read:
+
+``params`` / ``paged`` / ``slots`` / ``queue`` / ``finished`` /
+``stats`` / ``radix`` / ``num_active`` / ``idle`` / ``clock`` (settable)
+/ ``weight_version`` / ``suspended``
+
+— checked attribute-by-attribute in the conformance test, since
+``runtime_checkable`` protocols only verify callables.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+#: Data attributes every conforming engine exposes (see module docstring).
+ENGINE_ATTRS = ("config", "params", "paged", "slots", "queue", "finished",
+                "stats", "radix", "num_active", "idle", "clock",
+                "weight_version", "suspended")
+
+
+@runtime_checkable
+class EngineProtocol(Protocol):
+    """Continuous-batching engine surface (monolithic or disaggregated).
+
+    Lifecycle: ``submit`` feeds the waiting queue, ``step`` runs one
+    scheduler tick, ``harvest`` drains finished outputs without stopping
+    the engine, ``run`` drives to idle.  ``reset`` prepares a persistent
+    engine for the next GRPO iteration (``carry_live=True`` suspends and
+    resumes live generations across the weight swap instead of requiring
+    a drain).  ``export_state``/``import_state`` checkpoint mid-flight.
+    ``suspend``/``resume`` (plus ``harvest_suspended`` for stop-token
+    boundaries the engine detects itself) are the multi-turn tool-call
+    lifecycle, and ``admit_prefilled`` is the underlying KV adoption path
+    shared with disaggregated prefill/decode transfer.
+    """
+
+    def submit(self, req) -> bool: ...
+
+    def step(self) -> int: ...
+
+    def run(self, *, max_ticks: Optional[int] = None): ...
+
+    def harvest(self) -> list: ...
+
+    def reset(self, params=None, rng=None, *, carry_live: bool = False
+              ) -> None: ...
+
+    def export_state(self) -> dict: ...
+
+    def import_state(self, state: dict) -> None: ...
+
+    def can_admit_prefilled(self, req) -> bool: ...
+
+    def admit_prefilled(self, req, logits, one) -> int: ...
+
+    def suspend(self, rid: int): ...
+
+    def harvest_suspended(self) -> list: ...
+
+    def can_resume(self, sreq, tool_tokens=(), *,
+                   max_new_tokens: Optional[int] = None) -> bool: ...
+
+    def resume(self, sreq, tool_tokens=(), *,
+               max_new_tokens: Optional[int] = None,
+               rid: Optional[int] = None,
+               stop_tokens: Optional[tuple] = None,
+               continue_output: bool = False) -> int: ...

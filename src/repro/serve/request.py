@@ -36,6 +36,13 @@ class Request:
     prefix (GRPO submits each prompt ``group`` times): the paged engine's
     radix index (``repro.serve.radix``) prefills one member and pins the
     prompt's full KV blocks under every member's slot.
+
+    ``stop_tokens`` turns the request multi-turn: sampling any of these
+    ids does not *finish* the request — the engine records the trigger
+    token (like EOS), **suspends** the request into a pinned
+    ``SuspendedRequest`` handle and frees the slot for other work.  The
+    agentic driver (``rl.agentic``) resumes it with the tool-result
+    tokens appended.
     """
     rid: int
     prompt: np.ndarray
@@ -46,11 +53,14 @@ class Request:
     deadline: Optional[float] = None     # absolute driver-clock finish target
     prefix_key: Optional[Any] = None     # hashable prompt-sharing tag
     job_id: Optional[str] = None         # submitting job (per-job budgets)
+    stop_tokens: tuple = ()              # tool-boundary ids -> suspend, not
+    #                                      finish (serve.engine suspend API)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        self.stop_tokens = tuple(int(t) for t in self.stop_tokens)
 
     @property
     def prompt_len(self) -> int:
@@ -63,12 +73,22 @@ class Request:
 
 @dataclass
 class RequestOutput:
-    """Completed request: generated tokens + per-token behaviour logprobs."""
+    """Completed request: generated tokens + per-token behaviour logprobs.
+
+    ``token_versions`` records, per generated token, the engine weight
+    version whose logits the token was sampled from — the provenance
+    partial-rollout continuation needs: a generation carried across a
+    weight sync (``Engine.reset(carry_live=True)``) mixes versions, and
+    the clipped importance-ratio diagnostics / ``--mux-staleness`` guard
+    read the spread.  Single-sync generations have one version
+    throughout."""
     rid: int
     prompt: np.ndarray
     tokens: list[int] = field(default_factory=list)
     logprobs: list[float] = field(default_factory=list)
-    finish_reason: str = ""              # "eos" | "length"
+    token_versions: list[int] = field(default_factory=list)
+    finish_reason: str = ""              # "eos" | "length" ("stop" while
+    #                                      suspended at a tool boundary)
     # trace timestamps (engine step counts and/or driver clock)
     prefill_step: int = -1
     finish_step: int = -1

@@ -39,6 +39,7 @@ it into the job's rollout-side critical path).
 from __future__ import annotations
 
 import contextlib
+import copy
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -248,6 +249,7 @@ class DisaggRouter:
                 raise ValueError(
                     f"request {req.rid}: needs {need} KV blocks but the "
                     f"decode pool has {self.decode.slots.alloc.num_blocks}")
+        self.decode._validate_stop_tokens(req)
         return self.prefill.submit(req)
 
     # ---- scheduler ---------------------------------------------------------
@@ -307,6 +309,77 @@ class DisaggRouter:
         return [self.finished[r] for r in sorted(self.finished)]
 
     # ---- suspend / resume --------------------------------------------------
+    @property
+    def weight_version(self) -> int:
+        return self.decode.weight_version
+
+    @property
+    def suspended(self):
+        return self.decode.suspended
+
+    def harvest_suspended(self):
+        return self.decode.harvest_suspended()
+
+    def suspend(self, rid: int):
+        """Suspend an *actively decoding* request.  Requests still waiting
+        or mid-transfer have no KV worth keeping — drop and resubmit
+        those instead."""
+        return self.decode.suspend(rid)
+
+    def can_resume(self, sreq, tool_tokens=(), *,
+                   max_new_tokens: Optional[int] = None) -> bool:
+        return self.decode.can_resume(sreq, tool_tokens,
+                                      max_new_tokens=max_new_tokens)
+
+    def resume(self, sreq, tool_tokens=(), *,
+               max_new_tokens: Optional[int] = None,
+               rid: Optional[int] = None,
+               stop_tokens: Optional[tuple] = None,
+               continue_output: bool = False) -> int:
+        """Resume a suspended request straight into the decode pool —
+        suspended KV already lives (or is re-materialized) decode-side,
+        so resumption bypasses the prefill engine entirely."""
+        return self.decode.resume(
+            sreq, tool_tokens, max_new_tokens=max_new_tokens, rid=rid,
+            stop_tokens=stop_tokens, continue_output=continue_output)
+
+    def can_admit_prefilled(self, req) -> bool:
+        return self.decode.can_admit_prefilled(req)
+
+    def admit_prefilled(self, req, logits, one) -> int:
+        return self.decode.admit_prefilled(req, logits, one)
+
+    # ---- checkpoint --------------------------------------------------------
+    def export_state(self) -> dict:
+        """Checkpoint the full router: the decode engine's device/host
+        snapshot plus the prefill-side waiting set.  Prefilled-but-unadopted
+        handles fold back into plain waiting requests (re-queued at the
+        front, their pins released) — re-prefilling them under the same
+        weights is bit-identical, so the snapshot stays exact without
+        serializing the prefill pool."""
+        self.pending_transfer.extend(self.prefill.pop_ready())
+        requeue = [h.req for h in self.pending_transfer]
+        self.drop_pending()
+        for req in reversed(requeue):
+            self.prefill.queue._q.appendleft(req)
+        state = self.decode.export_state()
+        state["prefill_queue"] = copy.deepcopy(list(self.prefill.queue._q))
+        return state
+
+    def import_state(self, state: dict) -> None:
+        state = dict(state)
+        waiting = state.pop("prefill_queue", [])
+        self.pending_transfer.extend(self.prefill.pop_ready())
+        self.drop_pending()
+        if self.prefill.radix is not None:
+            self.prefill.radix.flush()
+        if self.prefill.paged:
+            self.prefill.slots.alloc.assert_clean(
+                context="DisaggRouter.import_state")
+        self.prefill.queue._q.clear()
+        self.prefill.queue._q.extend(copy.deepcopy(waiting))
+        self.decode.import_state(state)
+
     def drop_pending(self) -> int:
         """Release every handle still waiting for adoption (mid-flight
         drop).  The block conservation invariant must hold again
@@ -316,13 +389,32 @@ class DisaggRouter:
             self.pending_transfer.popleft().release()
         return n
 
-    def reset(self, params=None, rng=None) -> None:
+    def reset(self, params=None, rng=None, *, carry_live=False) -> None:
         """Prepare both engines for the next batch (persistent-router reuse
         across GRPO iterations).  In-flight transfer handles are dropped —
-        their pins released — and both pools are asserted leak-free."""
-        if self.prefill.queue or not self.decode.idle:
-            raise RuntimeError("reset() on a live router; drain first")
+        their pins released — and both pools are asserted leak-free.
+
+        ``carry_live=True`` is the partial-rollout weight sync: live decode
+        generations are suspended and resumed under the new weights by the
+        decode engine itself (their outputs keep accumulating, with
+        ``token_versions`` recording the switch), the waiting queue is held
+        across the prefill reset, and prefilled-but-unadopted handles fall
+        back to plain waiting requests — their KV is stale the moment the
+        weights swap, so re-prefilling under the new weights is the correct
+        (and cheapest-to-keep-exact) continuation."""
+        if not carry_live:
+            if self.prefill.queue or not self.decode.idle:
+                raise RuntimeError("reset() on a live router; drain first")
+            self.pending_transfer.extend(self.prefill.pop_ready())
+            self.drop_pending()
+            self.prefill.reset(params)
+            self.decode.reset(params, rng)
+            return
         self.pending_transfer.extend(self.prefill.pop_ready())
+        requeue = [h.req for h in self.pending_transfer]
         self.drop_pending()
+        held = list(self.prefill.queue._q)
+        self.prefill.queue._q.clear()
         self.prefill.reset(params)
-        self.decode.reset(params, rng)
+        self.decode.reset(params, rng, carry_live=True)
+        self.prefill.queue._q.extend(requeue + held)

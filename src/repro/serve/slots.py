@@ -237,11 +237,13 @@ class PagedSlotManager:
             self._dirty = True
 
     def pin_prefix(self, slot: int, n: int) -> list[int]:
-        """Incref the slot's first ``n`` table entries — full, immutable
-        prompt blocks — on behalf of an external pin holder (a KV transfer
-        handle, mirroring the radix index's own pins) and return their
-        ids.  The pins survive :meth:`release` of the slot: the blocks
-        stay resident, un-copied, until the holder decrefs them."""
+        """Incref the slot's first ``n`` table entries — full blocks a
+        decode step can never write again, whether prompt prefill or
+        mid-generation KV — on behalf of an external pin holder (a KV
+        transfer handle or a suspended request, mirroring the radix
+        index's own pins) and return their ids.  The pins survive
+        :meth:`release` of the slot: the blocks stay resident, un-copied,
+        until the holder decrefs them."""
         rid = self.owner[slot]
         if rid is None:
             raise AssertionError(f"pin_prefix on free slot {slot}")

@@ -1,0 +1,154 @@
+"""``RolloutSpec``: one description of how rollouts are served.
+
+Seven PRs of flag accretion left the engine-shape knobs (``num_slots``,
+``kv_layout``, ``kv_block_size``, ``num_kv_blocks``, ``sched``,
+``prefix_share``, ``disagg``, ``kernel_backend``, ``kv_dtype``, ...)
+duplicated across ``generate_continuous``, ``generate_continuous_stream``,
+``GRPOJob`` and two launch entrypoints, each copy one missed edit away
+from drifting.  :class:`RolloutSpec` is the single source: it derives the
+per-session :class:`~repro.serve.engine.EngineConfig` /
+:class:`~repro.serve.router.DisaggConfig` (which add the session-scoped
+sampler contract and sequence budget) and builds the engine.
+
+``RolloutSpec.from_args`` consumes the argparse namespaces of both
+``launch/serve.py`` and ``launch/train.py`` — attribute names differ
+slightly between the two (``slots`` vs ``num_slots``; serve's
+``--disagg`` family), so it reads defensively via ``getattr``.  The old
+per-function kwargs keep working through a shim in ``rl.rollout`` that
+warns once per process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from repro.serve.engine import EngineConfig
+from repro.serve.router import DisaggConfig
+
+
+@dataclass(frozen=True)
+class RolloutSpec:
+    """Engine shape + rollout session fields, sampler- and batch-agnostic.
+
+    ``disagg`` selects disaggregated prefill/decode serving: ``None``
+    (monolithic), ``True`` (split ``num_slots`` 1:3 prefill:decode), a
+    dict of :class:`DisaggConfig` overrides, or a full ``DisaggConfig``.
+    ``group``/``job_id`` tag GRPO prompt groups and the submitting job
+    for prefix sharing and per-job scheduler budgets.  ``carry`` opts the
+    streaming executor into partial-rollout continuation: a mid-rollout
+    weight sync suspends live generations and resumes them under the new
+    weights (``Engine.reset(carry_live=True)``) instead of finishing the
+    iteration on stale weights.
+    """
+    num_slots: Optional[int] = None      # default: one slot per request
+    block_size: int = 1
+    kv_layout: str = "contiguous"
+    kv_block_size: int = 16
+    num_kv_blocks: Optional[int] = None
+    sched: str = "fifo"
+    prefix_share: bool = False
+    kernel_backend: str = "jnp"
+    kv_dtype: Optional[str] = None
+    disagg: Any = None                   # None | True | dict | DisaggConfig
+    group: Optional[int] = None
+    job_id: Optional[str] = None
+    carry: bool = False
+
+    def replace(self, **kw) -> "RolloutSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ---- config derivation -------------------------------------------------
+    def engine_config(self, *, batch: int, max_seq_len: int, eos_id: int,
+                      temperature: float,
+                      max_waiting: Optional[int] = None) -> EngineConfig:
+        return EngineConfig(
+            num_slots=batch if self.num_slots is None else self.num_slots,
+            max_seq_len=max_seq_len, eos_id=eos_id, temperature=temperature,
+            block_size=self.block_size, max_waiting=max_waiting,
+            kv_layout=self.kv_layout, kv_block_size=self.kv_block_size,
+            num_kv_blocks=self.num_kv_blocks, sched=self.sched,
+            prefix_share=self.prefix_share,
+            kernel_backend=self.kernel_backend, kv_dtype=self.kv_dtype)
+
+    def disagg_config(self, *, batch: int, max_seq_len: int, eos_id: int,
+                      temperature: float) -> Optional[DisaggConfig]:
+        """The two-pool shape, or ``None`` when serving monolithic.
+        ``disagg=True`` splits ``num_slots`` 1:3 prefill:decode; a dict
+        overrides any ``DisaggConfig`` field."""
+        if not self.disagg:
+            return None
+        if isinstance(self.disagg, DisaggConfig):
+            return self.disagg
+        n = batch if self.num_slots is None else self.num_slots
+        opts = {} if self.disagg is True else dict(self.disagg)
+        pf = opts.pop("prefill_slots", max(1, n // 4))
+        return DisaggConfig(
+            prefill_slots=pf,
+            decode_slots=opts.pop("decode_slots", max(1, n - pf)),
+            max_seq_len=max_seq_len, eos_id=eos_id, temperature=temperature,
+            block_size=self.block_size, kv_layout=self.kv_layout,
+            kv_block_size=self.kv_block_size,
+            decode_kv_blocks=opts.pop("decode_kv_blocks",
+                                      self.num_kv_blocks),
+            sched=self.sched, prefix_share=self.prefix_share,
+            kernel_backend=opts.pop("kernel_backend", self.kernel_backend),
+            kv_dtype=opts.pop("kv_dtype", self.kv_dtype), **opts)
+
+    def build_engine(self, model, params, *, batch: int, max_seq_len: int,
+                     eos_id: int, temperature: float, rng=None, policy=None):
+        """Build the engine this spec describes — a monolithic
+        :class:`~repro.serve.engine.Engine` or a
+        :class:`~repro.serve.router.DisaggRouter` (both satisfy
+        :class:`~repro.serve.protocol.EngineProtocol`)."""
+        from repro.serve.engine import Engine
+        from repro.serve.router import DisaggRouter
+
+        dcfg = self.disagg_config(batch=batch, max_seq_len=max_seq_len,
+                                  eos_id=eos_id, temperature=temperature)
+        if dcfg is not None:
+            return DisaggRouter(model, params, dcfg, rng=rng, policy=policy,
+                                job_id=self.job_id)
+        return Engine(model, params, self.engine_config(
+            batch=batch, max_seq_len=max_seq_len, eos_id=eos_id,
+            temperature=temperature), rng=rng, policy=policy)
+
+    # ---- argparse bridge ---------------------------------------------------
+    @classmethod
+    def from_args(cls, args, **overrides) -> "RolloutSpec":
+        """Build a spec from a launch-entrypoint argparse namespace
+        (``launch/serve.py`` and ``launch/train.py`` both route through
+        here).  Flags a given parser doesn't define fall back to the
+        spec defaults; ``overrides`` win over everything."""
+        def get(*names, default=None):
+            for n in names:
+                if getattr(args, n, None) is not None:
+                    return getattr(args, n)
+            return default
+
+        disagg = None
+        if getattr(args, "disagg", False):
+            disagg = {k: v for k, v in
+                      (("prefill_slots", getattr(args, "prefill_slots",
+                                                 None)),
+                       ("decode_slots", getattr(args, "decode_slots", None)),
+                       ("prefill_kv_blocks", getattr(args,
+                                                     "prefill_kv_blocks",
+                                                     None)),
+                       ("decode_kv_blocks", getattr(args, "decode_kv_blocks",
+                                                    None)))
+                      if v is not None} or True
+        spec = cls(
+            num_slots=get("slots", "num_slots"),
+            block_size=get("block_size", "engine_block_size", default=1),
+            kv_layout=get("kv", "kv_layout", default="contiguous"),
+            kv_block_size=get("kv_block_size", default=16),
+            num_kv_blocks=get("num_kv_blocks"),
+            sched=get("sched", default="fifo"),
+            prefix_share=bool(getattr(args, "prefix_share", False)),
+            kernel_backend=get("kernel_backend", default="jnp"),
+            kv_dtype=get("kv_dtype"),
+            disagg=disagg,
+            group=get("group"),
+            carry=bool(getattr(args, "carry", False)))
+        return spec.replace(**overrides) if overrides else spec

@@ -1,0 +1,123 @@
+"""EngineProtocol conformance + RolloutSpec consolidation.
+
+``repro.serve.protocol.EngineProtocol`` is the explicit contract the rl
+layer programs against: anything admitted there must expose the full
+submit/step/harvest lifecycle *plus* the suspend/resume and
+checkpoint surface, and the data attributes (``ENGINE_ATTRS``) the
+drivers read.  Both implementations — the monolithic ``Engine`` and the
+``DisaggRouter`` — are checked structurally (``isinstance`` against the
+runtime-checkable protocol) and attribute-by-attribute, so adding a
+method to the protocol without implementing it on both fails here, not
+in a driver at 2am.
+
+``RolloutSpec`` is the consolidated engine-shape surface: one frozen
+dataclass feeding ``launch.serve`` and ``launch.train`` identically,
+with the old loose-kwargs call shape kept working behind a warn-once
+deprecation shim.
+"""
+import warnings
+
+import jax
+import pytest
+from test_serve_engine import MAX_LEN, get_model
+
+from repro.serve import (ENGINE_ATTRS, DisaggConfig, DisaggRouter, Engine,
+                         EngineConfig, EngineProtocol, RolloutSpec)
+
+
+def _make(kind):
+    m, params = get_model("internlm2-1.8b")
+    if kind == "disagg":
+        return DisaggRouter(m, params, DisaggConfig(
+            prefill_slots=1, decode_slots=2, max_seq_len=MAX_LEN,
+            temperature=0.0))
+    return Engine(m, params, EngineConfig(num_slots=2, max_seq_len=MAX_LEN,
+                                          temperature=0.0))
+
+
+@pytest.mark.parametrize("kind", ["mono", "disagg"])
+def test_engine_protocol_conformance(kind):
+    eng = _make(kind)
+    # method surface: runtime_checkable verifies every protocol callable
+    assert isinstance(eng, EngineProtocol)
+    # data surface: checked one attribute at a time (runtime_checkable
+    # only inspects callables)
+    for attr in ENGINE_ATTRS:
+        assert hasattr(eng, attr), f"{kind} missing {attr}"
+
+
+def test_protocol_rejects_non_engines():
+    class Almost:
+        def submit(self, req):
+            return True
+
+    assert not isinstance(Almost(), EngineProtocol)
+
+
+# ---------------------------------------------------------------------------
+# RolloutSpec: one source of engine shape for serve and train
+# ---------------------------------------------------------------------------
+def test_spec_builds_both_topologies():
+    m, params = get_model("internlm2-1.8b")
+    mono = RolloutSpec(num_slots=2).build_engine(
+        m, params, batch=2, max_seq_len=MAX_LEN, eos_id=-1, temperature=0.0)
+    assert isinstance(mono, Engine) and isinstance(mono, EngineProtocol)
+    dis = RolloutSpec(num_slots=4, disagg=True).build_engine(
+        m, params, batch=4, max_seq_len=MAX_LEN, eos_id=-1, temperature=0.0)
+    assert isinstance(dis, DisaggRouter)
+    assert dis.config.prefill_slots == 1      # 1:3 default split
+    assert dis.config.decode_slots == 3
+
+
+def test_spec_from_args_maps_serve_and_train_namespaces():
+    import argparse
+    serve_ns = argparse.Namespace(
+        slots=4, block_size=2, kv="paged", kv_block_size=8,
+        num_kv_blocks=32, sched="slo", prefix_share=True, disagg=True,
+        prefill_slots=1, decode_slots=3, prefill_kv_blocks=None,
+        decode_kv_blocks=None, kernel_backend="jnp", kv_dtype="int8",
+        group=4)
+    spec = RolloutSpec.from_args(serve_ns)
+    assert (spec.num_slots, spec.kv_layout, spec.kv_block_size) == \
+        (4, "paged", 8)
+    assert spec.disagg == {"prefill_slots": 1, "decode_slots": 3}
+    assert spec.kv_dtype == "int8" and spec.sched == "slo"
+    train_ns = argparse.Namespace(
+        num_slots=8, engine_block_size=1, kv="contiguous", carry=True)
+    spec = RolloutSpec.from_args(train_ns)
+    assert spec.num_slots == 8 and spec.carry
+
+
+def test_legacy_kwargs_warn_once_and_conflict_raises():
+    import numpy as np
+
+    from repro.data import tokenizer as tok
+    from repro.rl import SamplerConfig, generate_continuous
+
+    m, params = get_model("internlm2-1.8b")
+    prompts = jax.numpy.asarray(np.stack(
+        [np.asarray(tok.encode(p, bos=True), np.int32)
+         for p in ["1+2=", "7+8="]]))
+    sampler = SamplerConfig(max_new_tokens=4, temperature=0.0)
+    key = jax.random.PRNGKey(0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import repro.rl.rollout as ro
+        ro._warned_legacy[0] = False        # fresh process view
+        generate_continuous(m, params, prompts, key, sampler, num_slots=2,
+                            kv_layout="paged", kv_block_size=4)
+        generate_continuous(m, params, prompts, key, sampler, num_slots=2,
+                            kv_layout="paged", kv_block_size=4)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1                   # warn once per process, not call
+    assert "RolloutSpec" in str(deps[0].message)
+    with pytest.raises(ValueError, match="legacy engine kwargs"):
+        generate_continuous(m, params, prompts, key, sampler,
+                            spec=RolloutSpec(num_slots=2), num_slots=4)
+    # spec path: silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = generate_continuous(m, params, prompts, key, sampler,
+                                  spec=RolloutSpec(num_slots=2))
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert "token_versions" in out

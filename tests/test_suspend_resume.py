@@ -1,0 +1,314 @@
+"""Suspend/resume lifecycle (``repro.serve.engine`` stop-token boundaries):
+bit-exactness of an interrupted-and-resumed generation against the
+uninterrupted one across every layout × dtype × topology combination,
+tool-token injection equivalence against a prompt-continuation reference,
+KV refcount conservation when handles are dropped instead of resumed,
+partial-rollout continuation across a weight sync
+(``Engine.reset(carry_live=True)``) with per-token version provenance,
+checkpoint round-trips that carry suspended handles — including int8
+scale leaves and radix prefix pins — and the recurrent-family guard
+(``stop_tokens`` needs ``block_size == 1`` for rollback-free boundaries).
+
+The core contract: suspension changes *when* a sequence's tokens are
+computed, never *what* is computed.  fp32 resumes are bit-identical
+(tokens and logprobs); int8 KV resumes are token-identical with logprobs
+inside the same 1e-5 envelope the int8 layout is held to elsewhere
+(requantizing the partial tail block costs ~1 ulp on the scales).
+"""
+import numpy as np
+import pytest
+from test_serve_engine import MAX_LEN, get_model, reference
+
+from repro.data import tokenizer as tok
+from repro.serve import (DisaggConfig, DisaggRouter, Engine, EngineConfig,
+                         Request)
+
+MAX_NEW = 10
+# greedy step-3 token of "1+2=" on the shared fixture — probed per test so
+# the suspension actually fires mid-sequence
+PROMPT = "1+2="
+
+
+def _req(rid=0, stop_tokens=(), max_new=MAX_NEW, prompt=PROMPT):
+    return Request(rid=rid,
+                   prompt=np.asarray(tok.encode(prompt, bos=True), np.int32),
+                   max_new_tokens=max_new, stop_tokens=stop_tokens)
+
+
+def _build(m, params, kind, kv, kv_dtype, **kw):
+    if kind == "disagg":
+        return DisaggRouter(m, params, DisaggConfig(
+            prefill_slots=1, decode_slots=2, max_seq_len=MAX_LEN,
+            temperature=0.0, kv_layout=kv, kv_block_size=4,
+            kv_dtype=kv_dtype, **kw))
+    return Engine(m, params, EngineConfig(
+        num_slots=2, max_seq_len=MAX_LEN, temperature=0.0, kv_layout=kv,
+        kv_block_size=4, kv_dtype=kv_dtype, **kw))
+
+
+def _pick_stop(m, params):
+    """A token the greedy path emits early and again later — suspending on
+    it exercises a genuine mid-sequence boundary."""
+    ref_t, _ = reference(m, params, _req(), max_new=MAX_NEW)
+    return ref_t[2]
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: suspended-and-resumed == uninterrupted, full matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["mono", "disagg"])
+@pytest.mark.parametrize("kv,kv_dtype", [
+    ("contiguous", None), ("paged", None), ("paged", "int8")])
+def test_resume_matches_uninterrupted(kind, kv, kv_dtype):
+    m, params = get_model("internlm2-1.8b")
+    stop = _pick_stop(m, params)
+    gen_t, gen_l = reference(m, params, _req(), max_new=MAX_NEW)
+    ref_eng = _build(m, params, kind, kv, kv_dtype)
+    ref_eng.submit(_req())
+    [ref_out] = ref_eng.run()
+    ref_t, ref_l = ref_out.tokens, np.asarray(ref_out.logprobs)
+    assert ref_t == gen_t                   # engine == generate, as ever
+    if kv_dtype is None:                    # int8 KV drifts ~1e-2 from fp32
+        np.testing.assert_allclose(ref_l, gen_l, atol=1e-5)
+
+    eng = _build(m, params, kind, kv, kv_dtype)
+    eng.submit(_req(stop_tokens=(stop,)))
+    eng.run()
+    [sreq] = eng.harvest_suspended()
+    assert sreq.out.finish_reason == "stop"
+    assert sreq.out.tokens[-1] == stop
+    n0 = len(sreq.out.tokens)
+    assert 0 < n0 < MAX_NEW                 # genuinely mid-sequence
+    # no tool tokens + no stop tokens -> must replay the uninterrupted tail
+    eng.resume(sreq, (), max_new_tokens=MAX_NEW - n0, rid=1,
+               stop_tokens=())
+    [out] = eng.run()
+    tokens = sreq.out.tokens + out.tokens
+    logp = list(sreq.out.logprobs) + list(out.logprobs)
+    assert tokens == ref_t, (kind, kv, kv_dtype)
+    if kv_dtype is None:
+        # fp32 boundary logits are carried, not recomputed: the resumed
+        # tail is bit-identical to the uninterrupted engine run
+        np.testing.assert_array_equal(np.asarray(logp, np.float32), ref_l)
+    else:
+        # int8: requantizing the dequantized tail costs ~1 ulp on scales
+        np.testing.assert_allclose(logp, ref_l, atol=1e-5)
+
+
+def test_resume_with_tool_tokens_matches_prompt_continuation():
+    """Resuming with injected tool tokens must equal a fresh request whose
+    prompt is (original prompt + generated turn + tool tokens) — the
+    synthetic-prompt adoption path is semantically a prefill."""
+    m, params = get_model("internlm2-1.8b")
+    stop = _pick_stop(m, params)
+    tool = np.asarray([7, 11, 13], np.int32)
+
+    eng = _build(m, params, "mono", "paged", None)
+    eng.submit(_req(stop_tokens=(stop,)))
+    eng.run()
+    [sreq] = eng.harvest_suspended()
+    eng.resume(sreq, tool, max_new_tokens=6, rid=1, stop_tokens=())
+    [out] = eng.run()
+
+    cont_prompt = np.concatenate([sreq.req.prompt,
+                                  np.asarray(sreq.out.tokens, np.int32),
+                                  tool])
+    ref = _build(m, params, "mono", "paged", None)
+    ref.submit(Request(rid=0, prompt=cont_prompt, max_new_tokens=6))
+    [ref_out] = ref.run()
+    assert out.tokens == ref_out.tokens
+    np.testing.assert_allclose(out.logprobs, ref_out.logprobs, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Refcount conservation: dropped handles must not leak KV blocks
+# ---------------------------------------------------------------------------
+def test_dropped_handle_restores_block_conservation():
+    m, params = get_model("internlm2-1.8b")
+    stop = _pick_stop(m, params)
+    eng = _build(m, params, "mono", "paged", None)
+    eng.submit(_req(rid=0, stop_tokens=(stop,)))
+    eng.submit(_req(rid=1, stop_tokens=(stop,), prompt="10+20="))
+    eng.run()
+    handles = eng.harvest_suspended()
+    assert handles                          # at least rid 0 suspended
+    alloc = eng.slots.alloc
+    live_before = alloc.num_live
+    for h in handles:
+        h.release()
+        h.release()                         # idempotent
+    assert alloc.num_live < live_before
+    assert alloc.num_free + alloc.num_live == alloc.num_blocks
+    eng.run()                               # any non-suspended stragglers
+    eng.harvest()
+    alloc.assert_clean(context="dropped suspended handles")
+    eng.reset(params)                       # clean reset: nothing pinned
+
+
+def test_disagg_dropped_handle_conservation():
+    m, params = get_model("internlm2-1.8b")
+    stop = _pick_stop(m, params)
+    router = _build(m, params, "disagg", "paged", None)
+    router.submit(_req(rid=0, stop_tokens=(stop,)))
+    router.run()
+    [sreq] = router.harvest_suspended()
+    sreq.release()
+    router.prefill.slots.alloc.assert_clean()
+    router.decode.slots.alloc.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# Partial-rollout continuation: carry across a weight sync with provenance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["mono", "disagg"])
+def test_carry_live_across_weight_sync(kind):
+    """reset(carry_live=True) suspends live generations, swaps weights and
+    resumes them: tokens before the sync match the old-weights reference,
+    token_versions records exactly where the behaviour policy changed."""
+    import jax
+    m, params = get_model("internlm2-1.8b")
+    params2 = m.init(jax.random.PRNGKey(7))   # a genuinely different policy
+    ref_t, ref_l = reference(m, params, _req(), max_new=MAX_NEW)
+
+    eng = _build(m, params, kind, "paged", None)
+    eng.submit(_req())
+    for _ in range(4):                      # prefill + a few decode steps
+        eng.step()
+    eng.reset(params2, carry_live=True)
+    [out] = eng.run()
+    assert len(out.tokens) == MAX_NEW
+    vers = list(out.token_versions)
+    assert set(vers) == {0, 1}
+    n_old = vers.count(0)
+    assert 0 < n_old < MAX_NEW
+    # pre-sync tokens and logprobs are the old policy's, bit-for-bit
+    assert out.tokens[:n_old] == ref_t[:n_old]
+    np.testing.assert_allclose(out.logprobs[:n_old], ref_l[:n_old],
+                               atol=1e-5)
+    # provenance is monotone: once the sync happens, no token is ever
+    # attributed to the old policy again
+    assert vers == sorted(vers)
+    # post-sync decode really uses params2: the tail diverges from the
+    # old policy's continuation (KV stays the old rollout's, by design —
+    # a carried generation is NOT a re-prefill under the new weights)
+    assert out.tokens[n_old:] != ref_t[n_old:]
+    # and the whole carry procedure is deterministic
+    eng2 = _build(m, params, kind, "paged", None)
+    eng2.submit(_req())
+    for _ in range(4):
+        eng2.step()
+    eng2.reset(params2, carry_live=True)
+    [rep] = eng2.run()
+    assert rep.tokens == out.tokens
+    np.testing.assert_array_equal(rep.logprobs, out.logprobs)
+    assert list(rep.token_versions) == vers
+
+
+def test_stream_carry_versions_reach_training_arrays():
+    """The streaming generator polls sync_params between ticks; a version
+    bump mid-rollout must surface as mixed token_versions in the group
+    dicts the trainer consumes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.rl import SamplerConfig
+    from repro.rl.rollout import generate_continuous_stream
+    from repro.serve import RolloutSpec
+
+    m, params = get_model("internlm2-1.8b")
+    params2 = m.init(jax.random.PRNGKey(7))
+    prompts = jnp.asarray(np.stack(
+        [np.asarray(tok.encode(p, bos=True), np.int32)
+         for p in ["1+2=", "1+2=", "7+8=", "7+8="]]))
+    sampler = SamplerConfig(max_new_tokens=8, temperature=0.0)
+    state = {"n": 0}
+
+    def sync_params():
+        state["n"] += 1
+        # bump the version after a few polls -> mid-rollout weight sync
+        return (params2, 1) if state["n"] > 3 else (params, 0)
+
+    gouts = list(generate_continuous_stream(
+        m, params, prompts, jax.random.PRNGKey(0), sampler,
+        spec=RolloutSpec(num_slots=2, group=2), sync_params=sync_params))
+    assert state["n"] > 3                   # the generator really polled
+    tv = np.concatenate([np.asarray(g["token_versions"]) for g in gouts])
+    msk = np.concatenate([np.asarray(g["mask"]) for g in gouts]) > 0
+    seen = set(int(v) for v in tv[msk])
+    assert 1 in seen                        # post-sync tokens are tagged
+    assert -1 not in seen                   # padding never leaks into mask
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trips with suspended handles, int8 scales, radix pins
+# ---------------------------------------------------------------------------
+def test_export_import_roundtrip_with_suspended_int8_radix():
+    m, params = get_model("internlm2-1.8b")
+    stop = _pick_stop(m, params)
+
+    def fill(eng):
+        r0 = _req(rid=0, stop_tokens=(stop,))
+        r1 = _req(rid=1, prompt=PROMPT)     # exact-duplicate prompt
+        r0.prefix_key = r1.prefix_key = "g0"
+        r2 = _req(rid=2, prompt="30+4=")
+        for r in (r0, r1, r2):
+            eng.submit(r)
+
+    def run_out(eng):
+        outs = {}
+        while True:
+            eng.run()
+            for o in eng.harvest():
+                outs[o.rid] = o
+            sus = eng.harvest_suspended()
+            if not sus and eng.idle:
+                return outs
+            for s in sus:
+                n0 = len(s.out.tokens)
+                eng.resume(s, (), max_new_tokens=MAX_NEW - n0,
+                           rid=100 + s.req.rid, stop_tokens=())
+                outs[s.req.rid] = s.out
+
+    kw = dict(prefix_share=True)
+    ref_eng = _build(m, params, "mono", "paged", "int8", **kw)
+    fill(ref_eng)
+    ref_outs = run_out(ref_eng)
+
+    eng = _build(m, params, "mono", "paged", "int8", **kw)
+    fill(eng)
+    for _ in range(6):                      # mid-flight: pins + partial gens
+        eng.step()
+    state = eng.export_state()
+    fresh = _build(m, params, "mono", "paged", "int8", **kw)
+    fresh.import_state(state)
+    outs = run_out(fresh)
+
+    assert sorted(outs) == sorted(ref_outs)
+    for rid in ref_outs:
+        assert outs[rid].tokens == ref_outs[rid].tokens, rid
+        np.testing.assert_allclose(outs[rid].logprobs,
+                                   ref_outs[rid].logprobs, atol=1e-5)
+    fresh.harvest()
+    fresh.reset(params)                     # radix pins fully unwound
+    fresh.slots.alloc.assert_clean(context="post-roundtrip reset")
+
+
+# ---------------------------------------------------------------------------
+# Recurrent families: rollback-free boundary requires block_size == 1
+# ---------------------------------------------------------------------------
+def test_rwkv6_suspend_block1_ok_and_blocked_otherwise():
+    m, params = get_model("rwkv6-7b")
+    ref_t, _ = reference(m, params, _req(max_new=8), max_new=8)
+    stop = ref_t[2]
+    eng = _build(m, params, "mono", "contiguous", None)
+    eng.submit(_req(stop_tokens=(stop,), max_new=8))
+    eng.run()
+    [sreq] = eng.harvest_suspended()
+    eng.resume(sreq, (), max_new_tokens=8 - len(sreq.out.tokens), rid=1,
+               stop_tokens=())
+    [out] = eng.run()
+    assert sreq.out.tokens + out.tokens == ref_t
+
+    fused = _build(m, params, "mono", "contiguous", None, block_size=4)
+    with pytest.raises(ValueError, match="block_size"):
+        fused.submit(_req(stop_tokens=(stop,), max_new=8))
