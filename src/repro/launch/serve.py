@@ -149,9 +149,10 @@ def _main():
                          "deadlines derived from a slowdown bound (the "
                          "inter-group SLO contract)")
     ap.add_argument("--prefix-share", action="store_true",
-                    help="radix prompt-prefix KV sharing (--kv paged): "
-                         "each --group consecutive prompts share one "
-                         "prefill and pin the prompt's KV blocks")
+                    help="content-addressed radix-tree KV sharing (--kv "
+                         "paged): requests agreeing on a block-aligned "
+                         "token prefix share those blocks, exact repeats "
+                         "skip prefill entirely (no tag needed)")
     ap.add_argument("--group", type=int, default=None,
                     help="shared-prefix group size for --prefix-share "
                          "(each prompt is duplicated group times, the "
@@ -173,6 +174,15 @@ def _main():
     ap.add_argument("--decode-kv-blocks", type=int, default=None,
                     help="decode-side paged pool size (--disagg --kv "
                          "paged; default: --num-kv-blocks)")
+    ap.add_argument("--prefill-engines", type=int, default=None,
+                    help="parallel prefill engines (--disagg; each gets "
+                         "its own full-size pools and radix tree)")
+    ap.add_argument("--kv-routing", choices=("kv_aware", "queue"),
+                    default=None,
+                    help="request steering across --prefill-engines: "
+                         "kv_aware sends each request to the engine "
+                         "holding its longest registered prefix; queue "
+                         "balances on load alone")
     ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
                     default="jnp",
                     help="decode-step backend (continuous engine only): "

@@ -294,4 +294,10 @@ def run_episodes(engine, env: Environment, prompts, *,
             record_turn(ep, out)
             finish(ep, out.finish_reason)
     stats["ticks"] = tick
+    radix = getattr(engine, "radix", None)
+    if radix is not None:
+        # resumed histories register in the content-addressed tree, so
+        # sibling episodes (and turn k+1) share turn k's prompt blocks —
+        # surface the hit/saving counters alongside the episode stats
+        stats["radix"] = dict(radix.stats)
     return episodes, stats

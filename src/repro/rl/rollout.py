@@ -163,13 +163,14 @@ def _engine_session(model, params, prompts_np, rng, sampler: SamplerConfig,
     pending = deque()
     for i in range(B):
         fr = None if frontend is None else frontend[i:i + 1]
-        # one shared prefix key per GRPO prompt group: rows i*group ..
-        # (i+1)*group-1 are the same prompt repeated
-        key = ((spec.job_id, i // spec.group)
-               if engine.radix is not None and spec.group else None)
+        # sharing is content-addressed: GRPO's group-of-N duplicate rows
+        # (and any cross-group common preamble) match in the radix tree
+        # by token content alone — prefix_key only selects an isolation
+        # namespace when the spec asks for one
         pending.append(Request(rid=i, prompt=prompts_np[i],
                                max_new_tokens=T, frontend=fr,
-                               prefix_key=key, job_id=spec.job_id))
+                               prefix_key=spec.prefix_namespace,
+                               job_id=spec.job_id))
     return engine, pending
 
 
@@ -213,12 +214,15 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
     ``sched`` / ``policy`` pick the admission policy
     (``repro.serve.sched``; a policy object wins — pass e.g.
     ``SLOPolicy.from_contract(...)`` to enforce a co-execution group's
-    slowdown bound).  ``prefix_share=True`` (paged only) enables radix
-    prompt-prefix KV sharing, and ``group`` tags every ``group``
-    consecutive rows — GRPO's duplicated prompts — with a shared
-    ``prefix_key`` so the group prefills once and its prompt blocks are
-    pinned, not copied.  ``job_id`` tags requests for per-job token
-    budgets in deadline/SLO policies.
+    slowdown bound).  ``prefix_share=True`` (paged only) enables the
+    content-addressed radix tree: any requests agreeing on a
+    block-aligned token prefix — GRPO's ``group``-way duplicated
+    prompts, a shared few-shot preamble across groups, a multi-turn
+    episode's own history — share those KV blocks automatically, with
+    exact repeats admitted at zero model compute; no tag is needed
+    (``spec.prefix_namespace`` optionally isolates tenants that must not
+    share).  ``job_id`` tags requests for per-job token budgets in
+    deadline/SLO policies.
 
     ``disagg`` serves through disaggregated prefill/decode pools
     (``repro.serve.router.DisaggRouter``) instead of one monolithic

@@ -16,10 +16,12 @@ fixed-size blocks (``BlockAllocator``: ref-counted free list, worst-case
 reservation at admit, on-demand materialization as ``index`` crosses block
 boundaries) so long-tail response lengths stop stranding memory — the same
 KV bytes admit strictly more concurrent requests.  On top of the paged
-layout, ``RadixPrefixIndex`` (``repro.serve.radix``) shares prompt-prefix
-blocks across requests with the same ``prefix_key`` (GRPO duplicates each
-prompt ``group`` times): the group prefills once and admission gates on
-net-new blocks only.  All layouts and policies produce token/logprob-
+layout, ``RadixPrefixIndex`` (``repro.serve.radix``) is a
+content-addressed radix tree over full token blocks: any requests
+agreeing on a block-aligned token prefix — GRPO's duplicated prompts,
+shared system preambles, multi-turn histories — share those blocks, and
+exact repeats admit with zero model compute; admission gates on net-new
+blocks only.  All layouts and policies produce token/logprob-
 identical greedy output.  See ``repro.serve.engine`` for the scheduling
 model and exactness guarantees, ``repro.serve.slots`` for the layout
 invariants.
@@ -30,7 +32,7 @@ from repro.serve.engine import (Engine, EngineConfig, EngineStats,
                                 SuspendedRequest, run_trace)
 from repro.serve.protocol import ENGINE_ATTRS, EngineProtocol
 from repro.serve.queue import RequestQueue
-from repro.serve.radix import RadixEntry, RadixPrefixIndex
+from repro.serve.radix import PrefixMatch, RadixNode, RadixPrefixIndex
 from repro.serve.request import Request, RequestOutput
 from repro.serve.router import DisaggConfig, DisaggRouter, RouterStats
 from repro.serve.sched import (DeadlinePolicy, FIFOPolicy, SchedulerPolicy,
@@ -41,7 +43,7 @@ from repro.serve.spec import RolloutSpec
 __all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
            "EngineStats", "SuspendedRequest", "run_trace", "RequestQueue",
            "Request", "RequestOutput", "PagedSlotManager", "SlotManager",
-           "RadixEntry", "RadixPrefixIndex", "SchedulerPolicy",
+           "PrefixMatch", "RadixNode", "RadixPrefixIndex", "SchedulerPolicy",
            "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy",
            "KVTransferHandle", "PrefillEngine", "DisaggConfig",
            "DisaggRouter", "RouterStats", "EngineProtocol", "ENGINE_ATTRS",

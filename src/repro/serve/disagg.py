@@ -35,10 +35,14 @@ The zero-copy trick rides the paged layout's ref-counting
   prefill output moved by pure copies, and the decode computation is the
   same jitted code.
 
-With ``prefix_share`` the prefill engine keeps a radix index over its
-own pool: the first member of a GRPO group prefills and registers, every
-later member becomes a handle *without any model compute* (exact hits
-only — partial-prefix sharing stays a monolithic-engine feature).  The
+With ``prefix_share`` the prefill engine keeps a content-addressed
+radix tree over its own pool: the first request with a given prompt
+prefills and registers, an exact repeat becomes a handle *without any
+model compute* from the boundary snapshot, and a request sharing only a
+block-aligned prefix (same system preamble, longer conversation) pins
+the matching blocks and prefills just its extension through a
+write-masked row — no tag required; ``prefix_key`` is an optional
+isolation namespace.  The
 contiguous layout disaggregates too, with the handle carrying the whole
 batch=1 prefill cache (there is no block pool to pin, so "transfer" is
 an array hand-over; slots bound how many un-adopted handles may be
@@ -252,29 +256,41 @@ class PrefillEngine:
         return not self.queue
 
     # ---- admission ---------------------------------------------------------
-    def _match(self, req: Request):
+    def _match(self, req: Request, *, count: bool = False):
+        """Radix lookup (``None`` with sharing off, frontend-conditioned
+        requests, or no match).  ``count=True`` marks the admission
+        lookup — the index owns all hit/partial/miss counters."""
         if self.radix is None or req.frontend is not None:
-            return None, 0, False
-        return self.radix.match(req)
+            return None
+        return self.radix.match(req, count=count)
 
     def _can_admit(self, req: Request) -> bool:
         """Prefill-side admission gate: enough uncommitted blocks for the
-        *prompt* (the decode budget is the decode pool's problem).  Exact
-        radix hits cost no compute and no new blocks, so they are always
-        admissible.  Under pressure — pinned handles waiting for adoption
-        plus radix entries — the index LRU-evicts before giving up."""
-        entry, _, exact = self._match(req)
-        if entry is not None and exact:
+        *prompt* (the decode budget is the decode pool's problem), net of
+        prefix-shared blocks.  Exact radix hits cost no compute and no
+        new blocks, so they are always admissible.  Under pressure —
+        pinned handles waiting for adoption plus tree pins — the index
+        LRU-evicts (sparing this request's own match path) before giving
+        up."""
+        m = self._match(req)
+        if m is not None and m.exact:
             return True
         if not self.paged:
             return self.resident < self.config.num_slots
         if not self.slots.num_free:
             return False
-        need = self.slots.blocks_required(req.prompt_len)
-        if self.slots.can_admit(req.prompt_len):
+        n_shared = m.n_shared if m is not None else 0
+        if self.slots.can_admit(req.prompt_len, shared_blocks=n_shared):
             return True
         if self.radix is not None and len(self.radix):
-            return self.radix.evict_for(need, protect=req.prefix_key)
+            need = max(self.slots.blocks_required(req.prompt_len)
+                       - n_shared, 0)
+            if self.radix.evict_for(
+                    need, protect=m.node_ids if m is not None else ()):
+                return True
+            # last resort: drop the match path too and admit unshared
+            return self.radix.evict_for(
+                self.slots.blocks_required(req.prompt_len))
         return False
 
     def step(self) -> int:
@@ -299,18 +315,21 @@ class PrefillEngine:
 
     def _prefill_one(self, req: Request) -> KVTransferHandle:
         t0 = time.perf_counter()
-        entry, _, exact = self._match(req)
-        if entry is not None and exact:
-            # zero-compute handle straight from the radix entry: pin the
-            # entry's blocks under the handle (the index keeps its own pin)
-            self.radix.touch(entry, exact=True)
-            for bid in entry.block_ids:
+        m = self._match(req, count=True)
+        if m is not None and m.exact:
+            # zero-compute handle straight from the boundary snapshot: pin
+            # the path's blocks under the handle (the tree keeps its own
+            # pin per node)
+            self.radix.touch(m)
+            snap = m.snapshot
+            block_ids = tuple(m.block_ids)
+            for bid in block_ids:
                 self.slots.alloc.incref(bid)
             self.stats.prefix_hits += 1
-            self.stats.blocks_saved += len(entry.block_ids)
+            self.stats.blocks_saved += len(block_ids)
             handle = KVTransferHandle(
-                req, entry.logits, entry.block_ids, dict(entry.tail),
-                dict(entry.slot_leaves), source=self,
+                req, snap.logits, block_ids, dict(snap.tail),
+                dict(snap.slot_leaves), source=self,
                 prefill_time_s=time.perf_counter() - t0,
                 from_prefix_hit=True)
         elif not self.paged:
@@ -321,7 +340,7 @@ class PrefillEngine:
                                       one=one,
                                       prefill_time_s=time.perf_counter() - t0)
         else:
-            handle = self._prefill_paged(req, t0)
+            handle = self._prefill_paged(req, t0, m)
         self.resident += 1
         self.stats.prefills += 1
         if self.paged:
@@ -329,13 +348,30 @@ class PrefillEngine:
                                             self.slots.blocks_in_use)
         return handle
 
-    def _prefill_paged(self, req: Request, t0: float) -> KVTransferHandle:
-        """Donor path: prefill into a transient slot, snapshot, pin the full
-        blocks under the handle, and recycle the slot without copying."""
+    def _prefill_paged(self, req: Request, t0: float,
+                       m=None) -> KVTransferHandle:
+        """Donor / partial-sharing path: prefill into a transient slot,
+        snapshot, pin the full blocks under the handle, and recycle the
+        slot without copying.  With a partial radix match the matching
+        full blocks are pinned instead of allocated and the scatter runs
+        through a write-masked row, so only the extension is computed
+        into fresh blocks."""
         prompt_dev = jnp.asarray(req.prompt)[None]
-        slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
-                                 total_budget=req.prompt_len)
-        row = self.slots.device_tables()[slot]
+        n_shared = m.n_shared if m is not None else 0
+        if n_shared:
+            self.radix.touch(m)
+            slot = self.slots.assign_shared(
+                req.rid, prompt_len=req.prompt_len,
+                total_budget=req.prompt_len, shared_ids=m.block_ids)
+            masked = self.slots.tables[slot].copy()
+            masked[:n_shared] = 0       # shared blocks -> null (no write)
+            row = jnp.asarray(masked)
+            self.stats.prefix_partial_hits += 1
+            self.stats.blocks_saved += n_shared
+        else:
+            slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
+                                     total_budget=req.prompt_len)
+            row = self.slots.device_tables()[slot]
         logits, one = self._fns["prefill"](self.params, prompt_dev,
                                            req.frontend)
         (self.slots.cache, self._last_logits, self._alive,
@@ -349,9 +385,7 @@ class PrefillEngine:
         tail, slot_leaves = self._fns["snapshot"](one, tail_block=tail_block)
         if not self.slots.paged_names:
             tail = {}
-        if (self.radix is not None and req.prefix_key is not None
-                and req.frontend is None):
-            self.radix.misses += 1
+        if self.radix is not None and req.frontend is None:
             self.radix.register(
                 req, [int(b) for b in self.slots.tables[slot, :n_full]],
                 logits=logits, tail=tail, slot_leaves=slot_leaves)

@@ -36,13 +36,19 @@ output is token/logprob-identical to contiguous (locked in by
 ``tests/test_serve_paged.py``).
 
 ``EngineConfig.prefix_share`` (paged only) adds radix prompt-prefix KV
-sharing (:mod:`repro.serve.radix`): requests tagged with the same
-``prefix_key`` — GRPO's ``group``-way duplicated prompts — prefill once;
-later members pin the prompt's full blocks (ref-counted, several slot
-owners per block) and receive a private copy-on-write tail block, so a
-group costs one prompt's KV instead of ``group``.  Admission then gates
-on *net new* blocks, which is where the extra concurrency at equal KV
-memory comes from.  Output stays bit-identical to the unshared engine
+sharing (:mod:`repro.serve.radix`): a content-addressed radix tree over
+full token blocks, so *any* two requests agreeing on a block-aligned
+token prefix — GRPO's ``group``-way duplicated prompts, a shared system
+preamble across tenants, or a multi-turn episode replaying its own
+history — share exactly those blocks, no tag required
+(``prefix_key`` is now just an optional isolation namespace).  An exact
+repeat of a registered prompt admits with zero model compute from the
+boundary snapshot; partial overlaps pin the matching full blocks
+(ref-counted, several slot owners per block) and prefill into a
+write-masked row plus a private copy-on-write tail.  Admission then
+gates on *net new* blocks, which is where the extra concurrency at
+equal KV memory comes from.  Output stays bit-identical to the unshared
+engine
 (the shared blocks hold exactly the donor's prefill, and gathers are
 permutation-copies).
 
@@ -783,16 +789,18 @@ class Engine:
         return not self.queue and not self._active
 
     # ---- scheduler ---------------------------------------------------------
-    def _match(self, req: Request):
-        """Radix lookup for ``req`` (``(None, 0, False)`` with sharing off).
+    def _match(self, req: Request, *, count: bool = False):
+        """Radix lookup for ``req`` (``None`` with sharing off or no match).
 
         Requests carrying frontend embeddings never share: the prompt
         tokens alone don't identify their KV (prefill conditions on the
         frontend), so a token-verified hit could still serve another
-        request's image/audio-conditioned cache."""
+        request's image/audio-conditioned cache.  ``count=True`` marks
+        the admission lookup — the radix index owns all hit/partial/miss
+        counters and bumps exactly one per counted call."""
         if self.radix is None or req.frontend is not None:
-            return None, 0, False
-        return self.radix.match(req)
+            return None
+        return self.radix.match(req, count=count)
 
     def _can_admit(self, req: Request) -> bool:
         """Admission gate the policy consults per candidate: a free slot,
@@ -804,15 +812,17 @@ class Engine:
             return bool(self.slots.num_free)
         if not self.slots.num_free:
             return False
-        entry, n_shared, _ = self._match(req)
+        m = self._match(req)
+        n_shared = m.n_shared if m is not None else 0
         if self.slots.can_admit(req.total_budget, shared_blocks=n_shared):
             return True
         if self.radix is not None and len(self.radix):
             need = max(self.slots.blocks_required(req.total_budget)
                        - n_shared, 0)
-            if self.radix.evict_for(need, protect=req.prefix_key):
+            if self.radix.evict_for(
+                    need, protect=m.node_ids if m is not None else ()):
                 return True
-            # last resort: the entry this request would share from is
+            # last resort: the path this request would share from is
             # itself pinning the pool — drop it too and admit unshared
             return self.radix.evict_for(
                 self.slots.blocks_required(req.total_budget))
@@ -857,23 +867,20 @@ class Engine:
                 self.slots.cache, jnp.asarray(slot, jnp.int32),
                 self._last_logits, self._alive, self._remaining, budget)
         else:
-            entry, n_shared, exact = self._match(req)
-            if entry is not None and exact:
-                slot = self._admit_shared_exact(req, entry, n_shared, budget)
-                shared_blocks = n_shared
-            elif entry is not None and n_shared > 0:
-                slot = self._admit_shared_prefix(req, entry, n_shared,
-                                                 prompt_dev, budget)
-                shared_blocks = n_shared
+            m = self._match(req, count=True)
+            if m is not None and m.exact:
+                slot = self._admit_shared_exact(req, m, budget)
+                shared_blocks = m.n_shared
+            elif m is not None and m.n_shared > 0:
+                slot = self._admit_shared_prefix(req, m, prompt_dev, budget)
+                shared_blocks = m.n_shared
             else:
                 slot = self.slots.assign(req.rid, prompt_len=req.prompt_len,
                                          total_budget=req.total_budget)
                 row = self.slots.device_tables()[slot]
-                if (self.radix is not None and req.prefix_key is not None
-                        and req.frontend is None):
+                if self.radix is not None and req.frontend is None:
                     # donor path: split prefill + scatter so the radix
-                    # entry (blocks + tail/slot-row snapshot) can register
-                    self.radix.misses += 1
+                    # path (blocks + tail/slot-row snapshot) can register
                     logits, one = self._fns["prefill"](
                         self.params, prompt_dev, req.frontend)
                     (self.slots.cache, self._last_logits, self._alive,
@@ -918,40 +925,42 @@ class Engine:
         self.radix.register(req, block_ids, logits=logits, tail=tail,
                             slot_leaves=slot_leaves)
 
-    def _admit_shared_exact(self, req: Request, entry, n_shared: int,
-                            budget) -> int:
+    def _admit_shared_exact(self, req: Request, m, budget) -> int:
         """Radix exact hit: no model compute.  Pin the shared full blocks
         under this slot, materialize a private copy-on-write tail from the
-        snapshot, restore cached logits / slot-resident rows."""
-        self.radix.touch(entry, exact=True)
+        boundary snapshot, restore cached logits / slot-resident rows."""
+        self.radix.touch(m)
+        snap = m.snapshot
         slot = self.slots.assign_shared(
             req.rid, prompt_len=req.prompt_len,
             total_budget=req.total_budget,
-            shared_ids=list(entry.block_ids[:n_shared]))
-        tail_pid = (int(self.slots.tables[slot, n_shared])
-                    if entry.tail else 0)
+            shared_ids=m.block_ids)
+        tail_pid = (int(self.slots.tables[slot, m.n_shared])
+                    if snap.tail else 0)
         (self.slots.cache, self._last_logits, self._alive,
          self._remaining) = self._fns["share_admit"](
-            self.slots.cache, entry.tail, entry.slot_leaves, entry.logits,
+            self.slots.cache, snap.tail, snap.slot_leaves, snap.logits,
             jnp.asarray(tail_pid, jnp.int32), jnp.asarray(slot, jnp.int32),
             self._last_logits, self._alive, self._remaining, budget,
             jnp.asarray(req.prompt_len, jnp.int32))
         self.stats.prefix_hits += 1
         return slot
 
-    def _admit_shared_prefix(self, req: Request, entry, n_shared: int,
-                             prompt_dev, budget) -> int:
-        """Block-granular prefix hit (prompt extends / diverges from the
-        entry): prefill runs — compute is not shareable — but the matching
-        full blocks are pinned instead of allocated, and the scatter goes
-        through a write-masked row so shared blocks are never written."""
-        self.radix.touch(entry, exact=False)
+    def _admit_shared_prefix(self, req: Request, m, prompt_dev,
+                             budget) -> int:
+        """Block-granular prefix hit (prompt extends / diverges from every
+        registered path): prefill runs — compute is not shareable — but
+        the matching full blocks are pinned instead of allocated, and the
+        scatter goes through a write-masked row so shared blocks are never
+        written.  The extension blocks then register in turn, so the tree
+        deepens along whatever prefixes the workload actually repeats."""
+        self.radix.touch(m)
         slot = self.slots.assign_shared(
             req.rid, prompt_len=req.prompt_len,
             total_budget=req.total_budget,
-            shared_ids=list(entry.block_ids[:n_shared]))
+            shared_ids=m.block_ids)
         masked = self.slots.tables[slot].copy()
-        masked[:n_shared] = 0               # shared blocks -> null (no write)
+        masked[:m.n_shared] = 0             # shared blocks -> null (no write)
         logits, one = self._fns["prefill"](self.params, prompt_dev,
                                            req.frontend)
         (self.slots.cache, self._last_logits, self._alive,
@@ -959,6 +968,7 @@ class Engine:
             logits, one, self.slots.cache, jnp.asarray(masked),
             jnp.asarray(slot, jnp.int32), self._last_logits, self._alive,
             self._remaining, budget)
+        self._register_prefix(req, slot, logits, one)
         self.stats.prefix_partial_hits += 1
         return slot
 
@@ -966,13 +976,20 @@ class Engine:
     def can_admit_prefilled(self, req: Request) -> bool:
         """Adoption gate for a KV transfer handle (``serve.disagg``): a free
         slot, and (paged) enough uncommitted blocks for the request's
-        worst-case decode budget.  No radix involvement — the handle's
-        prompt KV arrives prefilled; sharing happened on the prefill side."""
+        worst-case decode budget.  No radix *matching* — the handle's
+        prompt KV arrives prefilled; sharing happened on the prefill
+        side — though :meth:`admit_prefilled` does register the adopted
+        prompt so later requests can share it."""
         if not self.slots.num_free:
             return False
         if not self.paged:
             return True
-        return self.slots.can_admit(req.total_budget)
+        if self.slots.can_admit(req.total_budget):
+            return True
+        if self.radix is not None and len(self.radix):
+            return self.radix.evict_for(
+                self.slots.blocks_required(req.total_budget))
+        return False
 
     def admit_prefilled(self, req: Request, logits, one) -> int:
         """Adopt an externally prefilled request into a fresh slot.
@@ -1004,6 +1021,11 @@ class Engine:
                 logits, one, self.slots.cache, row,
                 jnp.asarray(slot, jnp.int32), self._last_logits,
                 self._alive, self._remaining, budget)
+            if self.radix is not None and req.frontend is None:
+                # register the adopted prompt — for multi-turn resume()
+                # this is the episode's whole history, so sibling
+                # rollouts and turn k+1 match turn k's blocks
+                self._register_prefix(req, slot, logits, one)
             self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
         self._host_index[slot] = req.prompt_len
@@ -1282,7 +1304,11 @@ class Engine:
         budget = (max_new_tokens if max_new_tokens is not None
                   else max(sreq.remaining, 1))
         total = sreq.index + len(tool_tokens) + budget
-        return self.slots.can_admit(total)
+        if self.slots.can_admit(total):
+            return True
+        if self.radix is not None and len(self.radix):
+            return self.radix.evict_for(self.slots.blocks_required(total))
+        return False
 
     def resume(self, sreq: SuspendedRequest, tool_tokens=(), *,
                max_new_tokens: Optional[int] = None,
@@ -1498,24 +1524,13 @@ class Engine:
             "newly_suspended": [s.req.rid for s in self._newly_suspended],
         })
         if self.radix is not None:
-            # entry pytrees (logits/tail/slot rows) are device arrays: they
-            # travel in the device section; the allocator pins they stand
-            # behind are already part of the exported alloc state
-            device["radix"] = {
-                key: {"logits": e.logits, "tail": e.tail,
-                      "slot_leaves": e.slot_leaves}
-                for key, e in self.radix.entries.items()}
-            host["radix"] = {
-                "entries": {key: {"tokens": e.tokens.copy(),
-                                  "block_ids": e.block_ids,
-                                  "prompt_len": e.prompt_len,
-                                  "hits": e.hits, "last_used": e.last_used}
-                            for key, e in self.radix.entries.items()},
-                "counters": {"tick": self.radix._tick,
-                             "hits": self.radix.hits,
-                             "partial_hits": self.radix.partial_hits,
-                             "misses": self.radix.misses,
-                             "evictions": self.radix.evictions}}
+            # snapshot pytrees (logits/tail/slot rows) are device arrays:
+            # they travel in the device section; the allocator pins the
+            # tree nodes stand behind are already in the exported alloc
+            # state, and the tree structure (parent links, tokens,
+            # counters) is host data
+            device["radix"] = self.radix.export_device_state()
+            host["radix"] = self.radix.export_host_state()
         return {"device": device, "host": host}
 
     def import_state(self, state: dict) -> None:
@@ -1575,27 +1590,9 @@ class Engine:
             a.owned = {k: list(v) for k, v in sl["alloc"]["owned"].items()}
             a.events = list(sl["alloc"]["events"])
         if self.radix is not None:
-            from repro.serve.radix import RadixEntry
-            self.radix.entries.clear()
-            dev_radix = state["device"].get("radix", {})
-            host_radix = host.get("radix", {"entries": {}, "counters": {}})
-            for key, meta in host_radix["entries"].items():
-                d = dev_radix[key]
-                self.radix.entries[key] = RadixEntry(
-                    key=key, tokens=np.asarray(meta["tokens"], np.int32),
-                    block_ids=tuple(meta["block_ids"]),
-                    prompt_len=meta["prompt_len"],
-                    logits=jnp.asarray(d["logits"]),
-                    tail=jax.tree.map(jnp.asarray, d["tail"]),
-                    slot_leaves=jax.tree.map(jnp.asarray, d["slot_leaves"]),
-                    hits=meta["hits"], last_used=meta["last_used"])
-            c = host_radix["counters"]
-            if c:
-                self.radix._tick = c["tick"]
-                self.radix.hits = c["hits"]
-                self.radix.partial_hits = c["partial_hits"]
-                self.radix.misses = c["misses"]
-                self.radix.evictions = c["evictions"]
+            self.radix.import_state(
+                host.get("radix"),
+                jax.tree.map(jnp.asarray, state["device"].get("radix", {})))
 
 
 def run_trace(engine: Engine, requests: list[Request],

@@ -1,194 +1,443 @@
-"""Block-granular prefix-sharing index for the paged KV cache (SGLang-style
-radix sharing, specialised to the rollout-serving workload).
+"""Content-addressed radix tree over paged KV blocks: prompt-prefix
+sharing by *token content*, not caller tags.
 
-GRPO submits every prompt ``group`` times (one request per group member),
-so the prompt's KV is byte-identical across ``group`` live requests.  This
-index makes that sharing real at block granularity, on top of
-``BlockAllocator``'s existing ``incref``/``decref``:
+Prompts that share a block-aligned token prefix share those KV blocks —
+across requests, jobs, tenants and multi-turn episode histories.  The
+index is a radix tree in the sglang style: each :class:`RadixNode` owns
+exactly one **full** block's worth of prompt tokens and the physical
+block id holding that KV, pinned under one allocator ``incref`` for as
+long as the node lives.  A node's identity is the content hash of
+``(parent_hash, tokens)``, so a path from a root spells out a
+block-aligned token prefix and two requests agreeing on any prefix walk
+the same path — admission is longest-prefix match
+(:meth:`RadixPrefixIndex.match`), with all shared full blocks pinned
+instead of re-allocated and the write-masked scatter never touching
+them.
 
-* the **first** member of a prefix (the *donor*) prefills normally into
-  its own freshly allocated blocks; ``register`` then records, under the
-  request's ``prefix_key``, the prompt's *full* blocks (positions a decode
-  step can never write again) plus a small device snapshot — the partial
-  tail block's KV, the slot-resident cache rows (SSM/conv state,
-  cross-attention KV) and the post-prompt logits — and increfs the full
-  blocks so they outlive the donor;
-* every **later** member with the same key and prompt (``match`` →
-  ``exact``) skips prefill compute entirely: its slot pins the shared full
-  blocks (incref per sharer, several slot owners per block) and receives a
-  private **copy-on-write tail** — the first block its decode diverges
-  into is materialized from its own reservation and seeded from the
-  snapshot, so shared blocks are never written (the engine's decode
-  write-back only touches the block containing the slot's own ``index``,
-  which lies at or beyond the tail);
-* a request whose prompt merely *extends* a registered prefix
-  (block-granular match, not exact) still prefills — compute is not
-  shareable — but pins the matching full blocks instead of allocating
-  them, scattering its prefill through a write-masked table row whose
-  shared entries point at the null block (paged admission then gates on
-  **net-new** blocks only).
+**Boundary snapshots.**  Block sharing alone still re-prefills (compute
+is not shareable below block granularity); an *exact* repeat of a
+registered prompt should admit with zero model compute.  Registration
+therefore stores a :class:`BoundarySnapshot` — the partial tail block,
+slot-resident rows and post-prompt logits, exactly what a
+``KVTransferHandle`` carries — at the final node of the registered
+path, keyed by the prompt's residual tail tokens.  A match that covers
+every full block *and* finds the tail's snapshot is exact; families
+with no paged leaves (rwkv6) degenerate to a snapshot at the root
+(prefill-once, nothing to pin).
 
-Entries are LRU-evicted (``evict_for``) when admission runs out of
-uncommitted blocks: dropping an entry only releases the *index's* pin —
-live sharers keep theirs, so eviction is always safe.  ``flush`` drops
-everything (the engine does this on ``reset``: new params invalidate every
-cached prefill).  Greedy tokens/logprobs stay bit-identical to the
-unshared engine: shared blocks hold the donor's prefill output, which is
-THE prefill output for that prompt, and gathers are permutation-copies.
+**Namespaces.**  ``Request.prefix_key`` is no longer what *enables*
+sharing (content does); it is an optional isolation namespace — each
+distinct key gets its own root, so callers that must not share across a
+boundary (e.g. distinct fine-tune tenants) simply key their requests.
+``None`` is the global namespace.  Frontend-conditioned requests never
+register or match (the engine gates them out: prompt tokens alone do
+not identify image/audio-conditioned KV).
+
+**Eviction.**  Under block pressure :meth:`evict_for` frees
+least-recently-used *leaves* first (an inner node's block only becomes
+reusable once its subtree is gone), skipping nodes whose block is still
+shared by a live slot or handle (``refcount > 1``) and the
+``protect``\\ ed path of the request being admitted.  Victims are
+collected into a heap **once per call** and parents enter it as their
+last child is evicted — no per-iteration re-sort.  The eviction
+sequence is recorded in :attr:`RadixPrefixIndex.eviction_log` (cleared
+on ``flush``) so the strict-LRU contract is testable.
+
+Counter ownership: :meth:`match` with ``count=True`` — the admission
+lookup — bumps exactly one of ``hits``/``partial_hits``/``misses`` per
+request; capacity probes and the router's KV-aware scoring pass the
+default ``count=False`` and never skew the stats.
 """
 from __future__ import annotations
 
+import hashlib
+import heapq
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
 
 import numpy as np
 
-from repro.serve.blocks import BlockAllocator
-from repro.serve.request import Request
+__all__ = ["BoundarySnapshot", "PrefixMatch", "RadixNode",
+           "RadixPrefixIndex"]
+
+
+def _content_hash(parent_hash: bytes, token_bytes: bytes) -> bytes:
+    return hashlib.sha1(parent_hash + token_bytes).digest()
+
+
+class RadixNode:
+    """One full KV block of prompt tokens in the tree.
+
+    ``tokens`` (``block_size`` int32s) is the edge label from ``parent``;
+    ``block_id`` is the physical block pinned on this node's behalf
+    (``None`` on namespace roots, which own no KV).  ``block_hash`` is
+    the sglang-style ``(parent_hash, tokens)`` content id: equal hashes
+    ⇔ equal block-aligned prefixes within a namespace.  ``snapshots``
+    maps residual tail tokens (bytes) to the :class:`BoundarySnapshot`
+    registered at this boundary."""
+
+    __slots__ = ("node_id", "parent", "children", "tokens", "key",
+                 "block_id", "block_hash", "snapshots", "last_used")
+
+    def __init__(self, node_id: int, parent: Optional["RadixNode"],
+                 tokens: Optional[np.ndarray], block_id: Optional[int],
+                 block_hash: bytes, last_used: int = 0):
+        self.node_id = node_id
+        self.parent = parent
+        self.children: dict[bytes, RadixNode] = {}
+        self.tokens = tokens
+        self.key = tokens.tobytes() if tokens is not None else b""
+        self.block_id = block_id
+        self.block_hash = block_hash
+        self.snapshots: dict[bytes, BoundarySnapshot] = {}
+        self.last_used = last_used
+
+    @property
+    def is_root(self) -> bool:
+        return self.parent is None
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return (f"RadixNode(id={self.node_id}, block={self.block_id}, "
+                f"children={len(self.children)}, "
+                f"snapshots={len(self.snapshots)})")
 
 
 @dataclass
-class RadixEntry:
-    """One registered prompt prefix: pinned full blocks + admit snapshot."""
-    key: Any
-    tokens: np.ndarray                 # donor's full prompt (int32, host)
-    block_ids: tuple[int, ...]         # the prompt's FULL blocks, in order
-    prompt_len: int
-    logits: Any                        # (vocab,) post-prompt logits (device)
-    tail: dict                         # paged leaves' partial tail block
-    #                                    {name: (L, bs, *rest)} — empty when
-    #                                    the prompt ends on a block boundary
-    slot_leaves: dict                  # non-paged cache rows (batch=1 pytree)
+class BoundarySnapshot:
+    """Zero-compute admission state at a registered prompt boundary: the
+    donor's partial tail block, slot-resident rows and post-prompt
+    logits (device arrays), keyed under its node by ``tail_tokens`` —
+    the prompt tokens past the last full block."""
+    sid: int
+    tail_tokens: np.ndarray
+    logits: Any
+    tail: dict
+    slot_leaves: dict
     hits: int = 0
-    last_used: int = 0
-    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class PrefixMatch:
+    """Longest-prefix match result: the walked node path (one node per
+    shared full block, root excluded) and, when the whole prompt is
+    covered, the boundary snapshot for zero-compute admission."""
+    namespace: Any
+    nodes: list = field(default_factory=list)
+    snapshot: Optional[BoundarySnapshot] = None
+
+    @property
+    def n_shared(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def exact(self) -> bool:
+        return self.snapshot is not None
+
+    @property
+    def block_ids(self) -> list[int]:
+        return [n.block_id for n in self.nodes]
+
+    @property
+    def node_ids(self) -> list[int]:
+        return [n.node_id for n in self.nodes]
 
 
 class RadixPrefixIndex:
-    """Prefix entries keyed by ``Request.prefix_key``, pinned in a
-    :class:`~repro.serve.blocks.BlockAllocator` via incref/decref."""
+    """Radix tree of registered prompt prefixes over one block pool.
 
-    def __init__(self, alloc: BlockAllocator):
+    The tree holds one ``incref`` per node — blocks stay resident after
+    every sharing slot releases, until LRU eviction under pressure
+    (:meth:`evict_for`) or a weight-sync :meth:`flush` unpins them.
+    ``len(index)`` is the number of block-bearing nodes."""
+
+    def __init__(self, alloc):
         self.alloc = alloc
         self.block_size = alloc.block_size
-        self.entries: dict[Any, RadixEntry] = {}
-        self._tick = 0
-        self.hits = 0                  # exact hits (prefill skipped)
-        self.partial_hits = 0          # block-prefix hits (blocks shared)
-        self.misses = 0
-        self.evictions = 0
+        self.roots: dict[Any, RadixNode] = {}      # namespace -> root
+        self.nodes: dict[int, RadixNode] = {}      # block-bearing nodes
+        self.hits = 0                  # exact-match admissions
+        self.partial_hits = 0          # block-sharing admissions
+        self.misses = 0                # admissions that found nothing
+        self.evictions = 0             # nodes evicted under pressure
+        self.eviction_log: list[int] = []   # node ids, eviction order
+        self._tick = 0                 # LRU clock
+        self._next_id = 0
+        self._next_sid = 0
+        self._n_snapshots = 0
 
+    # ---- bookkeeping -------------------------------------------------------
     def __len__(self) -> int:
-        return len(self.entries)
+        return len(self.nodes)
+
+    def _bump(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _fresh_id(self) -> int:
+        self._next_id += 1
+        return self._next_id - 1
+
+    def _fresh_sid(self) -> int:
+        self._next_sid += 1
+        return self._next_sid - 1
+
+    @staticmethod
+    def _tok(req) -> np.ndarray:
+        return np.asarray(req.prompt, np.int32).reshape(-1)[:req.prompt_len]
+
+    def _root(self, namespace, *, create: bool = False
+              ) -> Optional[RadixNode]:
+        root = self.roots.get(namespace)
+        if root is None and create:
+            root = RadixNode(self._fresh_id(), None, None, None,
+                             hashlib.sha1(repr(namespace).encode()).digest())
+            self.roots[namespace] = root
+        return root
+
+    def _all_nodes(self) -> Iterator[RadixNode]:
+        yield from self.roots.values()
+        yield from self.nodes.values()
 
     # ---- lookup ------------------------------------------------------------
-    def match(self, req: Request) -> tuple[Optional[RadixEntry], int, bool]:
-        """Longest block-granular prefix match for ``req``.
+    def match(self, req, *, count: bool = False) -> Optional[PrefixMatch]:
+        """Longest block-aligned prefix of ``req.prompt`` registered under
+        its namespace (``req.prefix_key``); ``None`` when nothing
+        matches.
 
-        Returns ``(entry, n_shared, exact)``: ``n_shared`` full blocks of
-        the request's prompt are already resident (token-verified — the key
-        is a tag, the tokens are the truth), and ``exact`` means the whole
-        prompt matches so prefill can be skipped.  Shared blocks are capped
-        at the request's own full-block count: the block its decode writes
-        into is never shared.
-        """
-        if req.prefix_key is None:
-            return None, 0, False
-        entry = self.entries.get(req.prefix_key)
-        if entry is None:
-            return None, 0, False
-        prompt = req.prompt
-        exact = (entry.prompt_len == req.prompt_len
-                 and np.array_equal(entry.tokens, prompt))
-        # full blocks the request itself will never write again
-        req_full = req.prompt_len // self.block_size
-        common = min(len(entry.block_ids), req_full) * self.block_size
-        eq = entry.tokens[:common] == prompt[:common]
-        n_shared = (int(common // self.block_size) if eq.all()
-                    else int(np.argmin(eq)) // self.block_size)
-        return entry, n_shared, exact
+        ``count=True`` marks this as the request's *admission* lookup
+        and bumps exactly one of the hit/partial/miss counters — this
+        method owns all counter accounting; callers never bump them."""
+        tokens = self._tok(req)
+        bs = self.block_size
+        n_full = len(tokens) // bs
+        nodes: list[RadixNode] = []
+        snapshot = None
+        node = self._root(req.prefix_key)
+        if node is not None:
+            for d in range(n_full):
+                child = node.children.get(
+                    tokens[d * bs:(d + 1) * bs].tobytes())
+                if child is None:
+                    break
+                nodes.append(child)
+                node = child
+            if len(nodes) == n_full:
+                snapshot = node.snapshots.get(tokens[n_full * bs:].tobytes())
+        if count:
+            if snapshot is not None:
+                self.hits += 1
+            elif nodes:
+                self.partial_hits += 1
+            else:
+                self.misses += 1
+        if snapshot is None and not nodes:
+            return None
+        return PrefixMatch(namespace=req.prefix_key, nodes=nodes,
+                           snapshot=snapshot)
 
-    def touch(self, entry: RadixEntry, *, exact: bool) -> None:
-        self._tick += 1
-        entry.last_used = self._tick
-        entry.hits += 1
-        if exact:
-            self.hits += 1
-        else:
-            self.partial_hits += 1
+    def touch(self, m: PrefixMatch) -> None:
+        """Bump recency along a matched path (LRU protection for the
+        admission about to share it).  Counters are ``match``'s job."""
+        t = self._bump()
+        root = self.roots.get(m.namespace)
+        if root is not None:
+            root.last_used = t
+        for node in m.nodes:
+            node.last_used = t
+        if m.snapshot is not None:
+            m.snapshot.hits += 1
 
     # ---- registration ------------------------------------------------------
-    def register(self, req: Request, block_ids, *, logits, tail,
-                 slot_leaves) -> RadixEntry:
-        """Pin the donor's full prompt blocks under this index and cache the
-        admit snapshot.  No-op (returns the existing entry) if the key is
-        already registered — first donor wins until flush/evict."""
-        if req.prefix_key in self.entries:
-            return self.entries[req.prefix_key]
-        for bid in block_ids:
-            self.alloc.incref(bid)
-        self._tick += 1
-        entry = RadixEntry(
-            key=req.prefix_key, tokens=np.array(req.prompt, np.int32),
-            block_ids=tuple(int(b) for b in block_ids),
-            prompt_len=req.prompt_len, logits=logits, tail=tail,
-            slot_leaves=slot_leaves, last_used=self._tick)
-        self.entries[req.prefix_key] = entry
-        return entry
+    def register(self, req, block_ids, *, logits, tail,
+                 slot_leaves) -> RadixNode:
+        """Record a freshly prefilled (or adopted) prompt: walk/extend the
+        namespace's tree with one node per full block — new nodes pin
+        their block with an ``incref`` of the registering slot's table
+        entry; blocks whose content already has a node keep the
+        incumbent's pin — and store the boundary snapshot at the final
+        node (first donor wins per distinct tail)."""
+        tokens = self._tok(req)
+        bs = self.block_size
+        t = self._bump()
+        node = self._root(req.prefix_key, create=True)
+        node.last_used = t
+        for d, bid in enumerate(block_ids):
+            chunk = tokens[d * bs:(d + 1) * bs]
+            key = chunk.tobytes()
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(self._fresh_id(), node, chunk.copy(),
+                                  int(bid),
+                                  _content_hash(node.block_hash, key))
+                node.children[key] = child
+                self.nodes[child.node_id] = child
+                self.alloc.incref(int(bid))
+            child.last_used = t
+            node = child
+        tail_key = tokens[len(block_ids) * bs:].tobytes()
+        if tail_key not in node.snapshots:
+            node.snapshots[tail_key] = BoundarySnapshot(
+                sid=self._fresh_sid(),
+                tail_tokens=tokens[len(block_ids) * bs:].copy(),
+                logits=logits, tail=tail, slot_leaves=slot_leaves)
+            self._n_snapshots += 1
+        return node
 
     # ---- eviction ----------------------------------------------------------
-    def evict(self, key: Any) -> None:
-        """Drop one entry: release the index's pin on its blocks (sharers
-        keep theirs — blocks free only when the last owner lets go)."""
-        entry = self.entries.pop(key)
-        for bid in entry.block_ids:
-            self.alloc.decref(bid)
+    def _evictable(self, node: RadixNode, protect: frozenset) -> bool:
+        return (not node.children and not node.is_root
+                and node.node_id not in protect
+                and self.alloc.refcount.get(node.block_id, 0) == 1)
+
+    def _evict_node(self, node: RadixNode) -> None:
+        assert not node.children, "evicting a non-leaf radix node"
+        self.alloc.decref(node.block_id)
+        del node.parent.children[node.key]
+        del self.nodes[node.node_id]
+        self._n_snapshots -= len(node.snapshots)
+        node.snapshots.clear()
         self.evictions += 1
+        self.eviction_log.append(node.node_id)
 
-    def evict_for(self, n_blocks: int, *, protect: Any = None) -> bool:
-        """LRU-evict entries until ``n_blocks`` can be reserved (or nothing
-        *useful* is left to evict).  ``protect`` names a key that must
-        survive — the entry the pending admission is about to share from.
+    def evict_for(self, n_blocks: int, *, protect=()) -> bool:
+        """LRU-evict leaf nodes until ``n_blocks`` can be reserved.
 
-        Only entries whose eviction actually frees memory are touched: an
-        entry whose blocks are all still pinned by live sharer slots frees
-        nothing when dropped (the sharers keep their refs), and evicting
-        it would just destroy sharing for the group's remaining members —
-        so such entries are skipped rather than sacrificed pointlessly
-        (admissibility probes call this as a side effect)."""
-        while not self.alloc.can_reserve(n_blocks):
-            victims = sorted(
-                (e for k, e in self.entries.items()
-                 if k != protect
-                 and any(self.alloc.refcount.get(b, 0) == 1
-                         for b in e.block_ids)),
-                key=lambda e: e.last_used)
-            if not victims:
-                return self.alloc.can_reserve(n_blocks)
-            self.evict(victims[0].key)
-        return True
+        Candidates are collected **once**: every current leaf whose
+        block no live slot/handle still shares (tree-only
+        ``refcount == 1``) and whose id is not in ``protect`` (the path
+        the pending request would share from).  A parent becomes a
+        candidate the moment its last child is evicted — pushed onto the
+        same heap, keeping the whole call ``O(n log n)`` instead of the
+        old re-sort-per-victim loop.  Heap order is strict LRU:
+        ``register``/``touch`` bump whole paths, so a parent is never
+        less recent than its children and leaf-first never violates
+        recency order.  Returns whether the reservation now fits."""
+        if self.alloc.can_reserve(n_blocks):
+            return True
+        protect = frozenset(protect)
+        heap: list[tuple[int, int]] = [
+            (node.last_used, node.node_id)
+            for node in self.nodes.values()
+            if self._evictable(node, protect)]
+        heapq.heapify(heap)
+        while heap and not self.alloc.can_reserve(n_blocks):
+            _, nid = heapq.heappop(heap)
+            node = self.nodes.get(nid)
+            if node is None or not self._evictable(node, protect):
+                continue
+            parent = node.parent
+            self._evict_node(node)
+            if not parent.is_root and self._evictable(parent, protect):
+                heapq.heappush(heap, (parent.last_used, parent.node_id))
+        return self.alloc.can_reserve(n_blocks)
 
     def flush(self) -> int:
-        """Drop every entry (params changed / engine reset); returns how
-        many were flushed.  Every index pin must be gone afterwards — an
-        entry surviving here would leak its blocks across engine resets,
-        which is exactly what ``BlockAllocator.assert_clean`` (called by
-        ``Engine.reset`` right after this) would then trip on."""
-        n = len(self.entries)
-        for key in list(self.entries):
-            self.evict(key)
-        self.evictions -= n                  # flushes aren't pressure events
-        assert not self.entries, "flush left radix entries behind"
+        """Drop the whole tree (weight sync: every cached prefill is
+        stale), unpinning every node's block.  Not counted as
+        evictions.  Returns the number of nodes + snapshots dropped."""
+        n = len(self.nodes) + self._n_snapshots
+        for node in self.nodes.values():
+            self.alloc.decref(node.block_id)
+        self.nodes.clear()
+        self.roots.clear()
+        self._n_snapshots = 0
+        self.eviction_log.clear()
         return n
 
-    # ---- accounting --------------------------------------------------------
-    def pinned_blocks(self) -> set[int]:
-        """Distinct block ids currently pinned by the index itself."""
-        return {b for e in self.entries.values() for b in e.block_ids}
+    # ---- introspection -----------------------------------------------------
+    def pinned_blocks(self) -> list[int]:
+        """Block ids currently pinned by the tree (one per node)."""
+        return [node.block_id for node in self.nodes.values()]
 
     @property
     def stats(self) -> dict:
-        return {"entries": len(self.entries), "hits": self.hits,
-                "partial_hits": self.partial_hits, "misses": self.misses,
+        return {"nodes": len(self.nodes),
+                "entries": self._n_snapshots,
+                "hits": self.hits,
+                "partial_hits": self.partial_hits,
+                "misses": self.misses,
                 "evictions": self.evictions,
-                "pinned_blocks": len(self.pinned_blocks())}
+                "pinned_blocks": len(self.nodes)}
+
+    # ---- checkpoint --------------------------------------------------------
+    def export_device_state(self) -> dict:
+        """Snapshot pytrees (device arrays), keyed by snapshot id."""
+        return {snap.sid: {"logits": snap.logits, "tail": snap.tail,
+                           "slot_leaves": snap.slot_leaves}
+                for node in self._all_nodes()
+                for snap in node.snapshots.values()}
+
+    def export_host_state(self) -> dict:
+        """Tree structure + counters (host data only — parent links by
+        node id, tokens as arrays, snapshots by sid)."""
+        return {
+            "roots": [{"id": r.node_id, "namespace": ns,
+                       "last_used": r.last_used}
+                      for ns, r in self.roots.items()],
+            "nodes": [{"id": n.node_id, "parent": n.parent.node_id,
+                       "tokens": n.tokens.copy(), "block_id": n.block_id,
+                       "last_used": n.last_used}
+                      for n in self.nodes.values()],
+            "snapshots": [{"sid": s.sid, "node": n.node_id,
+                           "tail_tokens": s.tail_tokens.copy(),
+                           "hits": s.hits}
+                          for n in self._all_nodes()
+                          for s in n.snapshots.values()],
+            "counters": {"tick": self._tick, "hits": self.hits,
+                         "partial_hits": self.partial_hits,
+                         "misses": self.misses,
+                         "evictions": self.evictions,
+                         "next_id": self._next_id,
+                         "next_sid": self._next_sid},
+        }
+
+    def import_state(self, host: Optional[dict], device: dict) -> None:
+        """Rebuild the tree from :meth:`export_host_state` +
+        :meth:`export_device_state`.  Structural only — the block pins
+        the nodes stand behind travel in the allocator's own exported
+        state, so nothing is increfed here (mirroring the engine's
+        alloc import)."""
+        self.roots.clear()
+        self.nodes.clear()
+        self._n_snapshots = 0
+        self.eviction_log.clear()
+        if not host:
+            return
+        by_id: dict[int, RadixNode] = {}
+        for r in host["roots"]:
+            ns = r["namespace"]
+            root = RadixNode(
+                r["id"], None, None, None,
+                hashlib.sha1(repr(ns).encode()).digest(),
+                last_used=r["last_used"])
+            self.roots[ns] = root
+            by_id[root.node_id] = root
+        # parents are always created before children (smaller ids), so
+        # the tree rebuilds in id order without a second pass
+        for n in sorted(host["nodes"], key=lambda d: d["id"]):
+            parent = by_id[n["parent"]]
+            tokens = np.asarray(n["tokens"], np.int32)
+            node = RadixNode(
+                n["id"], parent, tokens, int(n["block_id"]),
+                _content_hash(parent.block_hash, tokens.tobytes()),
+                last_used=n["last_used"])
+            parent.children[node.key] = node
+            self.nodes[node.node_id] = node
+            by_id[node.node_id] = node
+        for s in host["snapshots"]:
+            d = device[s["sid"]]
+            node = by_id[s["node"]]
+            tt = np.asarray(s["tail_tokens"], np.int32)
+            node.snapshots[tt.tobytes()] = BoundarySnapshot(
+                sid=s["sid"], tail_tokens=tt, logits=d["logits"],
+                tail=d["tail"], slot_leaves=d["slot_leaves"],
+                hits=s["hits"])
+            self._n_snapshots += 1
+        c = host["counters"]
+        self._tick = c["tick"]
+        self.hits = c["hits"]
+        self.partial_hits = c["partial_hits"]
+        self.misses = c["misses"]
+        self.evictions = c["evictions"]
+        self._next_id = c["next_id"]
+        self._next_sid = c["next_sid"]

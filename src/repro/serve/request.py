@@ -32,10 +32,13 @@ class Request:
     the request should finish by (``DeadlinePolicy`` orders admission by
     it; ``SLOPolicy`` derives one from the group's slowdown bound when
     unset), and ``job_id`` names the submitting job for per-job token
-    budgets.  ``prefix_key`` tags requests whose prompts share a common
-    prefix (GRPO submits each prompt ``group`` times): the paged engine's
-    radix index (``repro.serve.radix``) prefills one member and pins the
-    prompt's full KV blocks under every member's slot.
+    budgets.  ``prefix_key`` is an optional prefix-sharing *isolation
+    namespace*: the paged engine's radix tree (``repro.serve.radix``)
+    shares prompt-prefix KV by token content, so requests share
+    automatically when their prompts agree on a block-aligned prefix —
+    set ``prefix_key`` only to wall a tenant off into its own tree
+    (``None`` = the global namespace; equal keys share, distinct keys
+    never do).
 
     ``stop_tokens`` turns the request multi-turn: sampling any of these
     ids does not *finish* the request — the engine records the trigger
@@ -51,7 +54,8 @@ class Request:
     frontend: Optional[Any] = None       # (1, F, d) modality embeddings
     priority: int = 0                    # higher = more urgent (sched tiebreak)
     deadline: Optional[float] = None     # absolute driver-clock finish target
-    prefix_key: Optional[Any] = None     # hashable prompt-sharing tag
+    prefix_key: Optional[Any] = None     # radix isolation namespace
+    #                                      (None = global content sharing)
     job_id: Optional[str] = None         # submitting job (per-job budgets)
     stop_tokens: tuple = ()              # tool-boundary ids -> suspend, not
     #                                      finish (serve.engine suspend API)

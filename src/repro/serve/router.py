@@ -60,9 +60,19 @@ class DisaggConfig:
     those handles pin.  ``decode_slots``/``decode_kv_blocks`` size the
     decode engine exactly like a monolithic ``EngineConfig`` would.  The
     admission policy (``sched``) runs on the prefill side — that is where
-    requests wait; ``prefix_share`` builds the radix index over the
-    prefill pool (exact hits only: later GRPO group members become
-    zero-compute handles)."""
+    requests wait; ``prefix_share`` builds the content-addressed radix
+    tree over each prefill pool (exact repeats become zero-compute
+    handles, block-aligned prefix overlaps prefill only their
+    extension).
+
+    ``prefill_engines`` scales the prefill side out: each engine gets its
+    own full-size slot/block pools *and its own radix tree*, and the
+    router steers each request with ``kv_routing`` — ``"kv_aware"``
+    (default) scores every engine by how many prompt blocks its tree
+    already holds and sends the request to the longest prefix
+    (production-stack's ``kvaware_routing``), falling back to the least
+    loaded; ``"queue"`` ignores KV residency and balances purely on
+    queue depth + resident handles."""
     prefill_slots: int = 2
     decode_slots: int = 8
     max_seq_len: int = 256
@@ -76,6 +86,9 @@ class DisaggConfig:
     decode_kv_blocks: Optional[int] = None
     sched: str = "fifo"
     prefix_share: bool = False
+    prefill_engines: int = 1        # parallel prefill pools (each full-size)
+    kv_routing: str = "kv_aware"    # "kv_aware" | "queue" steering between
+    #                                 prefill engines (moot with one engine)
     kernel_backend: str = "jnp"     # decode-step backend for BOTH pools
     kv_dtype: Optional[str] = None  # paged KV storage dtype for BOTH pools
     #                                 (the handle interchange stays float)
@@ -112,6 +125,7 @@ class RouterStats:
         self.transfers = 0
         self.transfer_time_s = 0.0
         self.transferred_blocks = 0
+        self.kv_routed = 0          # requests steered to a non-empty prefix
 
     @property
     def transfer_overhead_frac(self) -> float:
@@ -151,18 +165,23 @@ class RouterStats:
     def recorded_tokens(self):
         return self._router.decode.stats.recorded_tokens
 
-    # -- prefill-side delegation --------------------------------------------
+    # -- prefill-side delegation (summed across prefill engines) ------------
     @property
     def prefills(self):
-        return self._router.prefill.stats.prefills
+        return sum(pe.stats.prefills for pe in self._router.prefills)
 
     @property
     def prefix_hits(self):
-        return self._router.prefill.stats.prefix_hits
+        return sum(pe.stats.prefix_hits for pe in self._router.prefills)
+
+    @property
+    def prefix_partial_hits(self):
+        return sum(pe.stats.prefix_partial_hits
+                   for pe in self._router.prefills)
 
     @property
     def blocks_saved(self):
-        return self._router.prefill.stats.blocks_saved
+        return sum(pe.stats.blocks_saved for pe in self._router.prefills)
 
 
 class DisaggRouter:
@@ -177,8 +196,20 @@ class DisaggRouter:
                  policy=None, runtime=None, job_id: Optional[str] = None):
         self.model = model
         self.config = config
-        self.prefill = PrefillEngine(model, params, config.prefill_config(),
-                                     policy=policy)
+        if config.prefill_engines < 1:
+            raise ValueError(
+                f"prefill_engines must be >= 1, got {config.prefill_engines}")
+        if config.kv_routing not in ("kv_aware", "queue"):
+            raise ValueError(
+                f"kv_routing must be 'kv_aware' or 'queue', "
+                f"got {config.kv_routing!r}")
+        # a caller-supplied policy object carries per-group state, so it
+        # can only drive one queue; extra engines build their own from
+        # the config's policy name
+        self.prefills = [
+            PrefillEngine(model, params, config.prefill_config(),
+                          policy=policy if i == 0 else None)
+            for i in range(config.prefill_engines)]
         self.decode = Engine(model, params, config.decode_config(), rng=rng)
         self.pending_transfer: deque[KVTransferHandle] = deque()
         self.runtime = runtime
@@ -189,13 +220,20 @@ class DisaggRouter:
 
     # ---- Engine surface ----------------------------------------------------
     @property
+    def prefill(self):
+        """First prefill engine — the single-engine surface existing
+        callers (and single-engine configs) read."""
+        return self.prefills[0]
+
+    @property
     def clock(self):
         return self._clock
 
     @clock.setter
     def clock(self, fn):
         self._clock = fn
-        self.prefill.clock = fn
+        for pe in self.prefills:
+            pe.clock = fn
         self.decode.clock = fn
 
     @property
@@ -228,8 +266,8 @@ class DisaggRouter:
 
     @property
     def idle(self) -> bool:
-        return (not self.prefill.queue and not self.pending_transfer
-                and self.decode.idle)
+        return (not any(pe.queue for pe in self.prefills)
+                and not self.pending_transfer and self.decode.idle)
 
     def harvest(self):
         return self.decode.harvest()
@@ -250,7 +288,34 @@ class DisaggRouter:
                     f"request {req.rid}: needs {need} KV blocks but the "
                     f"decode pool has {self.decode.slots.alloc.num_blocks}")
         self.decode._validate_stop_tokens(req)
-        return self.prefill.submit(req)
+        for pe in self._route(req):
+            if pe.submit(req):
+                return True
+        return False
+
+    def _route(self, req) -> list:
+        """Order the prefill engines for ``req``: with ``kv_aware``
+        routing, by longest registered prefix first (each engine's radix
+        tree probed with a countless ``match`` — admission counters stay
+        untouched), ties broken by load (queue depth + resident handles);
+        with ``"queue"`` routing, by load alone.  The request falls
+        through to later engines on queue backpressure."""
+        if len(self.prefills) == 1:
+            return [self.prefills[0]]
+        scored = []
+        for i, pe in enumerate(self.prefills):
+            score = 0
+            if (self.config.kv_routing == "kv_aware"
+                    and pe.radix is not None and req.frontend is None):
+                m = pe.radix.match(req)
+                if m is not None:
+                    score = m.n_shared + (1 if m.exact else 0)
+            load = len(pe.queue) + pe.resident
+            scored.append((-score, load, i, pe))
+        scored.sort(key=lambda s: s[:3])
+        if -scored[0][0] > 0:
+            self.stats.kv_routed += 1
+        return [s[3] for s in scored]
 
     # ---- scheduler ---------------------------------------------------------
     def step(self) -> int:
@@ -258,8 +323,10 @@ class DisaggRouter:
         Returns decode steps executed, or 1 when only prefill/transfer
         progressed — ``0`` keeps the ``Engine.step`` "no work" contract
         trace drivers sleep on."""
-        prefilled = self.prefill.step()
-        self.pending_transfer.extend(self.prefill.pop_ready())
+        prefilled = 0
+        for pe in self.prefills:
+            prefilled += pe.step()
+            self.pending_transfer.extend(pe.pop_ready())
         moved = 0
         while (self.pending_transfer
                and self.decode.can_admit_prefilled(
@@ -274,9 +341,10 @@ class DisaggRouter:
                     f"transfer stalled: handle for rid {h.req.rid} "
                     f"(budget {h.req.total_budget}) does not fit the idle "
                     f"decode pool — check decode slot/block sizing")
-            if self.prefill.queue and self.decode.idle:
+            waiting = sum(len(pe.queue) for pe in self.prefills)
+            if waiting and self.decode.idle:
                 raise RuntimeError(
-                    f"admission stalled: {len(self.prefill.queue)} waiting, "
+                    f"admission stalled: {waiting} waiting, "
                     f"0 active — check prefill pool sizing")
             return 0
         return k if k else 1
@@ -287,7 +355,9 @@ class DisaggRouter:
                if self.runtime is not None else contextlib.nullcontext())
         t0 = time.perf_counter()
         with ctx:
-            one = self.prefill.export_cache(handle)
+            # export from the engine that prefilled it — with several
+            # prefill pools the handle's blocks live in its source pool
+            one = handle.source.export_cache(handle)
             self.decode.admit_prefilled(handle.req, handle.logits, one)
         n_blocks = len(handle.block_ids)
         handle.release()
@@ -357,26 +427,33 @@ class DisaggRouter:
         front, their pins released) — re-prefilling them under the same
         weights is bit-identical, so the snapshot stays exact without
         serializing the prefill pool."""
-        self.pending_transfer.extend(self.prefill.pop_ready())
+        for pe in self.prefills:
+            self.pending_transfer.extend(pe.pop_ready())
         requeue = [h.req for h in self.pending_transfer]
         self.drop_pending()
         for req in reversed(requeue):
             self.prefill.queue._q.appendleft(req)
         state = self.decode.export_state()
-        state["prefill_queue"] = copy.deepcopy(list(self.prefill.queue._q))
+        # the snapshot flattens every engine's waiting set into one list;
+        # import funnels it through engine 0 and the KV-aware routing
+        # re-spreads future submissions
+        state["prefill_queue"] = copy.deepcopy(
+            [r for pe in self.prefills for r in pe.queue._q])
         return state
 
     def import_state(self, state: dict) -> None:
         state = dict(state)
         waiting = state.pop("prefill_queue", [])
-        self.pending_transfer.extend(self.prefill.pop_ready())
+        for pe in self.prefills:
+            self.pending_transfer.extend(pe.pop_ready())
         self.drop_pending()
-        if self.prefill.radix is not None:
-            self.prefill.radix.flush()
-        if self.prefill.paged:
-            self.prefill.slots.alloc.assert_clean(
-                context="DisaggRouter.import_state")
-        self.prefill.queue._q.clear()
+        for pe in self.prefills:
+            if pe.radix is not None:
+                pe.radix.flush()
+            if pe.paged:
+                pe.slots.alloc.assert_clean(
+                    context="DisaggRouter.import_state")
+            pe.queue._q.clear()
         self.prefill.queue._q.extend(copy.deepcopy(waiting))
         self.decode.import_state(state)
 
@@ -403,18 +480,22 @@ class DisaggRouter:
         weights swap, so re-prefilling under the new weights is the correct
         (and cheapest-to-keep-exact) continuation."""
         if not carry_live:
-            if self.prefill.queue or not self.decode.idle:
+            if any(pe.queue for pe in self.prefills) or not self.decode.idle:
                 raise RuntimeError("reset() on a live router; drain first")
-            self.pending_transfer.extend(self.prefill.pop_ready())
+            for pe in self.prefills:
+                self.pending_transfer.extend(pe.pop_ready())
             self.drop_pending()
-            self.prefill.reset(params)
+            for pe in self.prefills:
+                pe.reset(params)
             self.decode.reset(params, rng)
             return
-        self.pending_transfer.extend(self.prefill.pop_ready())
+        for pe in self.prefills:
+            self.pending_transfer.extend(pe.pop_ready())
         requeue = [h.req for h in self.pending_transfer]
         self.drop_pending()
-        held = list(self.prefill.queue._q)
-        self.prefill.queue._q.clear()
-        self.prefill.reset(params)
+        held = [r for pe in self.prefills for r in pe.queue._q]
+        for pe in self.prefills:
+            pe.queue._q.clear()
+            pe.reset(params)
         self.decode.reset(params, rng, carry_live=True)
         self.prefill.queue._q.extend(requeue + held)

@@ -147,7 +147,7 @@ class PagedSlotManager:
         # slot -> leading table entries pinned via prefix sharing (each
         # incref'd on behalf of this slot; decref'd on release)
         self.shared: dict[int, list[int]] = {}
-        self._tables_dev = jnp.asarray(self.tables)
+        self._tables_dev = jnp.asarray(self.tables.copy())
         self._dirty = False
 
     # ---- bookkeeping -------------------------------------------------------
@@ -273,9 +273,17 @@ class PagedSlotManager:
         self.events.append(("release", rid, slot))
 
     def device_tables(self) -> jax.Array:
-        """Device copy of the block tables (re-uploaded only when changed)."""
+        """Device copy of the block tables (re-uploaded only when changed).
+
+        The upload snapshots ``self.tables`` (note the ``.copy()``):
+        ``jnp.asarray`` may zero-copy *alias* a suitably aligned host
+        buffer on the CPU backend, and ``tables`` keeps mutating in place
+        — an aliased upload would let an asynchronously dispatched
+        scatter/gather read rows as mutated *after* dispatch (e.g. the
+        prefill donor row zeroed by its immediate slot release), turning
+        prompt writes into null-block writes nondeterministically."""
         if self._dirty:
-            self._tables_dev = jnp.asarray(self.tables)
+            self._tables_dev = jnp.asarray(self.tables.copy())
             self._dirty = False
         return self._tables_dev
 

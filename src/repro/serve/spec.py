@@ -35,7 +35,10 @@ class RolloutSpec:
     (monolithic), ``True`` (split ``num_slots`` 1:3 prefill:decode), a
     dict of :class:`DisaggConfig` overrides, or a full ``DisaggConfig``.
     ``group``/``job_id`` tag GRPO prompt groups and the submitting job
-    for prefix sharing and per-job scheduler budgets.  ``carry`` opts the
+    for per-job scheduler budgets; prefix sharing itself is
+    content-addressed (identical token prefixes share KV untagged), with
+    ``prefix_namespace`` an optional isolation namespace for requests
+    that must not share across a tenant boundary.  ``carry`` opts the
     streaming executor into partial-rollout continuation: a mid-rollout
     weight sync suspends live generations and resumes them under the new
     weights (``Engine.reset(carry_live=True)``) instead of finishing the
@@ -54,6 +57,8 @@ class RolloutSpec:
     group: Optional[int] = None
     job_id: Optional[str] = None
     carry: bool = False
+    prefix_namespace: Any = None         # radix isolation namespace
+    #                                      (None = global content sharing)
 
     def replace(self, **kw) -> "RolloutSpec":
         return dataclasses.replace(self, **kw)
@@ -136,7 +141,10 @@ class RolloutSpec:
                                                      "prefill_kv_blocks",
                                                      None)),
                        ("decode_kv_blocks", getattr(args, "decode_kv_blocks",
-                                                    None)))
+                                                    None)),
+                       ("prefill_engines", getattr(args, "prefill_engines",
+                                                   None)),
+                       ("kv_routing", getattr(args, "kv_routing", None)))
                       if v is not None} or True
         spec = cls(
             num_slots=get("slots", "num_slots"),

@@ -117,6 +117,32 @@ def test_blocks_for():
 # ---------------------------------------------------------------------------
 # PagedSlotManager properties (host bookkeeping over a real model cache)
 # ---------------------------------------------------------------------------
+def test_device_tables_upload_isolated_from_host_mutation():
+    """``jnp.asarray`` may zero-copy *alias* a suitably aligned host
+    buffer on the CPU backend, and ``tables`` mutates in place for the
+    manager's whole life — ``device_tables`` must upload a snapshot.  An
+    aliased upload lets asynchronously dispatched scatters read rows as
+    mutated after dispatch: the disagg prefill engine releases its donor
+    slot (zeroing the row) right after the scatter, which then lands the
+    whole prompt in the null block nondeterministically.  The table here
+    is sized past numpy's mmap threshold so the allocation is
+    page-aligned and the zero-copy path is actually reachable."""
+    model, _ = get_model("internlm2-1.8b")
+    sm = PagedSlotManager(model, 512, 512, block_size=4, num_blocks=32)
+    assert sm.tables.nbytes >= 1 << 18     # large enough for zero-copy
+    for _ in range(8):                     # fresh upload per dirty cycle
+        slot = sm.assign(0, prompt_len=8, total_budget=12)
+        dev = sm.device_tables()
+        assert not np.shares_memory(np.asarray(dev), sm.tables), (
+            "device tables alias the live host table buffer; the upload "
+            "must snapshot (tables.copy()) to stay immutable once "
+            "dispatched")
+        before = np.asarray(dev).copy()
+        assert before[slot, :2].all()      # prompt blocks are mapped
+        sm.release(slot)                   # zeroes the host row in place
+        assert np.array_equal(np.asarray(dev), before)
+
+
 def _drive_slot_manager(ops, sm: PagedSlotManager):
     live, rid = [], 0
     for kind, val in ops:
