@@ -21,6 +21,11 @@ keep admitting at least one extra concurrent request at equal KV memory,
 and deadline scheduling must keep its attainment floor — logical
 properties of the trace, not timings, so a hard floor is the right guard.
 
+``--ceilings path=value,...`` is the mirror image: ``candidate <= value``.
+Used for metrics where *lower* proves the property — the elastic
+controller's capacity-seconds ratio vs a peak-provisioned static baseline
+must stay at or below 0.9, or autoscaling stopped returning capacity.
+
 The candidate's ``config`` block must match the baseline's (same workload,
 seed and sizes) — comparing different workloads is a config error, not a
 regression, and exits 2.
@@ -52,10 +57,14 @@ def main() -> int:
     ap.add_argument("--floors", default="",
                     help="comma-separated path=value absolute floors the "
                          "candidate must meet regardless of the baseline")
+    ap.add_argument("--ceilings", default="",
+                    help="comma-separated path=value absolute ceilings the "
+                         "candidate must stay at or below")
     ap.add_argument("--skip-config-check", action="store_true")
     args = ap.parse_args()
-    if not args.metrics and not args.floors:
-        ap.error("nothing to check: pass --metrics and/or --floors")
+    if not args.metrics and not args.floors and not args.ceilings:
+        ap.error("nothing to check: pass --metrics, --floors and/or "
+                 "--ceilings")
 
     with open(args.baseline) as f:
         base = json.load(f)
@@ -92,6 +101,19 @@ def main() -> int:
         print(f"{status:7s}  {path}: candidate={c:.4g} "
               f"(absolute floor {floor:.4g})")
         if c < floor:
+            failed.append(path)
+    for spec in [c.strip() for c in args.ceilings.split(",") if c.strip()]:
+        path, _, ceil_s = spec.partition("=")
+        ceil = float(ceil_s)
+        c = lookup(cand, path)
+        if c is None:
+            print(f"MISSING  {path}: candidate={c} (ceiling {ceil:.4g})")
+            failed.append(path)
+            continue
+        status = "FAIL" if c > ceil else "ok"
+        print(f"{status:7s}  {path}: candidate={c:.4g} "
+              f"(absolute ceiling {ceil:.4g})")
+        if c > ceil:
             failed.append(path)
     if failed:
         print(f"\nregression in: {', '.join(failed)}")

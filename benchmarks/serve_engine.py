@@ -70,8 +70,9 @@ from repro.core.distributions import sample_response_fractions
 from repro.data import tokenizer as tok
 from repro.models import build_model
 from repro.rl import SamplerConfig, generate
-from repro.serve import (DisaggConfig, DisaggRouter, Engine, EngineConfig,
-                         Request, blocks_for, run_trace)
+from repro.serve import (DisaggConfig, DisaggRouter, ElasticConfig,
+                         ElasticController, Engine, EngineConfig, Request,
+                         blocks_for, run_trace)
 
 PROMPT_BUCKETS = (8, 16)
 NO_EOS = -1           # lengths come from budgets; see module docstring
@@ -410,14 +411,15 @@ def run_chat_scenario(model, params, rng, *, n_tenants: int = 3,
             shared_stats = {"hits": srv.radix.hits,
                             "partial_hits": srv.radix.partial_hits,
                             "misses": srv.radix.misses,
-                            "blocks_saved": srv.stats.blocks_saved}
+                            "blocks_saved": srv.metrics().blocks_saved}
             arms[name]["prefix"] = shared_stats
         elif name == "disagg_kv_aware":
-            kv_routed = srv.stats.kv_routed
+            snap = srv.metrics()
+            kv_routed = snap.kv_routed
             arms[name]["prefix"] = {
-                "hits": srv.stats.prefix_hits,
-                "partial_hits": srv.stats.prefix_partial_hits,
-                "blocks_saved": srv.stats.blocks_saved}
+                "hits": snap.prefix_hits,
+                "partial_hits": snap.prefix_partial_hits,
+                "blocks_saved": snap.blocks_saved}
             arms[name]["kv_routed"] = kv_routed
 
     saved = shared_stats["blocks_saved"]
@@ -531,9 +533,9 @@ def run_disagg_scenario(model, params, rng, *, n: int, rate: float,
             "ttft_mean_s": res["ttft_mean_s"],
             "latency_p95_s": res["latency_p95_s"],
             "deadline_attainment": res.get("deadline_attainment", 1.0),
-            "transfers": rt.stats.transfers,
-            "transfer_time_s": rt.stats.transfer_time_s,
-            "transfer_overhead_frac": rt.stats.transfer_overhead_frac,
+            "transfers": rt.metrics().transfers,
+            "transfer_time_s": rt.metrics().transfer_time_s,
+            "transfer_overhead_frac": rt.metrics().transfer_overhead_frac,
             "peak_kv_blocks_decode": res["peak_kv_blocks"],
         }
         out["splits"].append(split)
@@ -650,6 +652,190 @@ def run_kernel_scenario(model, params, rng, *, n: int, rate: float,
             backends["pallas"]["tok_per_s"]
             / max(backends["jnp"]["tok_per_s"], 1e-9)),
         "tokens_match": toks["jnp"] == toks["pallas"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scenario: elastic capacity under diurnal / bursty load
+# ---------------------------------------------------------------------------
+def run_elastic_scenario(model, params, rng, *, n: int, cap: int,
+                         slots: int, block_size: int):
+    """Closed-loop autoscaling (``serve.elastic``) vs a statically
+    peak-provisioned engine on a diurnal trace, plus the two admission-
+    control guarantees.
+
+    The trace alternates **burst waves** (a wave's worth of requests
+    arriving together — the diurnal peak) with **trickle valleys**
+    (near-serial arrivals at roughly one request per solo service time).
+    Gaps and deadlines are expressed in service-time units measured by a
+    calibration run at peak capacity, so the diurnal shape — and hence
+    the controller's grow/shrink behaviour — survives runner-speed
+    differences.  The same deadline-stamped trace replays through a
+    static engine pinned at the peak rung and through the elastic
+    controller starting at the peak rung; shrinking through the valleys
+    is where the capacity-seconds saving comes from.  (A full diurnal
+    replay — the paper's million-request day — is this same code at
+    higher ``n``; the CI trace keeps the wave structure at bench scale.)
+
+    Tracked (CI-guarded as ``elastic.*``):
+
+    * ``capacity_seconds_ratio`` — elastic capacity-seconds over the
+      peak-provisioned static baseline (CI ceiling: <= 0.9 — elasticity
+      must actually return capacity);
+    * ``attainment_delta`` — elastic minus static deadline attainment on
+      the identical trace (floor: >= 0 — returned capacity must not cost
+      attainment);
+    * ``subsat_shed_free`` — with admission control *armed*, a
+      sub-saturation trace sheds exactly nothing (the predictor is
+      conservative by construction);
+    * ``tokens_match`` — greedy token equality: elastic output is
+      bit-identical to static per request; in the overload leg, admitted
+      non-degraded requests are bit-identical and degraded requests are
+      an exact prefix of their unclamped static tokens;
+    * ``overload_accounted`` — under genuine overload with tight
+      deadlines every arrival is finished or recorded-shed (sheds are
+      never silent).
+    """
+    max_len = max(PROMPT_BUCKETS) + cap
+    ladder = tuple(sorted({max(1, slots // 4), max(1, slots // 2), slots}))
+
+    def fresh(ns):
+        return Engine(model, params, EngineConfig(
+            num_slots=ns, max_seq_len=max_len, temperature=0.0,
+            eos_id=NO_EOS, block_size=block_size))
+
+    for rung in ladder:                 # compile every rung off-trace
+        warm = fresh(rung)
+        for b in PROMPT_BUCKETS:
+            warm.submit(Request(rid=-b, prompt=np.full(b, tok.PAD, np.int32),
+                                max_new_tokens=1))
+        warm.run()
+
+    prompts = []
+    for _ in range(n):
+        hi = 10 ** int(rng.integers(2, 7))
+        text = f"{int(rng.integers(10, hi))}+{int(rng.integers(10, hi))}="
+        ids = tok.encode(text, bos=True)
+        bucket = next(b for b in PROMPT_BUCKETS if b >= len(ids))
+        prompts.append(tok.pad_batch([ids], bucket)[0])
+    budgets = np.maximum(
+        1, (sample_response_fractions(rng, n) * cap).astype(int))
+
+    calib = run_trace(fresh(slots),
+                      [Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=int(budgets[i]))
+                       for i in range(n)], realtime=False)
+    per_tok = slots / max(calib["tok_per_s"], 1e-9)  # solo per-token service
+    mean_budget = float(budgets.mean())
+
+    # diurnal arrivals: two "days" of burst -> valley
+    segs = ("burst", "valley", "burst", "valley")
+    counts = [round(n * f) for f in (0.3, 0.2, 0.3, 0.0)]
+    counts[3] = n - sum(counts[:3])
+    serial_gap = 1.3 * cap * per_tok    # one request per solo service time
+    arr, t = [], 0.0
+    for kind, count in zip(segs, counts):
+        if kind == "burst":
+            arr.extend([t] * count)
+            t += 1.2 * count * mean_budget * per_tok / slots
+        else:
+            for _ in range(count):
+                arr.append(t)
+                t += serial_gap
+
+    def mk(slack):
+        return [Request(rid=i, prompt=prompts[i],
+                        max_new_tokens=int(budgets[i]), arrival_time=arr[i],
+                        deadline=arr[i] + slack * per_tok
+                        * (int(budgets[i]) + len(prompts[i])))
+                for i in range(n)]
+
+    def ctrl(**over):
+        kw = dict(ladder=ladder, interval_s=0.05, cooldown_s=0.15)
+        kw.update(over)
+        return ElasticController(ElasticConfig(**kw))
+
+    static_res = run_trace(fresh(slots), mk(12.0), realtime=False)
+    c_main = ctrl()
+    ela_res = run_trace(fresh(slots), mk(12.0), realtime=False,
+                        controller=c_main)
+    e = ela_res["elastic"]
+    ref = {o.rid: list(map(int, o.tokens)) for o in static_res["outputs"]}
+    got = {o.rid: list(map(int, o.tokens)) for o in ela_res["outputs"]}
+    main_exact = got == ref
+    att_static = static_res.get("deadline_attainment", 1.0)
+    att_elastic = ela_res.get("deadline_attainment", 1.0)
+
+    # sub-saturation, admission control ARMED: sheds must be exactly zero
+    n_sub = min(max(n // 3, 8), 16)
+    sub_reqs = [Request(rid=i, prompt=prompts[i],
+                        max_new_tokens=int(budgets[i]),
+                        arrival_time=i * serial_gap,
+                        deadline=i * serial_gap + 12.0 * per_tok
+                        * (int(budgets[i]) + len(prompts[i])))
+                for i in range(n_sub)]
+    sub_res = run_trace(fresh(slots), sub_reqs, realtime=False,
+                        controller=ctrl(shed=True))
+    subsat_shed_free = int(sub_res["elastic"]["sheds"] == 0)
+
+    # overload: the whole trace as one dense wave with tight deadlines —
+    # admission degrades (budget clamps) before it sheds, sheds are
+    # recorded, and nothing silently vanishes.  Arrivals are staggered by
+    # one service step so the predictor has a measured time-per-token
+    # before the queue gets deep (a cold engine admits everything).
+    over_gap = per_tok / 3.0
+    over_reqs = [Request(rid=i, prompt=prompts[i],
+                         max_new_tokens=int(budgets[i]),
+                         arrival_time=i * over_gap,
+                         deadline=i * over_gap + 1.25 * per_tok
+                         * (int(budgets[i]) + len(prompts[i])))
+                 for i in range(n)]
+    c_over = ctrl(shed=True, min_degrade_tokens=4)
+    over_res = run_trace(fresh(slots), over_reqs, realtime=False,
+                         controller=c_over)
+    oe = over_res["elastic"]
+    degraded_to = {d["rid"]: d["to"] for d in oe["degrade_records"]}
+    shed_rids = {s["rid"] for s in oe["shed_records"]}
+    prefix_ok, exact_ok = True, True
+    for o in over_res["outputs"]:
+        if o.rid in degraded_to:
+            want = ref[o.rid][:degraded_to[o.rid]]
+            prefix_ok &= list(map(int, o.tokens)) == want
+        else:
+            exact_ok &= list(map(int, o.tokens)) == ref[o.rid]
+    overload_accounted = int(
+        len(over_res["outputs"]) + oe["sheds"] == n
+        and oe["sheds"] == len(oe["shed_records"])
+        and not shed_rids & {o.rid for o in over_res["outputs"]})
+    tokens_match = int(main_exact and prefix_ok and exact_ok)
+
+    return {
+        "config": {"n": n, "slots": slots, "ladder": list(ladder),
+                   "cap": cap, "per_token_calib_s": per_tok,
+                   "segments": list(zip(segs, counts)),
+                   "n_subsat": n_sub},
+        "static": {"tok_per_s": static_res["tok_per_s"],
+                   "latency_p95_s": static_res["latency_p95_s"],
+                   "deadline_attainment": att_static},
+        "elastic": {"tok_per_s": ela_res["tok_per_s"],
+                    "latency_p95_s": ela_res["latency_p95_s"],
+                    "deadline_attainment": att_elastic,
+                    "resizes": e["resizes"],
+                    "resize_log": e["resize_log"],
+                    "capacity_log": e["capacity_log"]},
+        "capacity_seconds": e["capacity_seconds"],
+        "static_capacity_seconds": e["static_capacity_seconds"],
+        "capacity_seconds_ratio": e["capacity_seconds_ratio"],
+        "attainment_delta": att_elastic - att_static,
+        "tokens_match": tokens_match,
+        "subsat_sheds": sub_res["elastic"]["sheds"],
+        "subsat_shed_free": subsat_shed_free,
+        "overload": {"sheds": oe["sheds"], "degrades": oe["degrades"],
+                     "shed_frac": oe["sheds"] / n,
+                     "class_counts": oe["class_counts"],
+                     "degraded_prefix_ok": int(prefix_ok),
+                     "admitted_exact_ok": int(exact_ok)},
+        "overload_accounted": overload_accounted,
     }
 
 
@@ -788,6 +974,10 @@ def main():
     if has_paged_kv:
         chat_res = run_chat_scenario(
             model, params, np.random.default_rng(args.seed + 5))
+    ela_res = run_elastic_scenario(
+        model, params, np.random.default_rng(args.seed + 6),
+        n=args.n_requests, cap=args.max_new,
+        slots=args.slots, block_size=args.block_size)
 
     speedup = eng_res["tok_per_s"] / max(sta_res["tok_per_s"], 1e-9)
     print(f"# {args.arch}: {args.n_requests} reqs, {args.slots} slots, "
@@ -856,6 +1046,18 @@ def main():
               f"{chat_res['ttft_speedup']:.2f}x unshared | "
               f"{chat_res['kv_routed']} requests KV-routed across 2 prefill "
               f"engines ({match})")
+    match = ("tokens identical" if ela_res["tokens_match"]
+             else "TOKEN MISMATCH")
+    print(f"elastic (diurnal trace): {ela_res['capacity_seconds_ratio']:.0%} "
+          f"capacity-seconds vs peak-provisioned static at attainment delta "
+          f"{ela_res['attainment_delta']:+.0%} "
+          f"({ela_res['elastic']['resizes']} resizes over ladder "
+          f"{ela_res['config']['ladder']}) | sub-saturation sheds "
+          f"{ela_res['subsat_sheds']} | overload: "
+          f"{ela_res['overload']['degrades']} degraded, "
+          f"{ela_res['overload']['sheds']} shed "
+          f"({ela_res['overload']['shed_frac']:.0%}), accounted="
+          f"{ela_res['overload_accounted']} ({match})")
 
     if args.json:
         report = {
@@ -888,6 +1090,7 @@ def main():
             report["kernel"] = ker_res
         if chat_res is not None:
             report["radix"] = chat_res
+        report["elastic"] = ela_res
         path = os.path.abspath(args.json)
         with open(path, "w") as f:
             json.dump(report, f, indent=2)

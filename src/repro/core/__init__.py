@@ -13,6 +13,7 @@ from repro.core.simulator import (ClusterSimulator, Report,
                                   simulate_profiles)
 from repro.core.phase_control import (PermitPool, PhaseProfile,
                                       RollMuxRuntime)
+from repro.core.telemetry import MetricsSnapshot
 from repro.core import distributions, theory, trace
 
 __all__ = [
@@ -22,5 +23,6 @@ __all__ = [
     "GavelPlus", "GreedyMostIdle", "RandomScheduler", "SoloDisaggregation",
     "VeRLColocated", "offline_optimal_cost", "ClusterSimulator", "Report",
     "group_from_profiles", "replay_verl", "simulate_profiles", "PermitPool",
-    "PhaseProfile", "RollMuxRuntime", "distributions", "theory", "trace",
+    "PhaseProfile", "RollMuxRuntime", "MetricsSnapshot", "distributions",
+    "theory", "trace",
 ]

@@ -57,6 +57,25 @@ class PermitPool:
             self._active -= 1
             self._cv.notify_all()
 
+    def resize(self, capacity: int) -> None:
+        """Retune the pool's permit count on a live pool (the elastic
+        controller's actuator).  Growing wakes waiters immediately; when
+        shrinking, permits already held are never revoked — the pool
+        simply stops admitting until ``_active`` drains below the new
+        capacity (``acquire`` re-checks the bound under the condition
+        variable)."""
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        with self._cv:
+            self.capacity = capacity
+            self._cv.notify_all()
+
+    @property
+    def waiting(self) -> int:
+        """Tickets queued behind the permit bound (telemetry gauge)."""
+        with self._cv:
+            return len(self._queue)
+
 
 @dataclass
 class PhaseStats:
@@ -177,6 +196,21 @@ class RollMuxRuntime:
         if name not in self.pools:
             self.pools[name] = PermitPool(name, capacity)
         return self.pools[name]
+
+    def metrics(self):
+        """Unified :class:`~repro.core.telemetry.MetricsSnapshot` of the
+        execution plane: per-pool busy fractions (pool busy time over
+        runtime elapsed — the elastic controller's permit-retuning
+        signal) and capacities.  Merges cleanly with engine/router
+        snapshots (dict fields union)."""
+        from repro.core.telemetry import MetricsSnapshot
+        elapsed = max(time.perf_counter() - self._t0, 1e-9)
+        return MetricsSnapshot(
+            source="runtime",
+            pool_busy_frac={name: min(p.busy_time / elapsed, 1.0)
+                            for name, p in self.pools.items()},
+            pool_capacity={name: p.capacity
+                           for name, p in self.pools.items()})
 
     def runtime_hook(self, fn: Callable) -> Callable:
         """@rollmux.runtime_hook — called as fn(job_id, phase, event)."""

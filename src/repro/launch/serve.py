@@ -124,11 +124,90 @@ def serve_continuous(arch: str, prompts_text: list[str], *,
     return report
 
 
+def serve_elastic(arch: str, prompts_text: list[str], *,
+                  reduced: bool = True, max_new: int = 32, seed: int = 0,
+                  spec: RolloutSpec | None = None,
+                  ladder: tuple = (2, 4, 8), shed: bool = False,
+                  deadline_s: float = 2.0, arrival_gap_s: float = 0.05,
+                  warmup: bool = True, model=None, params=None):
+    """Closed-loop elastic serving: replay a staggered arrival trace
+    through ``serve.run_trace`` with an ``ElasticController`` in the loop.
+
+    The engine starts on the smallest rung of ``ladder`` and the
+    controller grows/shrinks it between steps by suspend/resume (live KV
+    carried, greedy tokens identical to a static run).  ``shed=True``
+    stamps every request with an ``arrival + deadline_s`` deadline and
+    arms the admission gate: requests that cannot meet their deadline are
+    degraded (decode budget clamped) before being shed, and every shed is
+    recorded in the report — never silently dropped.  Returns the
+    ``run_trace`` report; its ``"elastic"`` section carries
+    capacity-seconds, sheds/degrades and the resize history.
+
+    ``warmup`` (default on) pre-compiles every ladder rung's decode shape
+    on a throwaway engine before the trace starts — otherwise the first
+    step's jit compile lands in ``decode_time_s``, the admission
+    predictor reads a wildly inflated time-per-token, and an unloaded
+    system sheds like a saturated one."""
+    import numpy as np
+
+    from repro.serve import ElasticConfig, ElasticController, Request
+    from repro.serve.engine import run_trace
+
+    if model is None:
+        model = build_model(arch, reduced=reduced)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init(key)
+    ladder = tuple(sorted({int(x) for x in ladder}))
+    if spec is None:
+        spec = RolloutSpec()
+    spec = spec.replace(num_slots=ladder[0])
+    toks = [np.asarray(tok.encode(t, bos=True), np.int32)
+            for t in prompts_text]
+    plen = max(len(t) for t in toks)
+    if warmup:
+        for rung in ladder:
+            warm = spec.replace(num_slots=rung).build_engine(
+                model, params, batch=len(toks),
+                max_seq_len=plen + max_new, eos_id=tok.EOS,
+                temperature=0.0, rng=key)
+            warm.submit(Request(rid=0, prompt=toks[0], max_new_tokens=2))
+            while not warm.idle:
+                warm.step()
+    engine = spec.build_engine(model, params, batch=len(toks),
+                               max_seq_len=plen + max_new, eos_id=tok.EOS,
+                               temperature=0.0, rng=key)
+    reqs = []
+    for i, t in enumerate(toks):
+        fr = None
+        if model.cfg.frontend == "vision":
+            fr = jnp.zeros((1, model.cfg.num_frontend_tokens,
+                            model.cfg.d_model))
+        elif model.cfg.frontend == "audio":
+            fr = jnp.zeros((1, model.cfg.max_source_len, model.cfg.d_model))
+        arrival = i * arrival_gap_s
+        reqs.append(Request(rid=i, prompt=t, max_new_tokens=max_new,
+                            arrival_time=arrival, frontend=fr,
+                            deadline=arrival + deadline_s if shed else None))
+    controller = ElasticController(ElasticConfig(
+        ladder=ladder, shed=shed, interval_s=0.05, cooldown_s=0.15))
+    report = run_trace(engine, reqs, realtime=False, controller=controller)
+    report["texts"] = [
+        tok.decode([int(x) for x in o.tokens if int(x) != tok.EOS])
+        for o in report["outputs"]]
+    return report
+
+
 def _main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--engine", choices=("continuous", "static"),
-                    default="continuous")
+    ap.add_argument("--engine", choices=("continuous", "static", "elastic"),
+                    default="continuous",
+                    help="continuous = fixed-capacity slot-pool engine; "
+                         "static = legacy one-batch generate; elastic = "
+                         "continuous engine under the closed-loop capacity "
+                         "controller (serve.elastic) replaying a staggered "
+                         "arrival trace")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--slots", type=int, default=None,
                     help="KV-cache slots (continuous only; default = batch)")
@@ -195,11 +274,42 @@ def _main():
                          "~halving KV memory per request")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--ladder", default="2,4,8",
+                    help="--engine elastic: comma-separated slot-count "
+                         "rungs the controller may resize between (each "
+                         "rung compiles its own decode shape once)")
+    ap.add_argument("--shed", action="store_true",
+                    help="--engine elastic: stamp deadlines on every "
+                         "request and arm overload admission control — "
+                         "degrade (clamp decode budget) before shedding, "
+                         "report every shed")
+    ap.add_argument("--deadline-s", type=float, default=2.0,
+                    help="--engine elastic --shed: per-request deadline, "
+                         "seconds after arrival")
     args = ap.parse_args()
     spec = RolloutSpec.from_args(args)
     prompts = [f"{i}+{i+1}=" for i in range(args.batch)]
     if args.group:
         prompts = [p for p in prompts for _ in range(args.group)]
+    if args.engine == "elastic":
+        ladder = tuple(int(x) for x in args.ladder.split(","))
+        res = serve_elastic(args.arch, prompts, max_new=args.max_new,
+                            spec=spec, ladder=ladder, shed=args.shed,
+                            deadline_s=args.deadline_s)
+        e = res["elastic"]
+        print(f"[elastic] served {len(res['texts'])}/{len(prompts)} "
+              f"requests, {res['tokens']} tokens in {res['makespan_s']:.2f}s "
+              f"({res['tok_per_s']:.1f} tok/s)")
+        print(f"  resizes {len(e['resize_log'])} "
+              + "".join(f"{a}->{b} " for _, a, b in e["resize_log"])
+              + f"| capacity {e['capacity_seconds']:.2f} slot-s "
+              f"(static {e['static_capacity_seconds']:.2f}, "
+              f"ratio {e['capacity_seconds_ratio']:.2f})")
+        print(f"  sheds {e['sheds']}, degrades {e['degrades']}, "
+              f"classes {e['class_counts']}")
+        for o, t in zip(res["outputs"], res["texts"]):
+            print(f"  rid={o.rid} [{o.finish_reason}] -> {t!r}")
+        return
     if args.engine == "continuous":
         res = serve_continuous(args.arch, prompts, max_new=args.max_new,
                                spec=spec)

@@ -72,6 +72,7 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
                  mux: str = "off", mux_staleness: int = 1, jobs: int = 2,
                  reward: str = "arith", reward_latency: float = 0.0,
                  reward_workers: int = 2, micro_groups: int | None = None,
+                 elastic: bool = False,
                  spec=None, carry: bool = False,
                  return_report: bool = False):
     """GRPO post-training through the phase-multiplexed executors.
@@ -118,7 +119,8 @@ def run_training(arch: str = "internlm2-1.8b", *, reduced: bool = True,
         state, hist, report = run_streaming(
             make_job("job0", seed), max_staleness=cfg.max_staleness,
             reward_workers=cfg.reward_workers,
-            micro_groups=cfg.micro_groups, log_every=log_every)
+            micro_groups=cfg.micro_groups, elastic=elastic,
+            log_every=log_every)
     else:                                   # "coexec"
         if jobs < 1:
             raise ValueError("coexec needs >= 1 jobs")
@@ -222,6 +224,13 @@ def _main():
                     help="stream mode: rewarded groups per train "
                          "micro-step (default: all groups of an iteration "
                          "in one bit-exact full-batch step)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="stream mode: close the loop on the reward "
+                         "permit pool — each iteration reads the runtime's "
+                         "MetricsSnapshot and grows the pool toward "
+                         "--reward-workers when verifiers queue, shrinks "
+                         "it when the pool idles (held permits are never "
+                         "revoked)")
     args = ap.parse_args()
     from repro.serve import RolloutSpec
     spec = RolloutSpec.from_args(args)
@@ -235,7 +244,8 @@ def _main():
                        jobs=args.jobs, reward=args.reward,
                        reward_latency=args.reward_latency,
                        reward_workers=args.reward_workers,
-                       micro_groups=args.micro_groups, return_report=True)
+                       micro_groups=args.micro_groups, elastic=args.elastic,
+                       return_report=True)
     _, hist, report = out
     wall = time.time() - t0
     if args.mux == "coexec":

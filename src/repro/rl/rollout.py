@@ -288,7 +288,7 @@ def generate_continuous(model, params, prompts, rng, sampler: SamplerConfig,
         "behavior_logp": jnp.asarray(behavior_logp),
         "mask": jnp.asarray(mask),
         "token_versions": token_versions,
-        "engine_stats": engine.stats,
+        "engine_stats": engine.metrics(),
     }
 
 

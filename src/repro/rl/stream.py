@@ -97,7 +97,7 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                   reward_workers: int = 2,
                   micro_groups: Optional[int] = None,
                   runtime: Optional[RollMuxRuntime] = None,
-                  log_every: int = 0):
+                  log_every: int = 0, elastic: bool = False):
     """``--mux stream``: group-level rollout -> reward -> train pipelining.
 
     Three planes run concurrently, arbitrated by the runtime's permit
@@ -126,6 +126,16 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
     report's timelines include the third (``reward``) pool, and the
     exported :class:`~repro.core.phase_control.PhaseProfile` records
     carry ``reward_s`` durations for the simulator's reward phase.
+
+    ``elastic=True`` closes the capacity loop on the reward pool: between
+    iterations the runtime's telemetry (``rt.metrics().pool_busy_frac``,
+    the pool's ``waiting`` gauge) retunes the reward permit count within
+    ``[1, reward_workers]`` via :meth:`PermitPool.resize` — queued reward
+    work grows the pool back toward ``reward_workers``, a mostly-idle
+    pool shrinks so its permits stop masking contention elsewhere.  The
+    executor threads are fixed at ``reward_workers``; only the permit
+    bound (what the planner's timelines account) moves.  Each history
+    record then carries the realized ``reward_permits``.
     """
     if max_staleness < 0:
         raise ValueError("max_staleness must be >= 0")
@@ -266,6 +276,13 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                 cv.notify_all()
                 rewarded.pop(k, None)
                 batches.pop(k, None)
+            if elastic:
+                rp = rt.pools["reward"]
+                busy = rt.metrics().pool_busy_frac.get("reward", 0.0)
+                if rp.waiting and rp.capacity < reward_workers:
+                    rp.resize(rp.capacity + 1)
+                elif busy < 0.2 and rp.capacity > 1 and not rp.waiting:
+                    rp.resize(rp.capacity - 1)
             rec = {"step": k, **_merge_recs(recs),
                    "rollout_staleness": k - versions[k],
                    "micro_steps": len(recs),
@@ -274,6 +291,8 @@ def run_streaming(job: GRPOJob, *, max_staleness: int = 1,
                    # distinct versions fed this iteration's batch
                    "carried_rows": carried_rows,
                    "behavior_versions": max(len(vers_seen), 1)}
+            if elastic:
+                rec["reward_permits"] = rt.pools["reward"].capacity
             history.append(rec)
             _log(rec, log_every)
     except BaseException:

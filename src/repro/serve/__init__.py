@@ -28,6 +28,8 @@ invariants.
 """
 from repro.serve.blocks import BlockAllocator, blocks_for
 from repro.serve.disagg import KVTransferHandle, PrefillEngine
+from repro.serve.elastic import (ElasticConfig, ElasticController,
+                                 rederive_slo, resize_engine, resize_router)
 from repro.serve.engine import (Engine, EngineConfig, EngineStats,
                                 SuspendedRequest, run_trace)
 from repro.serve.protocol import ENGINE_ATTRS, EngineProtocol
@@ -47,4 +49,5 @@ __all__ = ["BlockAllocator", "blocks_for", "Engine", "EngineConfig",
            "FIFOPolicy", "DeadlinePolicy", "SLOPolicy", "make_policy",
            "KVTransferHandle", "PrefillEngine", "DisaggConfig",
            "DisaggRouter", "RouterStats", "EngineProtocol", "ENGINE_ATTRS",
-           "RolloutSpec"]
+           "RolloutSpec", "ElasticConfig", "ElasticController",
+           "resize_engine", "resize_router", "rederive_slo"]

@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.telemetry import MetricsSnapshot, warn_legacy_once
 from repro.data import tokenizer as tok
 from repro.models.attention import gather_blocks
 from repro.serve.blocks import blocks_for
@@ -130,6 +131,11 @@ class EngineConfig:
         if self.kv_dtype == "int8" and self.kv_layout != "paged":
             raise ValueError("kv_dtype='int8' requires kv_layout='paged' "
                              "(quantization is per KV block)")
+
+
+# Engine.stats legacy-shim warn-once flag (mutable so tests can reset it;
+# same pattern as rl.rollout's RolloutSpec kwargs migration shim).
+_warned_legacy = [False]
 
 
 @dataclass
@@ -672,7 +678,7 @@ class Engine:
         self._rollback_safe = all(
             k == "index" or k in paged_names
             for k in model.cache_logical_specs())
-        self.stats = EngineStats()
+        self._stats = EngineStats()
         self.clock = None             # optional wall-clock for trace drivers
 
     def _resolve_backend(self, backend: str) -> str:
@@ -788,6 +794,66 @@ class Engine:
     def idle(self) -> bool:
         return not self.queue and not self._active
 
+    # ---- telemetry ---------------------------------------------------------
+    @property
+    def stats(self) -> EngineStats:
+        """Deprecated raw counter record — use :meth:`metrics` (the unified
+        ``core.telemetry.MetricsSnapshot`` API).  Still served (warn-once)
+        so pre-telemetry callers keep working."""
+        warn_legacy_once(
+            _warned_legacy,
+            "Engine.stats is deprecated; read the unified telemetry via "
+            "Engine.metrics() (core.telemetry.MetricsSnapshot)")
+        return self._stats
+
+    @stats.setter
+    def stats(self, value: EngineStats) -> None:
+        warn_legacy_once(
+            _warned_legacy,
+            "Engine.stats is deprecated; read the unified telemetry via "
+            "Engine.metrics() (core.telemetry.MetricsSnapshot)")
+        self._stats = value
+
+    def metrics(self) -> MetricsSnapshot:
+        """One merged :class:`~repro.core.telemetry.MetricsSnapshot` of this
+        engine: queue/slot occupancy gauges, decode counters, KV block
+        occupancy, prefix-sharing counters, suspend/resume traffic.  The
+        elastic controller and the benchmarks consume only this."""
+        s = self._stats
+        snap = MetricsSnapshot(
+            source="engine",
+            queue_depth=len(self.queue),
+            rejected_submits=self.queue.rejected,
+            num_slots=self.config.num_slots,
+            num_active=len(self._active),
+            peak_active=s.peak_active,
+            slot_steps=s.slot_steps,
+            steps=s.steps,
+            decode_time_s=s.decode_time_s,
+            prefills=s.prefills,
+            recorded_tokens=s.recorded_tokens,
+            generated_tokens=s.recorded_tokens,
+            peak_kv_blocks=s.peak_kv_blocks,
+            prefix_hits=s.prefix_hits,
+            prefix_partial_hits=s.prefix_partial_hits,
+            blocks_saved=s.blocks_saved,
+            adoptions=s.adoptions,
+            suspends=s.suspends,
+            resumes=s.resumes,
+            suspended=len(self.suspended),
+            weight_version=self.weight_version)
+        if self.paged:
+            snap.kv_blocks_total = self.slots.alloc.num_blocks
+            snap.kv_blocks_in_use = self.slots.blocks_in_use
+        if self.radix is not None:
+            rs = self.radix.stats
+            snap.prefix_misses = rs["misses"]
+            snap.prefix_evictions = rs["evictions"]
+            snap.pinned_blocks = rs["pinned_blocks"]
+            snap.prefix_snapshots = rs["snapshots"]
+            snap.snapshot_demotions = rs["snapshot_demotions"]
+        return snap
+
     # ---- scheduler ---------------------------------------------------------
     def _match(self, req: Request, *, count: bool = False):
         """Radix lookup for ``req`` (``None`` with sharing off or no match).
@@ -848,10 +914,10 @@ class Engine:
             if req.job_id is not None:
                 live_tokens[req.job_id] = (live_tokens.get(req.job_id, 0)
                                            + req.max_new_tokens)
-        self.stats.peak_active = max(self.stats.peak_active,
+        self._stats.peak_active = max(self._stats.peak_active,
                                      len(self._active))
         if self.paged:
-            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+            self._stats.peak_kv_blocks = max(self._stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
 
     def _admit_one(self, req: Request) -> None:
@@ -900,14 +966,14 @@ class Engine:
         self._slot_version[slot] = self.weight_version
         self._seed_tokens[slot] = 0
         out = RequestOutput(rid=req.rid, prompt=req.prompt,
-                            prefill_step=self.stats.steps,
+                            prefill_step=self._stats.steps,
                             arrival_time=req.arrival_time,
                             priority=req.priority, deadline=req.deadline,
                             job_id=req.job_id,
                             prefix_shared_blocks=shared_blocks)
         self._active[slot] = (req, out)
-        self.stats.prefills += 1
-        self.stats.blocks_saved += shared_blocks
+        self._stats.prefills += 1
+        self._stats.blocks_saved += shared_blocks
 
     def _register_prefix(self, req: Request, slot: int, logits, one) -> None:
         """Record the donor's full prompt blocks + admit snapshot."""
@@ -943,7 +1009,7 @@ class Engine:
             jnp.asarray(tail_pid, jnp.int32), jnp.asarray(slot, jnp.int32),
             self._last_logits, self._alive, self._remaining, budget,
             jnp.asarray(req.prompt_len, jnp.int32))
-        self.stats.prefix_hits += 1
+        self._stats.prefix_hits += 1
         return slot
 
     def _admit_shared_prefix(self, req: Request, m, prompt_dev,
@@ -969,7 +1035,7 @@ class Engine:
             jnp.asarray(slot, jnp.int32), self._last_logits, self._alive,
             self._remaining, budget)
         self._register_prefix(req, slot, logits, one)
-        self.stats.prefix_partial_hits += 1
+        self._stats.prefix_partial_hits += 1
         return slot
 
     # ---- disaggregated-prefill adoption ------------------------------------
@@ -1026,20 +1092,20 @@ class Engine:
                 # this is the episode's whole history, so sibling
                 # rollouts and turn k+1 match turn k's blocks
                 self._register_prefix(req, slot, logits, one)
-            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+            self._stats.peak_kv_blocks = max(self._stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
         self._host_index[slot] = req.prompt_len
         self._slot_version[slot] = self.weight_version
         self._seed_tokens[slot] = 0
         out = RequestOutput(rid=req.rid, prompt=req.prompt,
-                            prefill_step=self.stats.steps,
+                            prefill_step=self._stats.steps,
                             arrival_time=req.arrival_time,
                             priority=req.priority, deadline=req.deadline,
                             job_id=req.job_id)
         self._active[slot] = (req, out)
-        self.stats.prefills += 1
-        self.stats.adoptions += 1
-        self.stats.peak_active = max(self.stats.peak_active,
+        self._stats.prefills += 1
+        self._stats.adoptions += 1
+        self._stats.peak_active = max(self._stats.peak_active,
                                      len(self._active))
         return slot
 
@@ -1047,7 +1113,7 @@ class Engine:
         req, out = self._active[slot]
         out.finish_reason = ("eos" if out.tokens and
                              out.tokens[-1] == self.config.eos_id else "length")
-        out.finish_step = self.stats.steps
+        out.finish_step = self._stats.steps
         if self.clock is not None:
             out.finish_time = self.clock()
         self.finished[req.rid] = out
@@ -1099,7 +1165,7 @@ class Engine:
             # (allocation stays within each request's admit-time reservation)
             for slot in self._active:
                 self.slots.ensure(slot, self._host_index[slot] + K - 1)
-            self.stats.peak_kv_blocks = max(self.stats.peak_kv_blocks,
+            self._stats.peak_kv_blocks = max(self._stats.peak_kv_blocks,
                                             self.slots.blocks_in_use)
             (self._last_logits, self.slots.cache, self._alive,
              self._remaining), out = self._block(
@@ -1116,15 +1182,15 @@ class Engine:
         toks, logps, recs, alive, remaining = jax.device_get(
             (*out, self._alive, self._remaining))
         t_decode = time.perf_counter() - t_decode
-        self.stats.decode_time_s += t_decode
+        self._stats.decode_time_s += t_decode
         # engine-measured service time straight into the admission policy:
         # K decode steps just took t_decode (every live slot advanced one
         # token per step), so SLO deadline estimates track the hardware
         # actually serving — no finish-time heuristics involved
         self.policy.observe_step(t_decode, K)
-        self.stats.steps += K
-        self.stats.blocks += 1
-        self.stats.slot_steps += K * self.config.num_slots
+        self._stats.steps += K
+        self._stats.blocks += 1
+        self._stats.slot_steps += K * self.config.num_slots
         for slot in list(self._active):
             req, o = self._active[slot]
             rec_col = recs[:, slot]
@@ -1153,7 +1219,7 @@ class Engine:
                     [self._slot_version[slot]]
                     + [self.weight_version] * (keep - 1))
                 self._slot_version[slot] = self.weight_version
-                self.stats.recorded_tokens += keep
+                self._stats.recorded_tokens += keep
             if stop_at is not None:
                 # tool boundary before EOS/budget: suspend, free the slot.
                 # Boundary logits are only live when the trigger was the
@@ -1247,7 +1313,7 @@ class Engine:
                 slot_leaves=dict(slot_leaves), **kwargs)
         self.slots.release(slot)
         self.suspended[req.rid] = sreq
-        self.stats.suspends += 1
+        self._stats.suspends += 1
         return sreq
 
     def _materialize(self, sreq: SuspendedRequest) -> dict:
@@ -1404,7 +1470,7 @@ class Engine:
             out.prefix_shared_blocks = prev.prefix_shared_blocks
             self._seed_tokens[slot] = len(out.tokens)
         sreq.release()
-        self.stats.resumes += 1
+        self._stats.resumes += 1
         return slot
 
     def reset(self, params=None, rng: Optional[jax.Array] = None, *,
@@ -1509,7 +1575,7 @@ class Engine:
             "queue": list(self.queue._q),
             "finished": dict(self.finished),
             "unharvested_rids": [o.rid for o in self._unharvested],
-            "stats": self.stats,
+            "stats": self._stats,
             "slots": slots,
             "weight_version": self.weight_version,
             "slot_version": list(self._slot_version),
@@ -1551,7 +1617,7 @@ class Engine:
         self._unharvested = [self.finished[r]
                              for r in host.get("unharvested_rids", ())
                              if r in self.finished]
-        self.stats = host["stats"]
+        self._stats = host["stats"]
         self.weight_version = host.get("weight_version", 0)
         self._slot_version = list(host.get(
             "slot_version", [0] * self.config.num_slots))
@@ -1596,7 +1662,7 @@ class Engine:
 
 
 def run_trace(engine: Engine, requests: list[Request],
-              *, realtime: bool = True) -> dict:
+              *, realtime: bool = True, controller=None) -> dict:
     """Replay a timed arrival trace through ``engine`` against the wall
     clock: each request is submitted once ``arrival_time`` (seconds from
     trace start) has elapsed, and per-request first-token / finish
@@ -1605,16 +1671,33 @@ def run_trace(engine: Engine, requests: list[Request],
     pending request is submitted immediately and its ``arrival_time`` is
     rebased to the current clock so latency/TTFT stay well-defined.
     Returns a report with latency, throughput and slot-utilization
-    aggregates (the benchmark's raw material)."""
+    aggregates (the benchmark's raw material).
+
+    ``controller`` (a ``serve.elastic.ElasticController``) closes the
+    capacity loop: every arrival passes through its admission gate (which
+    may shed it or clamp its decode budget), and between steps the
+    controller may replace the engine with a resized one (live work
+    carried over).  The returned report then carries an ``"elastic"``
+    section — capacity-seconds, sheds/degrades, resize history."""
     pending = sorted(requests, key=lambda r: (r.arrival_time, r.rid))
     t0 = time.perf_counter()
     engine.clock = lambda: time.perf_counter() - t0
+    if controller is not None:
+        controller.attach(engine, engine.clock())
     while pending or not engine.idle:
         now = engine.clock()
         while pending and pending[0].arrival_time <= now:
-            if not engine.submit(pending[0]):
+            req = pending[0]
+            if controller is not None:
+                verdict, req = controller.admit(req, now, engine)
+                if verdict == "shed":
+                    pending.pop(0)          # recorded by the controller —
+                    continue                # shed, never silently dropped
+            if not engine.submit(req):
                 break                       # queue full: defer, retry after
             pending.pop(0)                  # the engine drains a bit
+        if controller is not None:
+            engine = controller.maybe_resize(engine, engine.clock())
         progressed = engine.step()
         if not progressed and pending:
             if realtime:
@@ -1627,6 +1710,12 @@ def run_trace(engine: Engine, requests: list[Request],
             else:
                 nxt = pending[0]
                 nxt.arrival_time = engine.clock()
+                if controller is not None:
+                    verdict, nxt = controller.admit(nxt, engine.clock(),
+                                                    engine)
+                    if verdict == "shed":
+                        pending.pop(0)
+                        continue
                 if engine.submit(nxt):
                     pending.pop(0)
     makespan = engine.clock()
@@ -1643,8 +1732,8 @@ def run_trace(engine: Engine, requests: list[Request],
         "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
         "latency_p95_s": float(np.quantile(lat, 0.95)) if len(lat) else 0.0,
         "ttft_mean_s": float(ttft.mean()) if len(ttft) else 0.0,
-        "slot_utilization": engine.stats.slot_utilization,
-        "peak_active": engine.stats.peak_active,
+        "slot_utilization": engine._stats.slot_utilization,
+        "peak_active": engine._stats.peak_active,
         "rejected_submits": engine.queue.rejected,
     }
     with_dl = [o for o in outs if o.deadline is not None]
@@ -1656,11 +1745,13 @@ def run_trace(engine: Engine, requests: list[Request],
     if engine.paged:
         total = engine.slots.alloc.num_blocks
         report["kv_blocks_total"] = total
-        report["peak_kv_blocks"] = engine.stats.peak_kv_blocks
+        report["peak_kv_blocks"] = engine._stats.peak_kv_blocks
         report["kv_block_utilization"] = (
-            engine.stats.peak_kv_blocks / max(total, 1))
+            engine._stats.peak_kv_blocks / max(total, 1))
     if engine.radix is not None:
         report["prefix"] = dict(engine.radix.stats,
-                                blocks_saved=engine.stats.blocks_saved,
-                                hit_admits=engine.stats.prefix_hits)
+                                blocks_saved=engine._stats.blocks_saved,
+                                hit_admits=engine._stats.prefix_hits)
+    if controller is not None:
+        report["elastic"] = controller.summary(makespan)
     return report

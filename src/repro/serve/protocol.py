@@ -48,6 +48,8 @@ class EngineProtocol(Protocol):
 
     def step(self) -> int: ...
 
+    def metrics(self): ...    # -> core.telemetry.MetricsSnapshot
+
     def run(self, *, max_ticks: Optional[int] = None): ...
 
     def harvest(self) -> list: ...

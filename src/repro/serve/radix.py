@@ -114,6 +114,7 @@ class BoundarySnapshot:
     tail: dict
     slot_leaves: dict
     hits: int = 0
+    last_used: int = 0             # LRU tick of registration / last hit
 
 
 @dataclass
@@ -159,6 +160,7 @@ class RadixPrefixIndex:
         self.partial_hits = 0          # block-sharing admissions
         self.misses = 0                # admissions that found nothing
         self.evictions = 0             # nodes evicted under pressure
+        self.snapshot_demotions = 0    # snapshots dropped by TTL demotion
         self.eviction_log: list[int] = []   # node ids, eviction order
         self._tick = 0                 # LRU clock
         self._next_id = 0
@@ -246,6 +248,7 @@ class RadixPrefixIndex:
             node.last_used = t
         if m.snapshot is not None:
             m.snapshot.hits += 1
+            m.snapshot.last_used = t
 
     # ---- registration ------------------------------------------------------
     def register(self, req, block_ids, *, logits, tail,
@@ -279,7 +282,8 @@ class RadixPrefixIndex:
             node.snapshots[tail_key] = BoundarySnapshot(
                 sid=self._fresh_sid(),
                 tail_tokens=tokens[len(block_ids) * bs:].copy(),
-                logits=logits, tail=tail, slot_leaves=slot_leaves)
+                logits=logits, tail=tail, slot_leaves=slot_leaves,
+                last_used=t)
             self._n_snapshots += 1
         return node
 
@@ -331,6 +335,31 @@ class RadixPrefixIndex:
                 heapq.heappush(heap, (parent.last_used, parent.node_id))
         return self.alloc.can_reserve(n_blocks)
 
+    def demote_stale(self, ttl: int) -> int:
+        """Age-based snapshot demotion: drop every boundary snapshot not
+        touched within the last ``ttl`` LRU ticks (``register``/``touch``
+        calls).  Long-lived servers otherwise hold snapshot device arrays
+        until block-pressure eviction or a weight-sync flush — boundary
+        snapshots are *not* allocator blocks, so ``evict_for`` pressure
+        never reclaims a snapshot whose node the tree keeps.  The tree
+        structure (and its block pins) is untouched: a demoted prompt
+        still block-shares, it just re-prefills its tail on the next
+        exact repeat.  Returns the number demoted (also accumulated in
+        ``snapshot_demotions`` / the ``stats`` dict)."""
+        if ttl < 0:
+            raise ValueError("ttl must be >= 0")
+        horizon = self._tick - ttl
+        n = 0
+        for node in self._all_nodes():
+            stale = [k for k, s in node.snapshots.items()
+                     if s.last_used < horizon]
+            for k in stale:
+                del node.snapshots[k]
+            n += len(stale)
+        self._n_snapshots -= n
+        self.snapshot_demotions += n
+        return n
+
     def flush(self) -> int:
         """Drop the whole tree (weight sync: every cached prefill is
         stale), unpinning every node's block.  Not counted as
@@ -353,10 +382,12 @@ class RadixPrefixIndex:
     def stats(self) -> dict:
         return {"nodes": len(self.nodes),
                 "entries": self._n_snapshots,
+                "snapshots": self._n_snapshots,
                 "hits": self.hits,
                 "partial_hits": self.partial_hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "snapshot_demotions": self.snapshot_demotions,
                 "pinned_blocks": len(self.nodes)}
 
     # ---- checkpoint --------------------------------------------------------
@@ -380,13 +411,14 @@ class RadixPrefixIndex:
                       for n in self.nodes.values()],
             "snapshots": [{"sid": s.sid, "node": n.node_id,
                            "tail_tokens": s.tail_tokens.copy(),
-                           "hits": s.hits}
+                           "hits": s.hits, "last_used": s.last_used}
                           for n in self._all_nodes()
                           for s in n.snapshots.values()],
             "counters": {"tick": self._tick, "hits": self.hits,
                          "partial_hits": self.partial_hits,
                          "misses": self.misses,
                          "evictions": self.evictions,
+                         "demotions": self.snapshot_demotions,
                          "next_id": self._next_id,
                          "next_sid": self._next_sid},
         }
@@ -431,7 +463,7 @@ class RadixPrefixIndex:
             node.snapshots[tt.tobytes()] = BoundarySnapshot(
                 sid=s["sid"], tail_tokens=tt, logits=d["logits"],
                 tail=d["tail"], slot_leaves=d["slot_leaves"],
-                hits=s["hits"])
+                hits=s["hits"], last_used=s.get("last_used", 0))
             self._n_snapshots += 1
         c = host["counters"]
         self._tick = c["tick"]
@@ -439,5 +471,6 @@ class RadixPrefixIndex:
         self.partial_hits = c["partial_hits"]
         self.misses = c["misses"]
         self.evictions = c["evictions"]
+        self.snapshot_demotions = c.get("demotions", 0)
         self._next_id = c["next_id"]
         self._next_sid = c["next_sid"]

@@ -45,9 +45,14 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.telemetry import MetricsSnapshot, warn_legacy_once
 from repro.data import tokenizer as tok
 from repro.serve.disagg import KVTransferHandle, PrefillEngine
 from repro.serve.engine import Engine, EngineConfig
+from repro.serve.sched import make_policy
+
+# DisaggRouter.stats legacy-shim warn-once flag (mutable so tests reset it)
+_warned_legacy = [False]
 
 
 @dataclass(frozen=True)
@@ -131,7 +136,7 @@ class RouterStats:
     def transfer_overhead_frac(self) -> float:
         """Transfer wall time as a fraction of transfer + decode time —
         guarded against the zero-decode-steps trace (nothing served)."""
-        busy = self.transfer_time_s + self._router.decode.stats.decode_time_s
+        busy = self.transfer_time_s + self._router.decode._stats.decode_time_s
         if busy <= 0.0:
             return 0.0
         return self.transfer_time_s / busy
@@ -139,31 +144,31 @@ class RouterStats:
     # -- decode-side delegation (what run_trace reads) ----------------------
     @property
     def steps(self):
-        return self._router.decode.stats.steps
+        return self._router.decode._stats.steps
 
     @property
     def decode_time_s(self):
-        return self._router.decode.stats.decode_time_s
+        return self._router.decode._stats.decode_time_s
 
     @property
     def time_per_token(self):
-        return self._router.decode.stats.time_per_token
+        return self._router.decode._stats.time_per_token
 
     @property
     def slot_utilization(self):
-        return self._router.decode.stats.slot_utilization
+        return self._router.decode._stats.slot_utilization
 
     @property
     def peak_active(self):
-        return self._router.decode.stats.peak_active
+        return self._router.decode._stats.peak_active
 
     @property
     def peak_kv_blocks(self):
-        return self._router.decode.stats.peak_kv_blocks
+        return self._router.decode._stats.peak_kv_blocks
 
     @property
     def recorded_tokens(self):
-        return self._router.decode.stats.recorded_tokens
+        return self._router.decode._stats.recorded_tokens
 
     # -- prefill-side delegation (summed across prefill engines) ------------
     @property
@@ -203,20 +208,64 @@ class DisaggRouter:
             raise ValueError(
                 f"kv_routing must be 'kv_aware' or 'queue', "
                 f"got {config.kv_routing!r}")
-        # a caller-supplied policy object carries per-group state, so it
-        # can only drive one queue; extra engines build their own from
-        # the config's policy name
+        # ONE policy object drives every prefill queue: per-job token
+        # budgets and the SLO service-time estimate are router-global, and
+        # the deadline policies prune per-queue (keyed on queue identity)
+        # so multi-queue sharing is safe.  A caller-supplied policy is
+        # shared the same way.
+        shared_policy = policy if policy is not None \
+            else make_policy(config.sched)
         self.prefills = [
             PrefillEngine(model, params, config.prefill_config(),
-                          policy=policy if i == 0 else None)
-            for i in range(config.prefill_engines)]
+                          policy=shared_policy)
+            for _ in range(config.prefill_engines)]
         self.decode = Engine(model, params, config.decode_config(), rng=rng)
         self.pending_transfer: deque[KVTransferHandle] = deque()
         self.runtime = runtime
         self.job_id = job_id
-        self.stats = RouterStats(self)
+        self._stats = RouterStats(self)
         self.transfer_timeline: list[tuple[str, float, float]] = []
         self._clock = None
+
+    # ---- telemetry ---------------------------------------------------------
+    @property
+    def stats(self) -> RouterStats:
+        """Deprecated stats facade — use :meth:`metrics` (the unified
+        ``core.telemetry.MetricsSnapshot`` API).  Warn-once shim."""
+        warn_legacy_once(
+            _warned_legacy,
+            "DisaggRouter.stats is deprecated; read the unified telemetry "
+            "via DisaggRouter.metrics() (core.telemetry.MetricsSnapshot)")
+        return self._stats
+
+    def metrics(self) -> MetricsSnapshot:
+        """One merged :class:`~repro.core.telemetry.MetricsSnapshot` across
+        both planes: the decode engine's snapshot, prefill-side counters
+        summed over all prefill engines, and the router's own transfer
+        counters + backlog gauge."""
+        snap = self.decode.metrics()
+        snap.source = "router"
+        for pe in self.prefills:
+            s = pe.stats                    # PrefillEngine: plain record
+            snap.prefills += s.prefills
+            snap.prefix_hits += s.prefix_hits
+            snap.prefix_partial_hits += s.prefix_partial_hits
+            snap.blocks_saved += s.blocks_saved
+            snap.queue_depth += len(pe.queue)
+            snap.rejected_submits += pe.queue.rejected
+            if pe.radix is not None:
+                rs = pe.radix.stats
+                snap.prefix_misses += rs["misses"]
+                snap.prefix_evictions += rs["evictions"]
+                snap.pinned_blocks += rs["pinned_blocks"]
+                snap.prefix_snapshots += rs["snapshots"]
+                snap.snapshot_demotions += rs["snapshot_demotions"]
+        snap.transfers = self._stats.transfers
+        snap.transfer_time_s = self._stats.transfer_time_s
+        snap.transferred_blocks = self._stats.transferred_blocks
+        snap.transfer_backlog = len(self.pending_transfer)
+        snap.kv_routed = self._stats.kv_routed
+        return snap
 
     # ---- Engine surface ----------------------------------------------------
     @property
@@ -314,7 +363,7 @@ class DisaggRouter:
             scored.append((-score, load, i, pe))
         scored.sort(key=lambda s: s[:3])
         if -scored[0][0] > 0:
-            self.stats.kv_routed += 1
+            self._stats.kv_routed += 1
         return [s[3] for s in scored]
 
     # ---- scheduler ---------------------------------------------------------
@@ -364,9 +413,9 @@ class DisaggRouter:
         dt = time.perf_counter() - t0
         now = self._clock() if self._clock is not None else t0 + dt
         self.transfer_timeline.append((who, now - dt, now))
-        self.stats.transfers += 1
-        self.stats.transfer_time_s += dt
-        self.stats.transferred_blocks += n_blocks
+        self._stats.transfers += 1
+        self._stats.transfer_time_s += dt
+        self._stats.transferred_blocks += n_blocks
 
     def run(self, *, max_ticks: Optional[int] = None):
         """Drive until queue, transfer queue and decode pool are empty."""
@@ -435,8 +484,9 @@ class DisaggRouter:
             self.prefill.queue._q.appendleft(req)
         state = self.decode.export_state()
         # the snapshot flattens every engine's waiting set into one list;
-        # import funnels it through engine 0 and the KV-aware routing
-        # re-spreads future submissions
+        # import re-routes each request through _route (kv_aware when
+        # enabled), so the restored load spreads across all prefill
+        # engines instead of concentrating in engine 0
         state["prefill_queue"] = copy.deepcopy(
             [r for pe in self.prefills for r in pe.queue._q])
         return state
@@ -454,8 +504,23 @@ class DisaggRouter:
                 pe.slots.alloc.assert_clean(
                     context="DisaggRouter.import_state")
             pe.queue._q.clear()
-        self.prefill.queue._q.extend(copy.deepcopy(waiting))
+        self._requeue(copy.deepcopy(waiting))
         self.decode.import_state(state)
+
+    def _requeue(self, reqs) -> None:
+        """Spread restored / carried waiting requests back over the prefill
+        engines through the same :meth:`_route` scoring live submissions
+        use (kv_aware when enabled; right after a flush every score is 0,
+        so this degenerates to load balancing).  Restored requests are
+        never dropped: when every queue refuses (backpressure), the
+        best-ranked engine takes it on its raw deque."""
+        for req in reqs:
+            order = self._route(req)
+            for pe in order:
+                if pe.queue.push(req):
+                    break
+            else:
+                order[0].queue._q.append(req)
 
     def drop_pending(self) -> int:
         """Release every handle still waiting for adoption (mid-flight
@@ -498,4 +563,4 @@ class DisaggRouter:
             pe.queue._q.clear()
             pe.reset(params)
         self.decode.reset(params, rng, carry_live=True)
-        self.prefill.queue._q.extend(requeue + held)
+        self._requeue(requeue + held)

@@ -125,18 +125,29 @@ class DeadlinePolicy(SchedulerPolicy):
         self.token_budgets = dict(token_budgets or {})
         self._seq: dict[int, int] = {}      # rid -> arrival sequence number
         self._skips: dict[int, int] = {}    # rid -> times overtaken by newer
+        self._owner: dict[int, int] = {}    # rid -> queue identity
         self._next_seq = 0
 
     # -- bookkeeping --------------------------------------------------------
     def _note(self, waiting: Sequence[Request]) -> None:
+        # One policy object may drive several queues (the disagg router
+        # shares it across all prefill engines so per-job budgets and the
+        # SLO service-time estimate are global).  Rids are pruned per
+        # *queue* — keyed on the queue object's identity — so a pick on
+        # engine A never drops the arrival seqs / skip counts of requests
+        # still waiting on engine B.
+        qid = id(waiting)
         for r in waiting:
             if r.rid not in self._seq:
                 self._seq[r.rid] = self._next_seq
                 self._next_seq += 1
+            self._owner[r.rid] = qid
         live = {r.rid for r in waiting}
-        for rid in [rid for rid in self._seq if rid not in live]:
+        for rid in [rid for rid, owner in self._owner.items()
+                    if owner == qid and rid not in live]:
             self._seq.pop(rid, None)
             self._skips.pop(rid, None)
+            self._owner.pop(rid, None)
 
     def effective_deadline(self, req: Request, now: float) -> float:
         return _INF if req.deadline is None else req.deadline
@@ -204,6 +215,7 @@ class DeadlinePolicy(SchedulerPolicy):
         stale skip count could make it an instant barrier."""
         self._seq.clear()
         self._skips.clear()
+        self._owner.clear()
 
 
 class SLOPolicy(DeadlinePolicy):
